@@ -1,0 +1,71 @@
+"""Wall-clock microbenchmarks of the TiM matmul implementations (CPU).
+
+Times the jitted XLA S/T path, the dense bf16 reference, and (at small
+sizes) the Pallas kernel in interpret mode.  On this CPU container the
+numbers are *relative* sanity checks — the TPU story is the roofline
+analysis — but they verify the int8 S/T decomposition is not slower
+than dense fp32 even on CPU, and they feed run.py's us_per_call CSV.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ternary import quantize_act_ternary
+from repro.core.weights import ternarize_weight
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=20, warmup=3) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench() -> List[Dict[str, Any]]:
+    rng = np.random.default_rng(0)
+    rows = []
+    cases = [
+        ("paper_tile_16x256", 16, 256, 256),
+        ("mid_256x1024x1024", 256, 1024, 1024),
+        ("large_512x4096x4096", 512, 4096, 4096),
+    ]
+    for name, m, k, n in cases:
+        w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        qx, sx = quantize_act_ternary(x)
+        tw = ternarize_weight(w, "symmetric", per_channel=True)
+        twp = ternarize_weight(w, "symmetric", per_channel=True, pack=True)
+
+        dense = jax.jit(lambda a, b: (a.astype(jnp.bfloat16)
+                                      @ b.astype(jnp.bfloat16)))
+        t_dense = _time(dense, x, w)
+        tim_xla = jax.jit(lambda q, s: ops.tim_matmul(q, tw, s, impl="xla"))
+        t_xla = _time(tim_xla, qx, sx)
+        tim_packed = jax.jit(
+            lambda q, s: ops.tim_matmul(q, twp, s, impl="xla"))
+        t_packed = _time(tim_packed, qx, sx)
+        row = {
+            "case": name,
+            "dense_bf16_us": round(t_dense, 1),
+            "tim_xla_int8_us": round(t_xla, 1),
+            "tim_xla_packed_us": round(t_packed, 1),
+            "weight_bytes_int8": tw.nbytes_hbm,
+            "weight_bytes_packed": twp.nbytes_hbm,
+        }
+        if m <= 64:  # interpret-mode pallas is slow; only tiny case
+            t_pl = _time(lambda q, s: ops.tim_matmul(q, tw, s,
+                                                     impl="pallas"),
+                         qx, sx, iters=3, warmup=1)
+            row["tim_pallas_interpret_us"] = round(t_pl, 1)
+        rows.append(row)
+    return rows

@@ -1,0 +1,179 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x
+mesh) from the dry-run artifacts.
+
+Hardware constants (assignment): TPU v5e-class chip, 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Term definitions (all PER DEVICE, seconds):
+  compute    = HLO_dot_FLOPs_per_device / 197e12
+               (loop-aware count from launch/hlo_analysis; the raw XLA
+               cost_analysis undercounts scan bodies and is reported
+               alongside for reference)
+  memory     = (argument + output bytes per device) / 819e9
+               (compiled memory_analysis; a traffic *lower bound* —
+               exact for decode where weights+cache stream once, under-
+               estimates train activation recirculation)
+  collective = per-device wire bytes (ring-model census over the
+               partitioned HLO, loop-aware) / 50e9
+
+MODEL_FLOPS = 6*N(active)*tokens for train, 2*N(active)*tokens for
+inference — the useful-work yardstick; MODEL/HLO ratio exposes remat
+and redundant compute.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_PARAM_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def arch_params(arch: str) -> Dict[str, float]:
+    """Analytic total / active parameter counts (no device init)."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    import jax
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+
+    cfg = get_config(arch)
+    sds = jax.eval_shape(lambda k: tfm.init(cfg, k),
+                         jax.random.PRNGKey(0))
+    total = sum(int(l.size) for l in jax.tree_util.tree_leaves(sds))
+    active = total
+    if cfg.moe is not None:
+        # inactive share of expert weights
+        import numpy as np
+        layers = sds["layers"]
+        expert_elems = 0
+        for j, spec in enumerate(cfg.layout):
+            if spec.ffn == "moe":
+                blk = layers[f"b{j}"]["ffn"]
+                for k in ("gate", "up", "down"):
+                    if k in blk:
+                        expert_elems += int(blk[k].size)
+        frac = cfg.moe.top_k / cfg.moe.num_experts
+        active = total - expert_elems * (1 - frac)
+    _PARAM_CACHE[arch] = {"total": float(total), "active": float(active)}
+    return _PARAM_CACHE[arch]
+
+
+def model_flops(arch: str, shape: Dict[str, Any], kind: str) -> float:
+    from repro.configs import SHAPES
+    sc = SHAPES[shape] if isinstance(shape, str) else shape
+    p = arch_params(arch)
+    n_act = p["active"]
+    if sc.kind == "train":
+        tokens = sc.seq_len * sc.global_batch
+        return 6.0 * n_act * tokens
+    if sc.kind == "prefill":
+        tokens = sc.seq_len * sc.global_batch
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * sc.global_batch
+
+
+def roofline_row(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if cell.get("status") != "ok":
+        return None
+    n_dev = cell["n_devices"]
+    hlo = cell.get("hlo", {})
+    mem = cell.get("memory", {})
+    flops_dev = hlo.get("dot_flops", 0.0)
+    mem_bytes = mem.get("argument_size_in_bytes", 0) + \
+        mem.get("output_size_in_bytes", 0)
+    wire = hlo.get("total_wire_bytes", 0.0)
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = mem_bytes / HBM_BW
+    t_collective = wire / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+
+    mf = model_flops(cell["arch"], cell["shape"], cell["shape"])
+    mf_dev = mf / n_dev
+    useful_frac = mf_dev / flops_dev if flops_dev else 0.0
+    # roofline fraction: useful model FLOP/s achieved at the bound vs peak
+    ach_flops = mf_dev / step_time if step_time else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "mesh": cell["mesh"], "variant": cell.get("variant", "baseline"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "model_flops_per_dev": mf_dev,
+        "hlo_flops_per_dev": flops_dev,
+        "model_over_hlo": useful_frac,
+        "roofline_fraction": ach_flops / PEAK_FLOPS,
+        "hbm_gb_per_dev": mem_bytes / 2**30,
+        "temp_gb_per_dev": mem.get("temp_size_in_bytes", 0) / 2**30,
+        "wire_mb_per_dev": wire / 2**20,
+    }
+
+
+def load_report(path: str) -> List[Dict[str, Any]]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_table(paths=("dryrun_single.json",)) -> List[Dict[str, Any]]:
+    rows = []
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        for cell in load_report(p):
+            r = roofline_row(cell)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def advice(row: Dict[str, Any]) -> str:
+    """One sentence on what would move the dominant term down."""
+    d = row["dominant"]
+    if d == "compute":
+        if row["model_over_hlo"] < 0.5:
+            return ("compute-bound with low useful fraction: cut remat "
+                    "recompute / fuse epilogues")
+        return ("compute-bound near useful peak: only lower-precision "
+                "matmuls (int8 ternary path) move this")
+    if d == "memory":
+        return ("memory-bound: shrink resident bytes — 2-bit packed "
+                "ternary weights cut weight traffic 4x vs int8")
+    return ("collective-bound: reshard to remove the largest gathers "
+            "(weight-gather -> 2D sharding, or overlap with compute)")
+
+
+def print_table(rows) -> None:
+    hdr = (f"{'arch':24s}{'shape':12s}{'mesh':10s}{'var':9s}"
+           f"{'t_comp':>9s}{'t_mem':>9s}{'t_coll':>9s} {'dom':10s}"
+           f"{'MF/HLO':>7s}{'roofl%':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:24s}{r['shape']:12s}{r['mesh']:10s}"
+              f"{r['variant'][:8]:9s}"
+              f"{r['t_compute_s']:>9.2e}{r['t_memory_s']:>9.2e}"
+              f"{r['t_collective_s']:>9.2e} {r['dominant']:10s}"
+              f"{r['model_over_hlo']:>7.2f}"
+              f"{100*r['roofline_fraction']:>6.1f}%")
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reports", nargs="*",
+                    default=["dryrun_single.json", "dryrun_multi.json"])
+    args = ap.parse_args()
+    rows = roofline_table(args.reports)
+    print_table(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Reproduce the paper's evaluation (Tables IV/V, Figs 12-18) from the
+calibrated architectural simulator, with our-vs-paper deltas.
+
+Run:  PYTHONPATH=src python examples/paper_repro.py
+"""
+from benchmarks import paper_tables
+
+
+def main():
+    for fn in paper_tables.ALL:
+        name, rows = fn()
+        print(f"\n=== {name} ===")
+        for r in rows:
+            print("  " + ", ".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — TiM-DNN: ternary in-memory acceleration, rebuilt as a JAX framework."""
+__version__ = "1.0.0"

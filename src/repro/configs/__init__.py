@@ -1,0 +1,34 @@
+"""Config registry: the 10 assigned architectures + smoke variants."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (ArchConfig, BlockSpec, ShapeConfig, SHAPES,
+                                cell_supported)
+
+_MODULES = {
+    "granite-34b": "granite_34b",
+    "chatglm3-6b": "chatglm3_6b",
+    "llama3-405b": "llama3_405b",
+    "yi-34b": "yi_34b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "hubert-xlarge": "hubert_xlarge",
+    "mamba2-1.3b": "mamba2_1_3b",
+}
+
+ARCH_NAMES: List[str] = list(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ArchConfig]:
+    return {n: get_config(n, smoke) for n in ARCH_NAMES}

@@ -1,0 +1,124 @@
+"""Architecture configuration schema + input-shape registry.
+
+One ArchConfig fully describes a model in the assigned pool: the decoder
+layout is expressed as a repeating *period* of blocks, each block a
+(mixer, ffn) pair — this is what lets a single scan-over-periods model
+cover dense, MoE, hybrid (jamba), VLM, audio-encoder and pure-SSM
+families with one code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.nn.linear import TernaryPolicy
+from repro.nn.moe import MoEConfig
+from repro.nn.ssm import MambaConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One block in the repeating period."""
+
+    mixer: str          # 'attn' | 'mamba' | 'cross_attn'
+    ffn: Optional[str]  # 'mlp' | 'moe' | None
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | hybrid | vlm | audio | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    layout: Tuple[BlockSpec, ...] = (BlockSpec("attn", "mlp"),)
+
+    rope_variant: str = "standard"      # standard | half | none
+    rope_theta: float = 500000.0
+    mlp_kind: str = "swiglu"            # swiglu | gelu
+    norm: str = "rms"                   # rms | layer
+    encoder_only: bool = False
+    tie_embeddings: bool = False
+    vocab_round_to: int = 128           # pad embedding rows for sharding
+
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+
+    # modality frontends (stubs per assignment spec)
+    frontend_dim: Optional[int] = None      # audio: frame feature dim
+    n_media_tokens: int = 0                 # vlm: patch tokens per sample
+    media_dim: int = 0                      # vlm: patch embedding dim
+
+    ternary: TernaryPolicy = TernaryPolicy()
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: str = "full"                  # none | full | dots
+    attn_chunk_kv: int = 1024
+    kv_cache_dtype: str = "bfloat16"     # bfloat16 | int8 (quantized cache)
+
+    # which shapes this arch supports (dry-run skip logic)
+    supports_decode: bool = True
+    sub_quadratic: bool = False          # can run long_500k
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.layout) == 0, (
+            f"{self.name}: n_layers {self.n_layers} not divisible by "
+            f"period {len(self.layout)}")
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.layout)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        r = self.vocab_round_to
+        return ((self.vocab_size + r - 1) // r) * r
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned (seq_len, global_batch) input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode | long_decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "long_decode"),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Dry-run skip logic per the assignment rules."""
+    if shape.kind in ("decode", "long_decode") and not cfg.supports_decode:
+        return False, "encoder-only arch has no decode step"
+    if shape.kind == "long_decode" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k context is "
+                       "quadratic — skipped per assignment note")
+    return True, ""

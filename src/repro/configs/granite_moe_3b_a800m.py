@@ -1,0 +1,30 @@
+"""granite-moe-3b-a800m [moe]: 32L d_model=1536 24H (GQA kv=8) d_ff=512
+vocab=49155, MoE 40e top-8.  [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+
+40 experts do not divide model=16; sharding rules switch to TP inside
+the (tiny, d_ff=512) experts instead of EP — see DESIGN.md §4.
+"""
+from repro.configs.base import ArchConfig, BlockSpec
+from repro.nn.moe import MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    layout=(BlockSpec("attn", "moe"),),
+    moe=MoEConfig(num_experts=40, top_k=8, d_ff=512),
+    rope_theta=10000.0,
+    supports_decode=True,
+    sub_quadratic=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="granite-moe-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=64,
+    vocab_size=256, remat="none",
+    moe=MoEConfig(num_experts=5, top_k=2, d_ff=64, capacity_factor=5.0))

@@ -1,0 +1,35 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H (kv=16, full MHA)
+d_ff=5120 vocab=504 — encoder-only, wav2vec2-style backbone.
+[arXiv:2106.07447; unverified]
+
+The modality frontend (conv feature extractor) is a STUB per the
+assignment: input_specs() provides precomputed frame features (B, T,
+512) that a linear frontend projects to d_model.  Training objective is
+masked-unit prediction over the 504 cluster vocabulary (implemented as
+framewise CE with a mask).  Encoder-only: no decode shapes.
+"""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    layout=(BlockSpec("attn", "mlp"),),
+    rope_variant="none",          # conv positional embedding lives in stub
+    mlp_kind="gelu",
+    norm="layer",
+    encoder_only=True,
+    frontend_dim=512,
+    supports_decode=False,
+    sub_quadratic=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="hubert-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=64, frontend_dim=32, remat="none")

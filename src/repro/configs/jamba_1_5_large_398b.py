@@ -1,0 +1,41 @@
+"""jamba-1.5-large-398b [hybrid]: 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16e top-2 — Mamba+attn 1:7 interleave, MoE
+every other layer.  [arXiv:2403.19887; hf]
+
+Period of 8 layers: blocks 0-6 Mamba mixers, block 7 attention; FFN
+alternates MLP / MoE.  The Mamba path uses our Mamba2/SSD mixer
+(jamba ships Mamba-1; the SSD dual form is the TPU-native equivalent —
+noted in DESIGN.md) with the jamba state size of 16.
+"""
+from repro.configs.base import ArchConfig, BlockSpec
+from repro.nn.moe import MoEConfig
+from repro.nn.ssm import MambaConfig
+
+_PERIOD = tuple(
+    BlockSpec("mamba" if i < 7 else "attn", "moe" if i % 2 == 1 else "mlp")
+    for i in range(8)
+)
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    layout=_PERIOD,
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff=24576),
+    mamba=MambaConfig(d_model=8192, d_state=16, head_dim=64),
+    rope_variant="none",          # jamba uses no positional encoding
+    supports_decode=True,
+    sub_quadratic=True,           # 1:7 attention — runs long_500k
+)
+
+SMOKE = CONFIG.replace(
+    name="jamba-smoke",
+    n_layers=8, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab_size=256, remat="none",
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff=96, capacity_factor=4.0),
+    mamba=MambaConfig(d_model=64, d_state=16, head_dim=16, chunk=32))

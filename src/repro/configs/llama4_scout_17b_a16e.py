@@ -1,0 +1,28 @@
+"""llama4-scout-17b-a16e [moe]: 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 16e top-1.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+"""
+from repro.configs.base import ArchConfig, BlockSpec
+from repro.nn.moe import MoEConfig
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    layout=(BlockSpec("attn", "moe"),),
+    moe=MoEConfig(num_experts=16, top_k=1, d_ff=8192),
+    rope_theta=500000.0,
+    supports_decode=True,
+    sub_quadratic=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="llama4-scout-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab_size=256, remat="none",
+    moe=MoEConfig(num_experts=4, top_k=1, d_ff=96, capacity_factor=4.0))

@@ -1,0 +1,36 @@
+"""llama-3.2-vision-11b [vlm]: 40L d_model=4096 32H (GQA kv=8)
+d_ff=14336 vocab=128256 — cross-attn image layers every 5th layer.
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+The vision frontend is a STUB per the assignment: input_specs() provides
+precomputed ViT-H/14 patch embeddings (1601 tokens x 1280) which a
+linear media_proj maps into d_model; cross-attention blocks (gated,
+llama3.2-style) attend over them.
+"""
+from repro.configs.base import ArchConfig, BlockSpec
+
+_PERIOD = tuple(
+    BlockSpec("cross_attn" if i == 4 else "attn", "mlp") for i in range(5)
+)
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    layout=_PERIOD,
+    rope_theta=500000.0,
+    n_media_tokens=1601,
+    media_dim=1280,
+    supports_decode=True,
+    sub_quadratic=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="llama-3.2-vision-smoke",
+    n_layers=5, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab_size=256, remat="none", n_media_tokens=17, media_dim=32)

@@ -1,0 +1,31 @@
+"""mamba2-1.3b [ssm]: 48L d_model=2048 (attn-free) d_ff=0 vocab=50280,
+ssm_state=128 — SSD (state-space duality).  [arXiv:2405.21060; unverified]
+
+Pure Mamba2 blocks (no FFN, d_ff=0, as in the original architecture:
+the expand-2 gated SSD block is the whole layer).  Attention-free ⇒
+O(1)-state decode ⇒ runs long_500k.
+"""
+from repro.configs.base import ArchConfig, BlockSpec
+from repro.nn.ssm import MambaConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,          # unused (attn-free); kept for schema uniformity
+    n_kv_heads=32,
+    d_ff=0,
+    vocab_size=50280,
+    layout=(BlockSpec("mamba", None),),
+    mamba=MambaConfig(d_model=2048, d_state=128, head_dim=64),
+    rope_variant="none",
+    tie_embeddings=True,
+    supports_decode=True,
+    sub_quadratic=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="mamba2-smoke",
+    n_layers=2, d_model=64, vocab_size=256, remat="none",
+    mamba=MambaConfig(d_model=64, d_state=16, head_dim=16, chunk=32))

@@ -1,0 +1,15 @@
+"""Core TiM-DNN library: ternary quantization + the TiM execution engine."""
+from repro.core.ternary import (
+    UNWEIGHTED, SYMMETRIC, ASYMMETRIC, ENCODINGS,
+    TernaryScales, ternarize, ternarize_unweighted, ternarize_symmetric,
+    ternarize_asymmetric, dequantize, fake_ternary, fake_ternary_act,
+    fake_quant_act_unsigned, quantize_act_ternary, quantize_act_unsigned,
+    bitplanes, ternary_sparsity,
+)
+from repro.core.tim_engine import (
+    TimConfig, EXACT, SATURATING, NOISY,
+    L_BLOCK, N_MAX, K_BLOCKS, N_COLS, M_PCUS,
+    block_counts, tim_matvec, bitserial_matmul, tim_matmul_reference,
+    inject_sensing_errors,
+)
+from repro.core.packing import pack2b, unpack2b, packed_nbytes, CODES_PER_BYTE

@@ -1,0 +1,74 @@
+"""2-bit packing of ternary codes — the TPC's (A,B) storage, TPU-style.
+
+The paper's TPC stores a ternary value in two physical bits.  On TPU the
+equivalent win is HBM footprint/bandwidth: we pack 4 ternary codes per
+int8 byte (2 bits each), so a ternary weight matrix costs 16x less memory
+traffic than fp32 and 8x less than bf16.  The Pallas kernel unpacks
+in-register after the (tiny) packed tile is loaded into VMEM.
+
+Encoding per 2-bit field (matches the TPC truth table in Fig. 2):
+    00 -> 0     (A=0 ⇒ W=0, B don't-care collapsed to 0)
+    01 -> +1    (A=1, B=0)
+    11 -> -1    (A=1, B=1)
+    10 -> reserved (never produced)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CODES_PER_BYTE = 4
+
+_ENC = jnp.array([0b01, 0b00, 0b11], dtype=jnp.uint8)  # index by q+? see below
+
+
+def _encode2(q: jax.Array) -> jax.Array:
+    """Map {-1,0,1} int8 -> 2-bit field per the TPC table."""
+    # q==0 -> 0b00 ; q==1 -> 0b01 ; q==-1 -> 0b11
+    return jnp.where(q == 0, 0, jnp.where(q > 0, 1, 3)).astype(jnp.uint8)
+
+
+def _decode2(bits: jax.Array) -> jax.Array:
+    """Inverse of _encode2: 2-bit field -> {-1,0,1} int8."""
+    # 0b00->0, 0b01->+1, 0b11->-1 ; 0b10 (reserved) decodes to 0
+    return jnp.where(bits == 1, 1, jnp.where(bits == 3, -1, 0)).astype(jnp.int8)
+
+
+def pack2b(q: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack ternary codes 4-per-byte along ``axis``.
+
+    The packed axis length must be a multiple of 4 (pad upstream — all
+    model dims in this repo are multiples of 128 so this never triggers).
+    """
+    axis = axis % q.ndim
+    size = q.shape[axis]
+    if size % CODES_PER_BYTE:
+        raise ValueError(f"pack axis {axis} size {size} not divisible by 4")
+    enc = _encode2(q)
+    enc = jnp.moveaxis(enc, axis, -1)
+    enc = enc.reshape(enc.shape[:-1] + (size // CODES_PER_BYTE, CODES_PER_BYTE))
+    shifts = jnp.arange(CODES_PER_BYTE, dtype=jnp.uint8) * 2
+    packed = jnp.sum(enc << shifts, axis=-1).astype(jnp.uint8)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack2b(p: jax.Array, axis: int = -1) -> jax.Array:
+    """Inverse of pack2b: uint8 -> ternary int8 codes (4x longer axis)."""
+    axis = axis % p.ndim
+    pm = jnp.moveaxis(p, axis, -1)
+    shifts = jnp.arange(CODES_PER_BYTE, dtype=jnp.uint8) * 2
+    fields = (pm[..., None] >> shifts) & 0b11
+    q = _decode2(fields)
+    q = q.reshape(q.shape[:-2] + (q.shape[-2] * CODES_PER_BYTE,))
+    return jnp.moveaxis(q, -1, axis)
+
+
+def packed_nbytes(shape, axis: int = -1) -> int:
+    """HBM bytes for a packed ternary tensor of the given logical shape."""
+    shape = list(shape)
+    axis = axis % len(shape)
+    shape[axis] = (shape[axis] + CODES_PER_BYTE - 1) // CODES_PER_BYTE
+    n = 1
+    for s in shape:
+        n *= s
+    return n

@@ -1,0 +1,250 @@
+"""Ternary quantization — the numerical heart of TiM-DNN.
+
+The paper (§III) supports three ternary systems:
+
+  * unweighted   {-1, 0, +1}
+  * symmetric    {-a, 0, +a}        (TWN-style, a = mean(|w| > thr))
+  * asymmetric   {-W2, 0, +W1}      (TTQ-style, learned or calibrated scales)
+
+plus 2-bit activations (WRPN) evaluated bit-serially.  Everything here is
+pure JAX and differentiable-through via straight-through estimators (STE),
+so the same code path serves post-training ternarization *and* QAT.
+
+Representation convention used throughout the repo:
+
+  q : int8 tensor in {-1, 0, +1}   ("ternary codes")
+  scales : TernaryScales            (per-tensor or per-channel W1/W2)
+  real value = where(q > 0, W1 * q, W2 * q)   (so symmetric == W1 == W2)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Encodings
+# --------------------------------------------------------------------------
+
+UNWEIGHTED = "unweighted"    # {-1, 0, 1}
+SYMMETRIC = "symmetric"      # {-a, 0, a}
+ASYMMETRIC = "asymmetric"    # {-W2, 0, W1}
+
+ENCODINGS = (UNWEIGHTED, SYMMETRIC, ASYMMETRIC)
+
+# Default ternarization threshold factor (Li & Liu, TWN; used by TTQ too).
+TWN_THRESHOLD_FACTOR = 0.7
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TernaryScales:
+    """Positive/negative scale factors for a ternary tensor.
+
+    ``pos`` scales the +1 codes, ``neg`` scales the -1 codes.  Shapes are
+    either scalar () or per-output-channel (broadcastable against the last
+    dim of the quantized tensor).  ``sym`` is a *static* flag (survives
+    pytree flattening, so it can steer control flow under jit): when True,
+    pos == neg and the engine may use the fused single-phase path.
+    """
+
+    pos: jax.Array
+    neg: jax.Array
+    sym: bool = False
+
+    def tree_flatten(self):
+        return (self.pos, self.neg), self.sym
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    @property
+    def symmetric(self) -> bool:
+        return self.sym
+
+
+def dequantize(q: jax.Array, scales: TernaryScales,
+               dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Map ternary codes back to real values."""
+    qf = q.astype(dtype)
+    return jnp.where(q > 0, scales.pos.astype(dtype) * qf,
+                     scales.neg.astype(dtype) * qf)
+
+
+# --------------------------------------------------------------------------
+# Ternarization (forward)
+# --------------------------------------------------------------------------
+
+def _threshold(w: jax.Array, axis, factor: float) -> jax.Array:
+    return factor * jnp.mean(jnp.abs(w), axis=axis, keepdims=axis is not None)
+
+
+def ternarize_unweighted(w: jax.Array,
+                         threshold_factor: float = TWN_THRESHOLD_FACTOR,
+                         axis: Optional[int] = None
+                         ) -> Tuple[jax.Array, TernaryScales]:
+    """{-1,0,1} codes; scales fixed to 1."""
+    thr = _threshold(w, axis, threshold_factor)
+    q = jnp.where(w > thr, 1, jnp.where(w < -thr, -1, 0)).astype(jnp.int8)
+    one = jnp.ones((), dtype=w.dtype)
+    return q, TernaryScales(one, one, sym=True)
+
+
+def ternarize_symmetric(w: jax.Array,
+                        threshold_factor: float = TWN_THRESHOLD_FACTOR,
+                        axis: Optional[int] = None
+                        ) -> Tuple[jax.Array, TernaryScales]:
+    """TWN: a = E[|w| : |w| > thr], codes in {-1,0,1}, scale {-a,0,a}.
+
+    ``axis=None`` gives a per-tensor scale; ``axis=k`` reduces along ``k``
+    giving a per-channel scale over the remaining dims.
+    """
+    thr = _threshold(w, axis, threshold_factor)
+    mask = jnp.abs(w) > thr
+    q = jnp.where(mask, jnp.sign(w), 0.0).astype(jnp.int8)
+    num = jnp.sum(jnp.where(mask, jnp.abs(w), 0.0), axis=axis,
+                  keepdims=axis is not None)
+    den = jnp.maximum(jnp.sum(mask, axis=axis, keepdims=axis is not None), 1)
+    a = (num / den).astype(w.dtype)
+    return q, TernaryScales(a, a, sym=True)
+
+
+def ternarize_asymmetric(w: jax.Array,
+                         threshold_factor: float = TWN_THRESHOLD_FACTOR,
+                         axis: Optional[int] = None
+                         ) -> Tuple[jax.Array, TernaryScales]:
+    """TTQ-style {-W2, 0, +W1}: independent positive / negative scales."""
+    thr = _threshold(w, axis, threshold_factor)
+    pos_mask = w > thr
+    neg_mask = w < -thr
+    q = jnp.where(pos_mask, 1, jnp.where(neg_mask, -1, 0)).astype(jnp.int8)
+
+    def _mean(mask):
+        num = jnp.sum(jnp.where(mask, jnp.abs(w), 0.0), axis=axis,
+                      keepdims=axis is not None)
+        den = jnp.maximum(jnp.sum(mask, axis=axis, keepdims=axis is not None), 1)
+        return (num / den).astype(w.dtype)
+
+    return q, TernaryScales(_mean(pos_mask), _mean(neg_mask))
+
+
+def ternarize(w: jax.Array, encoding: str = SYMMETRIC,
+              threshold_factor: float = TWN_THRESHOLD_FACTOR,
+              axis: Optional[int] = None) -> Tuple[jax.Array, TernaryScales]:
+    if encoding == UNWEIGHTED:
+        return ternarize_unweighted(w, threshold_factor, axis)
+    if encoding == SYMMETRIC:
+        return ternarize_symmetric(w, threshold_factor, axis)
+    if encoding == ASYMMETRIC:
+        return ternarize_asymmetric(w, threshold_factor, axis)
+    raise ValueError(f"unknown ternary encoding: {encoding!r}")
+
+
+# --------------------------------------------------------------------------
+# Straight-through estimators (QAT)
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def fake_ternary(w: jax.Array, encoding: str = SYMMETRIC,
+                 threshold_factor: float = TWN_THRESHOLD_FACTOR,
+                 axis: Optional[int] = None) -> jax.Array:
+    """Forward: dequantize(ternarize(w)).  Backward: identity (STE).
+
+    The classic QAT trick — the forward pass sees exactly the ternary
+    values the serving path will use, while gradients flow to the latent
+    full-precision master weights.  ``axis`` selects per-channel scales
+    (pass ndim-2 to match the serving converter's per-output-column
+    scale-factor registers).
+    """
+    q, s = ternarize(w, encoding, threshold_factor, axis)
+    return dequantize(q, s, w.dtype)
+
+
+def _fake_ternary_fwd(w, encoding, threshold_factor, axis):
+    return fake_ternary(w, encoding, threshold_factor, axis), None
+
+
+def _fake_ternary_bwd(encoding, threshold_factor, axis, _, g):
+    return (g,)
+
+
+fake_ternary.defvjp(_fake_ternary_fwd, _fake_ternary_bwd)
+
+
+@jax.custom_vjp
+def _clipped_identity(x):
+    return x
+
+
+def _ci_fwd(x):
+    return x, x
+
+
+def _ci_bwd(x, g):
+    # gradient masked outside [-1, 1] (hard-tanh STE, as in HitNet/DoReFa)
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+_clipped_identity.defvjp(_ci_fwd, _ci_bwd)
+
+
+def fake_ternary_act(x: jax.Array,
+                     threshold: float = 0.5) -> jax.Array:
+    """Ternary activation quantizer {-1,0,1} with hard-tanh STE.
+
+    Used for [T,T] RNN benchmarks (HitNet) and ternary-activation LMs.
+    """
+    x = _clipped_identity(jnp.clip(x, -1.0, 1.0))
+    q = jnp.where(x > threshold, 1.0, jnp.where(x < -threshold, -1.0, 0.0))
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def quantize_act_ternary(x: jax.Array, threshold: float = 0.5
+                         ) -> Tuple[jax.Array, TernaryScales]:
+    """Inference-path ternary activation codes (no STE)."""
+    q = jnp.where(x > threshold, 1, jnp.where(x < -threshold, -1, 0))
+    one = jnp.ones((), dtype=x.dtype)
+    return q.astype(jnp.int8), TernaryScales(one, one, sym=True)
+
+
+def fake_quant_act_unsigned(x: jax.Array, bits: int = 2) -> jax.Array:
+    """WRPN-style k-bit unsigned activation fake-quant (after ReLU).
+
+    Forward: round(clip(x,0,1) * (2^k-1)) / (2^k-1);  backward: STE.
+    """
+    levels = (1 << bits) - 1
+    xc = _clipped_identity(jnp.clip(x, 0.0, 1.0))
+    q = jnp.round(xc * levels) / levels
+    return xc + jax.lax.stop_gradient(q - xc)
+
+
+def quantize_act_unsigned(x: jax.Array, bits: int = 2
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Integer activation codes in [0, 2^bits-1] plus the step size."""
+    levels = (1 << bits) - 1
+    q = jnp.round(jnp.clip(x, 0.0, 1.0) * levels).astype(jnp.int8)
+    step = jnp.asarray(1.0 / levels, dtype=x.dtype)
+    return q, step
+
+
+def bitplanes(q: jax.Array, bits: int) -> jax.Array:
+    """Decompose unsigned integer codes into bit-planes.
+
+    Returns int8 array of shape (bits,) + q.shape with plane b holding
+    bit b (LSB first) — the paper's bit-serial activation stream.
+    """
+    planes = [((q >> b) & 1).astype(jnp.int8) for b in range(bits)]
+    return jnp.stack(planes, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Sparsity statistics (the paper's n_max=8 design bet relies on these)
+# --------------------------------------------------------------------------
+
+def ternary_sparsity(q: jax.Array) -> jax.Array:
+    """Fraction of zero codes (paper: >=40% for ternary DNNs)."""
+    return jnp.mean((q == 0).astype(jnp.float32))

@@ -1,0 +1,239 @@
+"""Behavioral model of the TiM tile (paper §III-B/C) in pure JAX.
+
+A TiM tile computes, per memory access, the signed ternary vector-matrix
+product of a length-L input slice against an L x N block of stored ternary
+weights.  The bitlines accumulate per-column counts
+
+    n = #(i : Inp[i] * W[i, j] == +1)        (BL discharge events)
+    k = #(i : Inp[i] * W[i, j] == -1)        (BLB discharge events)
+
+digitized by 3-bit flash ADCs — reliable only up to ``n_max = 8`` of the
+L = 16 enabled rows (Fig. 6: bitline voltage saturates past S_10, margins
+shrink past S_7; the design bets on >=40% ternary sparsity).  The dot
+product of the block is ``n - k``; block partials are reduced digitally by
+the PCUs.
+
+This module is the *oracle* for the Pallas kernel and the fidelity
+reference for the architectural simulator.  Three fidelity levels:
+
+  * exact      — pure ternary math, no clamp (what a TPU would run)
+  * saturating — per-block clamp of n,k at n_max (the paper's ADC)
+  * noisy      — saturating + sensing-error injection with the paper's
+                 measured conditional error profile (±1 on n or k)
+
+The paper's claim ("n_max=8, L=16 has no impact on DNN accuracy", §III-B,
+and "P_E=1.5e-4 has no accuracy impact", §V-F) is validated against this
+model in tests/test_tim_fidelity.py and benchmarks/paper_tables.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import TernaryScales
+
+# Paper microarchitectural constants (Table II, §III-B)
+L_BLOCK = 16        # rows enabled per access (block height)
+N_MAX = 8           # max reliable ADC count (3-bit flash ADC)
+K_BLOCKS = 16       # blocks per tile
+N_COLS = 256        # columns per tile
+M_PCUS = 32         # PCUs per tile (pipelined ADC bandwidth)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimConfig:
+    """Fidelity knobs for the behavioral engine."""
+
+    l_block: int = L_BLOCK
+    n_max: Optional[int] = N_MAX   # None => exact counts (no ADC clamp)
+    sensing_error: bool = False    # inject ±1 errors per the paper's P_SE(SE|n)
+    # P_SE(SE|n): conditional sensing-error probability per ADC count.
+    # Values come from OUR Monte-Carlo of the bitline model under
+    # sigma/mu=5% Vt variation (sim/variations.py), which lands at the
+    # paper's P_E = 1.5e-4 (Fig. 18).  Adjacent-state overlap only ⇒
+    # error magnitude is exactly ±1; overlap grows as bitline increments
+    # shrink near saturation (Fig. 17).
+    p_se_table: Tuple[float, ...] = (
+        0.0, 0.0, 0.0, 0.0, 0.0, 2e-5, 1.5e-4, 6e-4, 3.7e-3)
+
+    @property
+    def exact(self) -> bool:
+        return self.n_max is None and not self.sensing_error
+
+
+EXACT = TimConfig(n_max=None)
+SATURATING = TimConfig()
+NOISY = TimConfig(sensing_error=True)
+
+
+def _pad_to_blocks(x: jax.Array, axis: int, l_block: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % l_block
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def block_counts(inp_q: jax.Array, w_q: jax.Array, cfg: TimConfig = SATURATING
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Per-block (n, k) ADC counts for a ternary VMM.
+
+    inp_q: (..., L_total) int8 ternary codes (the applied wordline pattern)
+    w_q:   (L_total, N)  int8 ternary codes (the stored TPC array)
+    returns (n, k): (..., num_blocks, N) int32 counts, ADC-clamped if
+    cfg.n_max is set.
+    """
+    l = cfg.l_block
+    inp_q = _pad_to_blocks(inp_q, -1, l)
+    w_q = _pad_to_blocks(w_q, 0, l)
+    lt = inp_q.shape[-1]
+    nb = lt // l
+    n_cols = w_q.shape[1]
+
+    ib = inp_q.reshape(inp_q.shape[:-1] + (nb, l)).astype(jnp.int32)
+    wb = w_q.reshape(nb, l, n_cols).astype(jnp.int32)
+
+    # product of codes per (row, col); +1 ⇒ BL event, -1 ⇒ BLB event
+    prod = jnp.einsum("...bl,bln->...bln", ib, wb)
+    n = jnp.sum(prod == 1, axis=-2).astype(jnp.int32)
+    k = jnp.sum(prod == -1, axis=-2).astype(jnp.int32)
+    if cfg.n_max is not None:
+        n = jnp.minimum(n, cfg.n_max)
+        k = jnp.minimum(k, cfg.n_max)
+    return n, k
+
+
+def inject_sensing_errors(n: jax.Array, cfg: TimConfig, key: jax.Array
+                          ) -> jax.Array:
+    """Apply the paper's ±1 sensing-error model to ADC counts.
+
+    For count value c, with probability P_SE(SE|c) the readout is off by
+    one (direction equiprobable, clamped to the valid range).
+    """
+    table = jnp.asarray(cfg.p_se_table, dtype=jnp.float32)
+    idx = jnp.clip(n, 0, len(cfg.p_se_table) - 1)
+    p = table[idx]
+    k_err, k_dir = jax.random.split(key)
+    err = jax.random.uniform(k_err, n.shape) < p
+    direction = jax.random.bernoulli(k_dir, 0.5, n.shape)
+    delta = jnp.where(direction, 1, -1) * err.astype(jnp.int32)
+    hi = cfg.n_max if cfg.n_max is not None else jnp.iinfo(jnp.int32).max
+    return jnp.clip(n + delta, 0, hi)
+
+
+def tim_matvec(inp_q: jax.Array, w_q: jax.Array,
+               w_scales: TernaryScales,
+               i_scales: Optional[TernaryScales] = None,
+               cfg: TimConfig = SATURATING,
+               key: Optional[jax.Array] = None,
+               out_dtype: jnp.dtype = jnp.float32,
+               nonneg_inputs: bool = False) -> jax.Array:
+    """Full TiM ternary VMM with weighted/asymmetric encodings.
+
+    Implements the paper's two-phase asymmetric execution (§III-B, Fig. 5):
+
+      phase 1: apply only the positive input mask; pOut1 = I1*(W1*n1 - W2*k1)
+      phase 2: apply only the negative input mask; pOut2 = -I2*(W1*n2 - W2*k2)
+      out = pOut1 + pOut2
+
+    The fused single-phase form (n - k with a scale epilogue) is exact
+    only when *both* weights and inputs are symmetric: with signed inputs
+    and W1 != W2, a +1 code product is ambiguous between (+1 in, +1 w)
+    [scale W1] and (-1 in, -1 w) [scale W2].  Phase separation makes all
+    applied inputs non-negative, which removes the ambiguity — this is
+    precisely why the paper's hardware runs two steps (Fig. 5b).
+
+    ``nonneg_inputs=True`` asserts that inp_q has no -1 codes (e.g.
+    bit-serial planes), which restores the single-phase fast path even
+    for asymmetric weights.
+    """
+    asym_weights = not w_scales.symmetric
+    asym_inputs = i_scales is not None and not i_scales.symmetric
+    w1 = w_scales.pos.astype(out_dtype)
+    w2 = w_scales.neg.astype(out_dtype)
+
+    def scaled_dot(n, k):
+        return w1 * n.astype(out_dtype) - w2 * k.astype(out_dtype)
+
+    if not (asym_inputs or (asym_weights and not nonneg_inputs)):
+        n, k = block_counts(inp_q, w_q, cfg)
+        if cfg.sensing_error:
+            assert key is not None, "noisy mode needs a PRNG key"
+            kn, kk = jax.random.split(key)
+            n = inject_sensing_errors(n, cfg, kn)
+            k = inject_sensing_errors(k, cfg, kk)
+        out = jnp.sum(scaled_dot(n, k), axis=-2)
+        if i_scales is not None:
+            out = out * i_scales.pos.astype(out_dtype)
+        return out
+
+    # --- two-phase execution ----------------------------------------------
+    if i_scales is not None:
+        i1 = i_scales.pos.astype(out_dtype)
+        i2 = i_scales.neg.astype(out_dtype)
+    else:
+        i1 = i2 = jnp.ones((), dtype=out_dtype)
+    pos_phase = jnp.where(inp_q > 0, 1, 0).astype(jnp.int8)
+    neg_phase = jnp.where(inp_q < 0, 1, 0).astype(jnp.int8)
+
+    keys = jax.random.split(key, 4) if cfg.sensing_error else [None] * 4
+
+    def phase(mask_q, ki, kj):
+        n, k = block_counts(mask_q, w_q, cfg)
+        if cfg.sensing_error:
+            n = inject_sensing_errors(n, cfg, ki)
+            k = inject_sensing_errors(k, cfg, kj)
+        return jnp.sum(scaled_dot(n, k), axis=-2)
+
+    p1 = i1 * phase(pos_phase, keys[0], keys[1])
+    p2 = -i2 * phase(neg_phase, keys[2], keys[3])
+    return p1 + p2
+
+
+def bitserial_matmul(act_codes: jax.Array, act_step: jax.Array,
+                     w_q: jax.Array, w_scales: TernaryScales,
+                     bits: int, cfg: TimConfig = SATURATING,
+                     key: Optional[jax.Array] = None,
+                     out_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Multi-bit (e.g. WRPN 2-bit) activations x ternary weights (§III-C).
+
+    Each activation bit-plane is applied as a {0,1} wordline pattern in a
+    separate TiM access; the PCU shifter scales partial sums by the bit
+    significance.  act_codes: (..., L) unsigned ints < 2**bits.
+    """
+    from repro.core.ternary import bitplanes
+
+    planes = bitplanes(act_codes, bits)  # (bits, ..., L)
+    acc = None
+    for b in range(bits):
+        keyb = None
+        if cfg.sensing_error:
+            key, keyb = jax.random.split(key)
+        part = tim_matvec(planes[b], w_q, w_scales, None, cfg, keyb, out_dtype,
+                          nonneg_inputs=True)
+        part = part * (2 ** b)
+        acc = part if acc is None else acc + part
+    return acc * act_step.astype(out_dtype)
+
+
+def tim_matmul_reference(inp_q: jax.Array, w_q: jax.Array,
+                         w_scales: TernaryScales,
+                         i_scales: Optional[TernaryScales] = None,
+                         out_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Exact ternary matmul (no blocks, no clamp) — the numerical target.
+
+    Equals tim_matvec(..., cfg=EXACT) and the Pallas kernel fast path.
+    """
+    wf = jnp.where(w_q > 0, w_scales.pos, w_scales.neg).astype(out_dtype)
+    w_real = wf * w_q.astype(out_dtype)
+    if i_scales is None:
+        inp_real = inp_q.astype(out_dtype)
+    else:
+        inf = jnp.where(inp_q > 0, i_scales.pos, i_scales.neg).astype(out_dtype)
+        inp_real = inf * inp_q.astype(out_dtype)
+    return inp_real @ w_real

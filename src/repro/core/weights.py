@@ -1,0 +1,93 @@
+"""TernaryWeight — the serving-time container for a ternary weight matrix.
+
+Stores either raw int8 codes (1 B/weight) or TPC-style 2-bit packed codes
+(0.25 B/weight) plus the encoding scales.  This is what model layers hold
+after `ternarize_params`, and what the TiM matmul ops consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack2b, unpack2b, CODES_PER_BYTE
+from repro.core.ternary import TernaryScales, ternarize
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TernaryWeight:
+    """A (K, N) ternary weight matrix in code form.
+
+    data   : int8 (K, N) codes, or uint8 (K/4, N) packed codes
+    scales : TernaryScales with pos/neg broadcastable to (N,)
+    packed : static flag — whether ``data`` is 2-bit packed along K
+    k_dim  : static original K (needed to slice off pack padding)
+    """
+
+    data: jax.Array
+    scales: TernaryScales
+    packed: bool = False
+    k_dim: Optional[int] = None
+
+    def tree_flatten(self):
+        return (self.data, self.scales), (self.packed, self.k_dim)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+    @property
+    def shape(self):
+        k = self.k_dim if self.k_dim is not None else (
+            self.data.shape[-2] * (CODES_PER_BYTE if self.packed else 1))
+        return self.data.shape[:-2] + (k, self.data.shape[-1])
+
+    @property
+    def nbytes_hbm(self) -> int:
+        return self.data.nbytes
+
+    def codes(self) -> jax.Array:
+        """Materialize int8 codes (unpacks if necessary).
+
+        The contraction (K) dim is axis -2 — works for plain (K, N)
+        weights and for stacked (periods/experts, ..., K, N) weights,
+        which lax.scan slices down to (K, N) per layer.
+        """
+        if not self.packed:
+            return self.data
+        ax = self.data.ndim - 2
+        q = unpack2b(self.data, axis=ax)
+        if self.k_dim is not None and q.shape[ax] != self.k_dim:
+            q = jax.lax.slice_in_dim(q, 0, self.k_dim, axis=ax)
+        return q
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        q = self.codes()
+        return (jnp.where(q > 0, self.scales.pos, self.scales.neg)
+                * q.astype(dtype)).astype(dtype)
+
+
+def ternarize_weight(w: jax.Array, encoding: str = "symmetric",
+                     per_channel: bool = True, pack: bool = False
+                     ) -> TernaryWeight:
+    """Quantize a real (K, N) matrix into a TernaryWeight.
+
+    per_channel=True gives one scale per output column (axis 0 reduced),
+    matching the tile's per-column scale-factor registers (§III-C).
+    """
+    axis = 0 if per_channel else None
+    q, scales = ternarize(w, encoding, axis=axis)
+    if per_channel:
+        # scales currently shaped (1, N) from keepdims; squeeze to (N,)
+        scales = TernaryScales(scales.pos.reshape(-1), scales.neg.reshape(-1),
+                               scales.sym)
+    k_dim = w.shape[0]
+    if pack:
+        pad = (-k_dim) % CODES_PER_BYTE
+        if pad:
+            q = jnp.pad(q, ((0, pad), (0, 0)))
+        return TernaryWeight(pack2b(q, axis=0), scales, True, k_dim)
+    return TernaryWeight(q, scales, False, k_dim)

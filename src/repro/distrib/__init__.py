@@ -1,0 +1,2 @@
+"""Distribution layer: sharding rules, collectives, SP decode attention,
+gradient compression, pipeline helpers."""

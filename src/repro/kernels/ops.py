@@ -1,0 +1,165 @@
+"""Dispatching wrappers for TiM ternary matmuls.
+
+Three implementations of the same contract:
+
+  * ``impl='pallas'`` — the Pallas TPU kernel (kernels/tim_matmul.py);
+    interpret=True on CPU so the kernel body is validated everywhere.
+  * ``impl='xla'``    — the same S/T sign-magnitude decomposition written
+    as jnp int8 dot_generals.  This is what distributed model code uses
+    under jit: XLA fuses the epilogue, GSPMD shards it, and the dry-run
+    cost analysis sees the true int8 FLOPs/bytes.
+  * ``impl='ref'``    — dequantize + dense matmul (oracle, tests only).
+
+The contract (all impls agree to float tolerance):
+
+    out[m, n] = sum_k I(x_q[m, k]) * W(w_q[k, n])
+
+with I/W the weighted ternary decodings, optional per-L-block ADC
+saturation (``n_max``), and two-phase execution when the encoding
+demands it (asymmetric weights with signed inputs, or asymmetric
+inputs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import TernaryScales
+from repro.core.weights import TernaryWeight
+from repro.kernels import ref as _ref
+from repro.kernels import tim_matmul as _tk
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _as_vec(scale, n, dtype=jnp.float32):
+    s = jnp.asarray(scale, dtype).reshape(-1)
+    if s.shape[0] == 1 and n != 1:
+        s = jnp.broadcast_to(s, (n,))
+    return s
+
+
+def _st_matmul_xla(x_q, w_q, w1, w2, i1, need_t, n_max, l_block=16):
+    """S/T decomposition in plain jnp (GSPMD-friendly path)."""
+    if n_max is None:
+        s = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+        out = (w1 + w2) * 0.5 * s.astype(jnp.float32)
+        if need_t:
+            t = jax.lax.dot_general(jnp.abs(x_q), jnp.abs(w_q),
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.int32)
+            out = out + (w1 - w2) * 0.5 * t.astype(jnp.float32)
+        return i1 * out
+    # saturating: block the K dim and clamp counts per block
+    m, kdim = x_q.shape
+    pad = (-kdim) % l_block
+    if pad:
+        x_q = jnp.pad(x_q, ((0, 0), (0, pad)))
+        w_q = jnp.pad(w_q, ((0, pad), (0, 0)))
+    nb = x_q.shape[1] // l_block
+    xb = x_q.reshape(m, nb, l_block).astype(jnp.int32)
+    wb = w_q.reshape(nb, l_block, -1).astype(jnp.int32)
+    s = jnp.einsum("mbl,bln->mbn", xb, wb)
+    t = jnp.einsum("mbl,bln->mbn", jnp.abs(xb), jnp.abs(wb))
+    n = jnp.minimum((t + s) // 2, n_max)
+    k = jnp.minimum((t - s) // 2, n_max)
+    out = (w1 * n.astype(jnp.float32) - w2 * k.astype(jnp.float32)).sum(1)
+    return i1 * out
+
+
+def tim_matmul(x_q: jax.Array, w: TernaryWeight,
+               i_scales: Optional[TernaryScales] = None,
+               *, n_max: Optional[int] = None,
+               impl: str = "auto", out_dtype=jnp.float32,
+               block_m: int = _tk.DEFAULT_BM, block_n: int = _tk.DEFAULT_BN,
+               block_k: int = _tk.DEFAULT_BK) -> jax.Array:
+    """Weighted ternary matmul: (..., K) codes x TernaryWeight(K, N).
+
+    Handles arbitrary leading batch dims, phase decomposition, packed
+    weights (pallas/xla), and the ADC-saturation fidelity mode.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+
+    lead = x_q.shape[:-1]
+    kdim = x_q.shape[-1]
+    n = w.shape[1]
+    x2 = x_q.reshape(-1, kdim)
+
+    if impl == "ref":
+        out = _ref.ternary_matmul_ref(x2, w.codes(), w.scales, i_scales,
+                                      out_dtype) if n_max is None else \
+            _ref.ternary_matmul_saturating_ref(x2, w.codes(), w.scales,
+                                               i_scales, n_max,
+                                               out_dtype=out_dtype)
+        return out.reshape(lead + (n,))
+
+    w1 = _as_vec(w.scales.pos, n)
+    w2 = _as_vec(w.scales.neg, n)
+    asym_w = not w.scales.symmetric
+    asym_i = i_scales is not None and not i_scales.symmetric
+    need_phases = asym_i or asym_w
+    # symmetric fast path never needs T; any asymmetric weight does.
+    need_t = asym_w
+
+    def run(xq, i1):
+        if impl == "pallas":
+            interp = not _on_tpu()
+            if w.packed:
+                kp = w.data.shape[0] * 4
+                if kp != xq.shape[1]:  # pack padding: zero codes are inert
+                    xq = jnp.pad(xq, ((0, 0), (0, kp - xq.shape[1])))
+                return _tk.tim_matmul_packed_pallas(
+                    xq, w.data, w1, w2, jnp.asarray(i1), need_t=need_t,
+                    block_m=block_m, block_n=block_n, block_k=block_k,
+                    out_dtype=out_dtype, interpret=interp)[..., :n]
+            return _tk.tim_matmul_pallas(
+                xq, w.data, w1, w2, jnp.asarray(i1), need_t=need_t,
+                n_max=n_max, block_m=block_m, block_n=block_n,
+                block_k=block_k, out_dtype=out_dtype, interpret=interp)
+        wq = w.codes()
+        return _st_matmul_xla(xq, wq, w1, w2, jnp.asarray(
+            i1, jnp.float32), need_t, n_max).astype(out_dtype)
+
+    if impl == "pallas" and w.packed and n_max is not None:
+        raise NotImplementedError(
+            "packed weights + ADC fidelity mode: unpack first")
+
+    if not need_phases:
+        i1 = i_scales.pos if i_scales is not None else 1.0
+        out = run(x2, i1)
+    else:
+        # two-phase execution (paper Fig. 5b): non-negative wordline
+        # patterns disambiguate the W1/W2 scale per product.
+        i1 = i_scales.pos if i_scales is not None else 1.0
+        i2 = i_scales.neg if i_scales is not None else 1.0
+        pos = jnp.where(x2 > 0, 1, 0).astype(jnp.int8)
+        neg = jnp.where(x2 < 0, 1, 0).astype(jnp.int8)
+        out = run(pos, i1) - run(neg, i2)
+
+    return out.reshape(lead + (n,))
+
+
+def tim_matmul_bitserial(act_codes: jax.Array, act_step: jax.Array,
+                         w: TernaryWeight, bits: int,
+                         *, n_max: Optional[int] = None,
+                         impl: str = "auto", out_dtype=jnp.float32
+                         ) -> jax.Array:
+    """Bit-serial unsigned activations (WRPN 2-bit) x ternary weights."""
+    acc = None
+    for b in range(bits):
+        plane = ((act_codes >> b) & 1).astype(jnp.int8)
+        part = tim_matmul(plane, w, None, n_max=n_max, impl=impl,
+                          out_dtype=out_dtype)
+        part = part * (2.0 ** b)
+        acc = part if acc is None else acc + part
+    return (acc * act_step).astype(out_dtype)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the TiM kernels.
+
+These are the numerical ground truth the Pallas kernels are validated
+against (tests/test_kernels.py sweeps shapes/dtypes/encodings).  They are
+*independent* implementations: direct dense math, no S/T decomposition,
+no blocking — if the kernel and the oracle agree across the sweep, the
+decomposition is correct.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import TernaryScales
+from repro.core.tim_engine import TimConfig, block_counts
+
+
+def ternary_matmul_ref(x_q: jax.Array, w_q: jax.Array,
+                       w_scales: TernaryScales,
+                       i_scales: Optional[TernaryScales] = None,
+                       out_dtype=jnp.float32) -> jax.Array:
+    """Exact weighted ternary matmul: dequantize then dense matmul."""
+    w_real = jnp.where(w_q > 0, w_scales.pos, w_scales.neg) * w_q.astype(
+        jnp.float32)
+    if i_scales is None:
+        x_real = x_q.astype(jnp.float32)
+    else:
+        x_real = jnp.where(x_q > 0, i_scales.pos, i_scales.neg) * x_q.astype(
+            jnp.float32)
+    return (x_real @ w_real).astype(out_dtype)
+
+
+def ternary_matmul_saturating_ref(x_q: jax.Array, w_q: jax.Array,
+                                  w_scales: TernaryScales,
+                                  i_scales: Optional[TernaryScales] = None,
+                                  n_max: int = 8, l_block: int = 16,
+                                  out_dtype=jnp.float32) -> jax.Array:
+    """ADC-fidelity oracle: per-block clamped counts, two-phase if needed.
+
+    Built directly on the behavioral tile engine (core/tim_engine.py),
+    which was itself validated against dense math in the exact regime.
+    """
+    cfg = TimConfig(l_block=l_block, n_max=n_max)
+    w1 = w_scales.pos.astype(jnp.float32)
+    w2 = w_scales.neg.astype(jnp.float32)
+
+    def phase(xq_phase):
+        n, k = block_counts(xq_phase, w_q, cfg)
+        return (w1 * n.astype(jnp.float32)
+                - w2 * k.astype(jnp.float32)).sum(axis=-2)
+
+    asym_w = not w_scales.symmetric
+    asym_i = i_scales is not None and not i_scales.symmetric
+    if asym_w or asym_i:
+        i1 = i_scales.pos.astype(jnp.float32) if i_scales is not None else 1.0
+        i2 = i_scales.neg.astype(jnp.float32) if i_scales is not None else 1.0
+        pos = jnp.where(x_q > 0, 1, 0).astype(jnp.int8)
+        neg = jnp.where(x_q < 0, 1, 0).astype(jnp.int8)
+        out = i1 * phase(pos) - i2 * phase(neg)
+    else:
+        out = phase(x_q)
+        if i_scales is not None:
+            out = out * i_scales.pos.astype(jnp.float32)
+    return out.astype(out_dtype)

@@ -1,0 +1,283 @@
+"""Pallas TPU kernel for TiM ternary matrix multiplication.
+
+This is the TPU-native re-expression of the TiM tile (paper §III-B/C).
+The analog bitline trick — accumulate +1 products on BL (count n) and -1
+products on BLB (count k) — becomes a *sign/magnitude decomposition* that
+the MXU executes as int8 matmuls:
+
+    S = X_q @ W_q        (signed codes)      = n - k
+    T = |X_q| @ |W_q|    (magnitude codes)   = n + k
+      ⇒ n = (T + S) / 2,  k = (T - S) / 2
+
+so any weighted ternary output is an epilogue over S and T:
+
+    out = I * [ W1*n - W2*k ] = I * [ (W1-W2)/2 * T + (W1+W2)/2 * S ]
+
+For symmetric encodings (W1 == W2) the T matmul vanishes and one int8
+MXU pass suffices — the fast path.
+
+Fidelity mode (``n_max``) reproduces the 3-bit flash ADC: counts are
+clamped per L=16-row block before digital accumulation, exactly as the
+tile hardware saturates.  This forces the K-grid step to L (=16), which
+is deliberately *not* a performance path — it exists to validate the
+paper's accuracy claims, while the fast path is what serving uses.
+
+VMEM tiling: X tile (bm, bk) int8, W tile (bk, bn) int8, two int32
+accumulators (bm, bn) in VMEM scratch.  bm/bn default to 128/256 —
+MXU-aligned (multiples of 128 in the lane dim, int8 native) — and
+bk=512 keeps the working set at
+  128*512 + 512*256 + 2*128*256*4 B ≈ 0.45 MB ≪ 16 MB VMEM,
+leaving headroom for double-buffered HBM→VMEM pipelining.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import CODES_PER_BYTE
+
+DEFAULT_BM = 128
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+L_BLOCK = 16
+
+
+def _dot_i32(a, b):
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+
+def _epilogue(s, t, w1, w2, i1, out_dtype):
+    """out = i1 * (c_s * S + c_t * T) with per-column ternary scales."""
+    sf = s.astype(jnp.float32)
+    c_s = (w1 + w2) * 0.5
+    if t is None:
+        return (i1 * c_s * sf).astype(out_dtype)
+    tf = t.astype(jnp.float32)
+    c_t = (w1 - w2) * 0.5
+    return (i1 * (c_s * sf + c_t * tf)).astype(out_dtype)
+
+
+def _tim_kernel(x_ref, w_ref, w1_ref, w2_ref, i1_ref, o_ref,
+                s_acc, t_acc, *, nsteps: int, need_t: bool,
+                n_max: Optional[int], out_dtype):
+    """Grid (M/bm, N/bn, K/bk); K innermost (arbitrary semantics)."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        s_acc[...] = jnp.zeros_like(s_acc)
+        if need_t:
+            t_acc[...] = jnp.zeros_like(t_acc)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    s = _dot_i32(x, w)
+    t = _dot_i32(jnp.abs(x), jnp.abs(w)) if need_t else None
+
+    if n_max is None:
+        s_acc[...] += s
+        if need_t:
+            t_acc[...] += t
+    else:
+        # ADC fidelity: this K-step is one L=16 block; clamp n and k at
+        # n_max before accumulating (bitline voltage saturation).
+        n = (t + s) // 2
+        k = (t - s) // 2
+        n = jnp.minimum(n, n_max)
+        k = jnp.minimum(k, n_max)
+        # store back in (S, T) basis so the epilogue is shared
+        s_acc[...] += n - k
+        t_acc[...] += n + k
+
+    @pl.when(kk == nsteps - 1)
+    def _done():
+        w1 = w1_ref[...].astype(jnp.float32)
+        w2 = w2_ref[...].astype(jnp.float32)
+        i1 = i1_ref[0].astype(jnp.float32)
+        t_fin = t_acc[...] if need_t else None
+        o_ref[...] = _epilogue(s_acc[...], t_fin, w1, w2, i1, out_dtype)
+
+
+def _pad_dim(a, axis, mult):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("need_t", "n_max", "block_m", "block_n", "block_k",
+                     "out_dtype", "interpret"))
+def tim_matmul_pallas(x_q: jax.Array, w_q: jax.Array,
+                      w1: jax.Array, w2: jax.Array, i1: jax.Array,
+                      *, need_t: bool, n_max: Optional[int] = None,
+                      block_m: int = DEFAULT_BM, block_n: int = DEFAULT_BN,
+                      block_k: int = DEFAULT_BK,
+                      out_dtype=jnp.float32, interpret: bool = False
+                      ) -> jax.Array:
+    """Single-phase ternary matmul.  x_q: (M, K) int8 codes (phase-masked
+    upstream if asymmetric inputs), w_q: (K, N) int8 codes, w1/w2: (N,)
+    f32 positive/negative weight scales, i1: scalar input scale.
+    """
+    m, kdim = x_q.shape
+    k2, n = w_q.shape
+    assert kdim == k2, (x_q.shape, w_q.shape)
+    if n_max is not None:
+        block_k = L_BLOCK
+        need_t = True
+
+    bm = min(block_m, max(8, m))
+    bk = min(block_k, kdim)
+    bn = min(block_n, n)
+
+    x_q = _pad_dim(_pad_dim(x_q, 0, bm), 1, bk)
+    w_q = _pad_dim(_pad_dim(w_q, 0, bk), 1, bn)
+    w1 = _pad_dim(w1, 0, bn)
+    w2 = _pad_dim(w2, 0, bn)
+    mp, kp = x_q.shape
+    _, np_ = w_q.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    kernel = functools.partial(
+        _tim_kernel, nsteps=grid[2], need_t=need_t, n_max=n_max,
+        out_dtype=out_dtype)
+
+    scratch = [pltpu.VMEM((bm, bn), jnp.int32)]
+    scratch.append(pltpu.VMEM((bm, bn), jnp.int32) if need_t else None)
+    scratch = [s for s in scratch if s is not None]
+    if not need_t:
+        # keep kernel signature uniform: dummy 1-element scratch for t
+        scratch.append(pltpu.VMEM((1, 1), jnp.int32))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_q, w_q, w1, w2, jnp.reshape(i1, (1,)).astype(jnp.float32))
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Packed-weight variant: weights arrive 4-codes-per-byte (the TPC's 2-bit
+# storage).  HBM traffic per weight is 2 bits; the unpack happens on the
+# VPU after the (4x smaller) tile is already in VMEM.
+# ---------------------------------------------------------------------------
+
+def _unpack2b_tile(pw):
+    """(bkp, bn) uint8 -> (bkp*4, bn) int8 ternary codes.
+
+    Field encoding per core/packing.py: 00→0, 01→+1, 11→-1.
+    """
+    bkp, bn = pw.shape
+    shifts = jnp.arange(CODES_PER_BYTE, dtype=jnp.uint8) * 2
+    fields = (pw[:, None, :] >> shifts[None, :, None]) & 0b11   # (bkp,4,bn)
+    q = jnp.where(fields == 1, 1, jnp.where(fields == 3, -1, 0))
+    return q.reshape(bkp * CODES_PER_BYTE, bn).astype(jnp.int8)
+
+
+def _tim_kernel_packed(x_ref, pw_ref, w1_ref, w2_ref, i1_ref, o_ref,
+                       s_acc, t_acc, *, nsteps: int, need_t: bool,
+                       out_dtype):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        s_acc[...] = jnp.zeros_like(s_acc)
+        if need_t:
+            t_acc[...] = jnp.zeros_like(t_acc)
+
+    x = x_ref[...]
+    w = _unpack2b_tile(pw_ref[...])
+    s_acc[...] += _dot_i32(x, w)
+    if need_t:
+        t_acc[...] += _dot_i32(jnp.abs(x), jnp.abs(w))
+
+    @pl.when(kk == nsteps - 1)
+    def _done():
+        w1 = w1_ref[...].astype(jnp.float32)
+        w2 = w2_ref[...].astype(jnp.float32)
+        i1 = i1_ref[0].astype(jnp.float32)
+        t_fin = t_acc[...] if need_t else None
+        o_ref[...] = _epilogue(s_acc[...], t_fin, w1, w2, i1, out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("need_t", "block_m", "block_n", "block_k",
+                     "out_dtype", "interpret"))
+def tim_matmul_packed_pallas(x_q: jax.Array, w_packed: jax.Array,
+                             w1: jax.Array, w2: jax.Array, i1: jax.Array,
+                             *, need_t: bool,
+                             block_m: int = DEFAULT_BM,
+                             block_n: int = DEFAULT_BN,
+                             block_k: int = DEFAULT_BK,
+                             out_dtype=jnp.float32,
+                             interpret: bool = False) -> jax.Array:
+    """Ternary matmul with 2-bit packed weights.
+
+    x_q: (M, K) int8; w_packed: (K//4, N) uint8 (packed along K, axis 0).
+    """
+    m, kdim = x_q.shape
+    kp4, n = w_packed.shape
+    assert kp4 * CODES_PER_BYTE == kdim, (x_q.shape, w_packed.shape)
+
+    bm = min(block_m, max(8, m))
+    bk = min(block_k, kdim)
+    bk -= bk % CODES_PER_BYTE
+    bn = min(block_n, n)
+
+    x_q = _pad_dim(_pad_dim(x_q, 0, bm), 1, bk)
+    w_packed = _pad_dim(_pad_dim(w_packed, 0, bk // CODES_PER_BYTE), 1, bn)
+    w1 = _pad_dim(w1, 0, bn)
+    w2 = _pad_dim(w2, 0, bn)
+    mp, kp = x_q.shape
+    _, np_ = w_packed.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    kernel = functools.partial(
+        _tim_kernel_packed, nsteps=grid[2], need_t=need_t,
+        out_dtype=out_dtype)
+
+    scratch = [pltpu.VMEM((bm, bn), jnp.int32),
+               pltpu.VMEM((bm, bn) if need_t else (1, 1), jnp.int32)]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // CODES_PER_BYTE, bn),
+                         lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_q, w_packed, w1, w2, jnp.reshape(i1, (1,)).astype(jnp.float32))
+    return out[:m, :n]

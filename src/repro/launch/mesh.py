@@ -1,0 +1,58 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — critical because the dry-run
+process must set XLA_FLAGS before *any* jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assigned target: 16x16 = 256 chips/pod; 2 pods = 512 chips.
+
+    Robust when the process exposes more devices than the mesh needs
+    (the dry-run forces 512 host devices and also builds the 256-chip
+    single-pod mesh from the first 256).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    assert len(devices) >= n, (len(devices), n)
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (tests use (1, 1) or (2, 2) on CPU)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: Optional[int] = None, model: int = 1):
+    """Mesh over whatever devices this host actually has (CPU tests,
+    single-host runs).  data axis absorbs the remainder."""
+    n = jax.device_count()
+    if data is None:
+        data = n // model
+    assert data * model == n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_size(mesh, *names: str) -> int:
+    size = 1
+    for n in names:
+        if n in mesh.axis_names:
+            size *= mesh.shape[n]
+    return size
+
+
+def dp_axis_names(mesh) -> Tuple[str, ...]:
+    """Data-parallel axes: ('pod','data') when the pod axis exists."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

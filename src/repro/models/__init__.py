@@ -1,0 +1,1 @@
+"""Model zoo: the unified period-layout transformer + paper benchmark nets."""

@@ -1,0 +1,75 @@
+"""Loss functions.
+
+``chunked_xent`` never materializes the full (B, S, V) logit tensor:
+the head matmul + softmax-CE run inside a scan over sequence chunks,
+keeping peak memory at (B, chunk, V_shard) — essential for the 128k+
+vocabularies at train_4k batch sizes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
+
+
+def _xent_chunk(params, cfg: ArchConfig, h_chunk, labels_chunk, mask_chunk):
+    lg = tfm.logits(params, cfg, h_chunk).astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, labels_chunk[..., None], axis=-1)[..., 0]
+    ce = (lse - picked) * mask_chunk
+    correct = (jnp.argmax(lg, -1) == labels_chunk) * mask_chunk
+    return ce.sum(), correct.sum()
+
+
+def chunked_xent(params, cfg: ArchConfig, hidden: jax.Array,
+                 labels: jax.Array, mask: jax.Array,
+                 chunk: int = 512) -> Tuple[jax.Array, jax.Array]:
+    """Returns (summed CE, summed correct); caller normalizes by mask."""
+    b, s, d = hidden.shape
+    if s <= chunk:
+        return _xent_chunk(params, cfg, hidden, labels, mask)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // chunk
+
+    def body(carry, xs):
+        ce_acc, cor_acc = carry
+        h, l, m = xs
+        ce, cor = _xent_chunk(params, cfg, h, l, m)
+        return (ce_acc + ce, cor_acc + cor), None
+
+    hs = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0)
+    (ce, cor), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ls, ms))
+    return ce, cor
+
+
+def lm_loss(params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token (or frame-label) cross entropy + MoE aux losses."""
+    hidden, _, moe_aux = tfm.forward(params, cfg, batch, mode="train")
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    mask = mask.astype(jnp.float32)
+    ce_sum, cor_sum = chunked_xent(params, cfg, hidden, labels, mask)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = ce_sum / denom
+    loss = ce + moe_aux
+    metrics = {
+        "loss": loss,
+        "ce": ce,
+        "moe_aux": moe_aux,
+        "accuracy": cor_sum / denom,
+        "tokens": denom,
+    }
+    return loss, metrics

@@ -1,0 +1,461 @@
+"""The unified model: dense / MoE / hybrid / VLM / audio / SSM decoder-or-
+encoder transformer, built from the repeating-period layout in ArchConfig.
+
+One code path covers all 10 assigned architectures:
+
+  * params are stacked over periods and the depth loop is a lax.scan —
+    HLO size and compile time are O(1) in depth (126-layer llama3-405B
+    compiles as one period);
+  * every matmul is a TernaryDense (the paper's technique is first-class:
+    QAT in training, TiM codes at serving);
+  * modes: 'train' (no cache), 'prefill' (build caches), 'decode'
+    (one token against caches).
+
+Caches are a pytree stacked over periods mirroring the layout:
+attention blocks hold {k, v}; mamba blocks hold {conv, ssm}; cross-attn
+blocks recompute K/V from the (small) media embeddings each step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockSpec
+from repro.nn import attention as attn
+from repro.nn.basic import (apply_rope, embedding_init, embedding_specs,
+                            layernorm_apply, layernorm_init, layernorm_specs,
+                            rmsnorm_apply, rmsnorm_init, rmsnorm_specs)
+from repro.nn.linear import (TernaryPolicy, dense_apply, dense_init,
+                             dense_specs, ternary_dense_apply,
+                             ternary_dense_init, ternary_dense_specs)
+from repro.nn.mlp import mlp_apply, mlp_init, mlp_specs
+from repro.nn.module import subkey
+from repro.nn.moe import moe_apply, moe_init, moe_specs
+from repro.nn.ssm import (mamba_apply, mamba_init, mamba_init_cache,
+                          mamba_specs)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# norms (configurable rms/layer)
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg: ArchConfig, d: int):
+    return rmsnorm_init(d, cfg.pdtype) if cfg.norm == "rms" \
+        else layernorm_init(d, cfg.pdtype)
+
+
+def _norm_specs(cfg: ArchConfig):
+    return rmsnorm_specs() if cfg.norm == "rms" else layernorm_specs()
+
+
+def _norm_apply(cfg: ArchConfig, p, x):
+    return rmsnorm_apply(p, x) if cfg.norm == "rms" \
+        else layernorm_apply(p, x)
+
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+def _attn_block_init(key, cfg: ArchConfig, cross: bool):
+    d, hd = cfg.d_model, cfg.hd
+    pol = cfg.ternary
+    p = {
+        "ln1": _norm_init(cfg, d),
+        "q": ternary_dense_init(subkey(key, "q"), d, cfg.n_heads * hd, pol,
+                                dtype=cfg.pdtype),
+        "k": ternary_dense_init(subkey(key, "k"), d, cfg.n_kv_heads * hd,
+                                pol, dtype=cfg.pdtype),
+        "v": ternary_dense_init(subkey(key, "v"), d, cfg.n_kv_heads * hd,
+                                pol, dtype=cfg.pdtype),
+        "o": ternary_dense_init(subkey(key, "o"), cfg.n_heads * hd, d, pol,
+                                dtype=cfg.pdtype),
+    }
+    if cross:
+        # llama3.2-vision style tanh gates on the cross path
+        p["gate_attn"] = jnp.zeros((), cfg.pdtype)
+        p["gate_ffn"] = jnp.zeros((), cfg.pdtype)
+    return p
+
+
+def _attn_block_specs(cfg: ArchConfig, cross: bool):
+    pol = cfg.ternary
+    kv_axis = "kv_heads"
+    s = {
+        "ln1": _norm_specs(cfg),
+        "q": ternary_dense_specs(None, "heads", pol),
+        "k": ternary_dense_specs(None, kv_axis, pol),
+        "v": ternary_dense_specs(None, kv_axis, pol),
+        "o": ternary_dense_specs("heads", None, pol),
+    }
+    if cross:
+        s["gate_attn"] = ()
+        s["gate_ffn"] = ()
+    return s
+
+
+def _kv_quantize(t: jax.Array):
+    """Per-(token, head) int8 quantization of K/V: t (..., Hk, D) ->
+    (codes int8, scale bf16 (..., Hk))."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    codes = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.bfloat16)
+
+
+def _kv_dequantize(codes: jax.Array, scale: jax.Array, dtype):
+    return (codes.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
+                      cache, cache_len, media, cross: bool):
+    b, s, _ = x.shape
+    hd, h, hk = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    pol = cfg.ternary
+    cd = cfg.cdtype
+
+    xin = _norm_apply(cfg, p["ln1"], x)
+    q = ternary_dense_apply(p["q"], xin, pol, cd).reshape(b, s, h, hd)
+
+    if cross:
+        # K/V from media embeddings, never cached (small, recomputed)
+        k = ternary_dense_apply(p["k"], media, pol, cd)
+        v = ternary_dense_apply(p["v"], media, pol, cd)
+        pm = media.shape[1]
+        k = k.reshape(b, pm, hk, hd)
+        v = v.reshape(b, pm, hk, hd)
+        o = attn.cross_attention(q, k, v)
+        new_cache = cache
+    else:
+        k = ternary_dense_apply(p["k"], xin, pol, cd).reshape(b, s, hk, hd)
+        v = ternary_dense_apply(p["v"], xin, pol, cd).reshape(b, s, hk, hd)
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_variant)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_variant)
+        causal = not cfg.encoder_only
+
+        quant = cfg.kv_cache_dtype == "int8"
+        if mode == "train":
+            o = attn.chunked_attention(q, k, v, causal=causal,
+                                       chunk_kv=cfg.attn_chunk_kv)
+            new_cache = cache
+        elif mode == "prefill":
+            o = attn.chunked_attention(q, k, v, causal=causal,
+                                       chunk_kv=cfg.attn_chunk_kv)
+            if quant:
+                kq, ks = _kv_quantize(k)
+                vq, vs = _kv_quantize(v)
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice(
+                        cache["k"], kq, (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(
+                        cache["v"], vq, (0, 0, 0, 0)),
+                    "k_scale": jax.lax.dynamic_update_slice(
+                        cache["k_scale"], ks, (0, 0, 0)),
+                    "v_scale": jax.lax.dynamic_update_slice(
+                        cache["v_scale"], vs, (0, 0, 0)),
+                }
+            else:
+                kc = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+                new_cache = {"k": kc, "v": vc}
+        else:  # decode: s == 1
+            bidx = jnp.arange(b)
+            if quant:
+                kq, ks = _kv_quantize(k[:, 0])
+                vq, vs = _kv_quantize(v[:, 0])
+                new_cache = {
+                    "k": cache["k"].at[bidx, cache_len].set(kq),
+                    "v": cache["v"].at[bidx, cache_len].set(vq),
+                    "k_scale": cache["k_scale"].at[bidx, cache_len].set(ks),
+                    "v_scale": cache["v_scale"].at[bidx, cache_len].set(vs),
+                }
+                kd = _kv_dequantize(new_cache["k"], new_cache["k_scale"],
+                                    cd)
+                vd = _kv_dequantize(new_cache["v"], new_cache["v_scale"],
+                                    cd)
+                o = attn.decode_attention(q, kd, vd, cache_len + 1)
+            else:
+                kc = cache["k"].at[bidx, cache_len].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                vc = cache["v"].at[bidx, cache_len].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                o = attn.decode_attention(q, kc, vc, cache_len + 1)
+                new_cache = {"k": kc, "v": vc}
+
+    o = o.reshape(b, s, h * hd)
+    o = ternary_dense_apply(p["o"], o, pol, cd)
+    if cross:
+        o = jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(cd) * o
+    return x + o.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# block dispatch (mixer + ffn)
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ArchConfig, spec: BlockSpec):
+    p = {}
+    if spec.mixer in ("attn", "cross_attn"):
+        p.update(_attn_block_init(subkey(key, "mixer"), cfg,
+                                  spec.mixer == "cross_attn"))
+    elif spec.mixer == "mamba":
+        p["ln1"] = _norm_init(cfg, cfg.d_model)
+        p["mamba"] = mamba_init(subkey(key, "mamba"), cfg.mamba, cfg.ternary,
+                                cfg.pdtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn is not None:
+        p["ln2"] = _norm_init(cfg, cfg.d_model)
+        if spec.ffn == "mlp":
+            p["ffn"] = mlp_init(subkey(key, "ffn"), cfg.d_model, cfg.d_ff,
+                                cfg.ternary, cfg.mlp_kind, cfg.pdtype)
+        else:
+            p["ffn"] = moe_init(subkey(key, "moe"), cfg.d_model, cfg.moe,
+                                cfg.ternary, cfg.pdtype)
+    return p
+
+
+def _block_specs(cfg: ArchConfig, spec: BlockSpec):
+    s = {}
+    if spec.mixer in ("attn", "cross_attn"):
+        s.update(_attn_block_specs(cfg, spec.mixer == "cross_attn"))
+    else:
+        s["ln1"] = _norm_specs(cfg)
+        s["mamba"] = mamba_specs(cfg.mamba, cfg.ternary)
+    if spec.ffn is not None:
+        s["ln2"] = _norm_specs(cfg)
+        s["ffn"] = (mlp_specs(cfg.ternary, cfg.mlp_kind) if spec.ffn == "mlp"
+                    else moe_specs(cfg.moe, cfg.ternary))
+    return s
+
+
+def _block_apply(p, x, cfg: ArchConfig, spec: BlockSpec, positions,
+                 mode, cache, cache_len, media):
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mixer in ("attn", "cross_attn"):
+        x, new_cache = _attn_block_apply(
+            p, x, cfg, positions, mode, cache, cache_len, media,
+            spec.mixer == "cross_attn")
+    else:
+        h_in = _norm_apply(cfg, p["ln1"], x)
+        mcache = cache if (cache and "ssm" in cache) else None
+        y, new_mcache = mamba_apply(p["mamba"], h_in, cfg.mamba, cfg.ternary,
+                                    cfg.cdtype, mcache)
+        x = x + y.astype(x.dtype)
+        new_cache = new_mcache if new_mcache is not None else cache
+
+    if spec.ffn is not None:
+        h_in = _norm_apply(cfg, p["ln2"], x)
+        if spec.ffn == "mlp":
+            y = mlp_apply(p["ffn"], h_in, cfg.ternary, cfg.mlp_kind,
+                          cfg.cdtype)
+        else:
+            # decode is dropless (capacity == tokens*k): per-token results
+            # must not depend on what else is in the batch
+            cap = (x.shape[0] * x.shape[1] * cfg.moe.top_k
+                   if mode == "decode" else None)
+            y, aux = moe_apply(p["ffn"], h_in, cfg.moe, cfg.ternary,
+                               cfg.cdtype, capacity_override=cap)
+        if spec.mixer == "cross_attn":
+            y = jnp.tanh(p["gate_ffn"].astype(jnp.float32)).astype(
+                y.dtype) * y
+        x = x + y.astype(x.dtype)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init(cfg: ArchConfig, key: jax.Array) -> Params:
+    p: Params = {}
+    if cfg.frontend_dim:  # audio stub: project precomputed frames
+        p["frontend"] = dense_init(subkey(key, "frontend"), cfg.frontend_dim,
+                                   cfg.d_model, dtype=cfg.pdtype)
+    else:
+        p["embed"] = embedding_init(subkey(key, "embed"), cfg.vocab_padded,
+                                    cfg.d_model, cfg.pdtype)
+    if cfg.n_media_tokens:
+        p["media_proj"] = dense_init(subkey(key, "media"), cfg.media_dim,
+                                     cfg.d_model, dtype=cfg.pdtype)
+
+    def one_period(i):
+        kp = subkey(key, f"period{i}")
+        return {f"b{j}": _block_init(subkey(kp, f"b{j}"), cfg, spec)
+                for j, spec in enumerate(cfg.layout)}
+
+    periods = [one_period(i) for i in range(cfg.n_periods)]
+    p["layers"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs, 0), *periods)
+    p["final_norm"] = _norm_init(cfg, cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(subkey(key, "head"), cfg.d_model,
+                                  cfg.vocab_padded, dtype=cfg.pdtype)
+    return p
+
+
+def specs(cfg: ArchConfig) -> Params:
+    s: Params = {}
+    if cfg.frontend_dim:
+        s["frontend"] = dense_specs(None, None)
+    else:
+        s["embed"] = embedding_specs()
+    if cfg.n_media_tokens:
+        s["media_proj"] = dense_specs(None, None)
+    period = {f"b{j}": _block_specs(cfg, spec)
+              for j, spec in enumerate(cfg.layout)}
+    s["layers"] = jax.tree_util.tree_map(
+        lambda t: ("layers",) + t, period,
+        is_leaf=lambda x: isinstance(x, tuple))
+    s["final_norm"] = _norm_specs(cfg)
+    if not cfg.tie_embeddings:
+        s["lm_head"] = dense_specs(None, "vocab")
+    return s
+
+
+def embed_inputs(params: Params, cfg: ArchConfig, batch: Dict[str, Any]):
+    cd = cfg.cdtype
+    if cfg.frontend_dim:
+        x = dense_apply(params["frontend"], batch["frames"], cd)
+    else:
+        x = params["embed"]["table"].astype(cd)[batch["tokens"]]
+    media = None
+    if cfg.n_media_tokens and "media" in batch:
+        media = dense_apply(params["media_proj"], batch["media"], cd)
+    return x, media
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
+            mode: str = "train",
+            caches: Optional[Params] = None,
+            cache_len: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Returns (hidden (B,S,d), new_caches (or None), moe_aux_loss)."""
+    from repro.distrib.sharding import hint_constrain
+
+    x, media = embed_inputs(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    if mode == "decode":
+        positions = cache_len[:, None]  # (B, 1)
+    else:
+        positions = jnp.arange(s)[None, :]
+    # sequence-parallel residual stream (Megatron-SP) when hinted:
+    # norms/residual math runs seq-sharded; GSPMD turns the TP
+    # all-reduces into reduce-scatter + all-gather pairs around the
+    # attention/MLP blocks
+    x = hint_constrain(x, ("batch", "seq", None))
+
+    def period_fn(x, period_params, period_cache):
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for j, spec in enumerate(cfg.layout):
+            blk_cache = None if period_cache is None else period_cache[
+                f"b{j}"]
+            x, nc, aux = _block_apply(
+                period_params[f"b{j}"], x, cfg, spec, positions, mode,
+                blk_cache, cache_len, media)
+            x = hint_constrain(x, ("batch", "seq", None))
+            new_caches[f"b{j}"] = nc if nc is not None else {}
+            aux_total = aux_total + aux
+        return x, new_caches, aux_total
+
+    if mode == "train" and cfg.remat != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        period_fn = jax.checkpoint(period_fn, policy=policy,
+                                   static_argnums=())
+
+    def scan_body(carry, xs):
+        x, aux_acc = carry
+        pparams, pcache = xs
+        x, ncache, aux = period_fn(x, pparams, pcache)
+        return (x, aux_acc + aux), ncache
+
+    if caches is None:
+        def scan_body_nc(carry, pparams):
+            x, aux_acc = carry
+            x, _, aux = period_fn(x, pparams, None)
+            return (x, aux_acc + aux), None
+        (x, aux), _ = jax.lax.scan(
+            scan_body_nc, (x, jnp.zeros((), jnp.float32)), params["layers"])
+        new_caches = None
+    else:
+        (x, aux), new_caches = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], caches))
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    return x, new_caches, aux
+
+
+def logits(params: Params, cfg: ArchConfig, hidden: jax.Array) -> jax.Array:
+    cd = cfg.cdtype
+    if cfg.tie_embeddings:
+        out = hidden.astype(cd) @ params["embed"]["table"].astype(cd).T
+    else:
+        out = dense_apply(params["lm_head"], hidden, cd)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        out = jnp.where(pad_mask, jnp.asarray(-1e30, out.dtype), out)
+    return out
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    """Stacked (over periods) cache pytree matching the layout."""
+    hd, hk = cfg.hd, cfg.n_kv_heads
+
+    def one_block(spec: BlockSpec):
+        if spec.mixer == "attn":
+            if cfg.kv_cache_dtype == "int8":
+                return {
+                    "k": jnp.zeros((batch, max_len, hk, hd), jnp.int8),
+                    "v": jnp.zeros((batch, max_len, hk, hd), jnp.int8),
+                    "k_scale": jnp.zeros((batch, max_len, hk),
+                                         jnp.bfloat16),
+                    "v_scale": jnp.zeros((batch, max_len, hk),
+                                         jnp.bfloat16),
+                }
+            return {
+                "k": jnp.zeros((batch, max_len, hk, hd), jnp.bfloat16),
+                "v": jnp.zeros((batch, max_len, hk, hd), jnp.bfloat16),
+            }
+        if spec.mixer == "mamba":
+            return mamba_init_cache(cfg.mamba, batch)
+        return {}  # cross_attn: recomputed from media
+
+    period = {f"b{j}": one_block(spec) for j, spec in enumerate(cfg.layout)}
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy()
+        if hasattr(a, "shape") else a, period)
+
+
+def cache_specs(cfg: ArchConfig, shard_seq: bool = False) -> Params:
+    """Logical axes for the cache pytree (mirrors init_caches)."""
+    seq_ax = "cache_seq" if shard_seq else None
+
+    def one_block(spec: BlockSpec):
+        if spec.mixer == "attn":
+            kv = ("layers", "batch", seq_ax, "kv_heads_cache", None)
+            out = {"k": kv, "v": kv}
+            if cfg.kv_cache_dtype == "int8":
+                sc = ("layers", "batch", seq_ax, "kv_heads_cache")
+                out["k_scale"] = sc
+                out["v_scale"] = sc
+            return out
+        if spec.mixer == "mamba":
+            return {
+                "conv": ("layers", "batch", None, "ssm_inner"),
+                "ssm": ("layers", "batch", "ssm_heads", None, None),
+            }
+        return {}
+
+    return {f"b{j}": one_block(spec) for j, spec in enumerate(cfg.layout)}

@@ -1,0 +1,1 @@
+"""Minimal functional NN substrate (no flax): layers as (init, apply, specs)."""

@@ -1,0 +1,128 @@
+"""Attention ops: GQA, flash-style chunked attention, decode, cross.
+
+All functions take (batch, seq, heads, head_dim) tensors.  GQA never
+materializes repeated KV heads — queries are grouped (B, S, Hk, G, D)
+and contracted against the shared KV head directly.
+
+``chunked_attention`` is the memory-bounded softmax(QK^T)V used for
+training and long prefill: an online-softmax scan over KV chunks (the
+flash-attention recurrence expressed in XLA; scores never exceed
+(B, Hk, G, Sq, chunk_kv)).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _group_queries(q: jax.Array, n_kv: int) -> jax.Array:
+    b, s, h, d = q.shape
+    assert h % n_kv == 0, (h, n_kv)
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   causal: bool = True,
+                   q_offset: int = 0,
+                   kv_valid_len: Optional[jax.Array] = None,
+                   compute_dtype=jnp.float32) -> jax.Array:
+    """Reference attention (materializes all scores).  Small seqs/tests."""
+    b, sq, h, d = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    qg = _group_queries(q, hk).astype(compute_dtype)
+    scale = d ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(compute_dtype)) * scale
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if kv_valid_len is not None:
+        kmask = jnp.arange(sk)[None] < kv_valid_len[:, None]  # (b, sk)
+        s = jnp.where(kmask[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(compute_dtype))
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True,
+                      chunk_kv: int = 1024,
+                      q_offset: int = 0,
+                      kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
+    """Online-softmax attention, O(Sq * chunk_kv) score memory.
+
+    Supports GQA, causality across an arbitrary q_offset (for chunked
+    prefill), and ragged KV validity (for batched serving).
+    """
+    b, sq, h, d = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    if sk <= chunk_kv:
+        return full_attention(q, k, v, causal, q_offset, kv_valid_len)
+
+    pad = (-sk) % chunk_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_valid_len is None:
+            kv_valid_len = jnp.full((b,), sk, jnp.int32)
+    skp = k.shape[1]
+    nc = skp // chunk_kv
+
+    g = h // hk
+    qg = _group_queries(q, hk).astype(jnp.float32) * (d ** -0.5)
+    kc = k.reshape(b, nc, chunk_kv, hk, d)
+    vc = v.reshape(b, nc, chunk_kv, hk, d)
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, c = inp
+        kvpos = c * chunk_kv + jnp.arange(chunk_kv)
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kj.astype(jnp.float32))
+        if causal:
+            mask = qpos[:, None] >= kvpos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        if kv_valid_len is not None:
+            kmask = kvpos[None] < kv_valid_len[:, None]
+            s = jnp.where(kmask[:, None, None, None, :], s, NEG_INF)
+        mj = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows: keep m finite so exp() stays 0-safe
+        mj_safe = jnp.maximum(mj, -1e29)
+        p = jnp.exp(s - mj_safe[..., None])
+        corr = jnp.exp(jnp.minimum(m - mj_safe, 0.0))
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqc,bchd->bhgqd", p, vj.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (mj, l, acc), None
+
+    m0 = jnp.full((b, hk, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hk, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nc)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (b,hk,g,sq,d)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array) -> jax.Array:
+    """One-token decode against a (B, S_max, Hk, D) KV cache.
+
+    cache_len: (B,) valid lengths (the new token's K/V must already be
+    written at position cache_len - 1).
+    """
+    return full_attention(q, k_cache, v_cache, causal=False,
+                          kv_valid_len=cache_len)
+
+
+def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
+    """Encoder-decoder attention (VLM image tokens): never causal."""
+    return chunked_attention(q, k, v, causal=False, kv_valid_len=kv_valid_len)

@@ -1,0 +1,107 @@
+"""Norms, embeddings, rotary position embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ones, subkey, trunc_normal, zeros
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": ones((d,), dtype)}
+
+
+def rmsnorm_specs():
+    return {"scale": (None,)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": ones((d,), dtype), "bias": zeros((d,), dtype)}
+
+
+def layernorm_specs():
+    return {"scale": (None,), "bias": (None,)}
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": trunc_normal(subkey(key, "emb"), (vocab, d), dtype)}
+
+
+def embedding_specs():
+    return {"table": ("vocab", None)}
+
+
+def embedding_apply(p, ids, compute_dtype=jnp.bfloat16):
+    return p["table"].astype(compute_dtype)[ids]
+
+
+def embedding_logits(p, x, compute_dtype=jnp.bfloat16):
+    """Tied-softmax readout: x @ table^T."""
+    return x.astype(compute_dtype) @ p["table"].astype(compute_dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0,
+                     rotary_dim: Optional[int] = None):
+    rd = rotary_dim or head_dim
+    inv = 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+    return inv  # (rd/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               variant: str = "standard") -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable (..., seq).
+
+    variant:
+      'standard' — llama-style, rotate all head_dim pairs (interleaved as
+                   [first_half, second_half]).
+      'half'     — chatglm/GLM "2d" style: rotary on the first half of
+                   head_dim only, the second half is untouched (the other
+                   "dimension" of the original 2d scheme carries block
+                   position; for 1-d text both collapse to this layout).
+      'none'     — no-op.
+    """
+    if variant == "none":
+        return x
+    hd = x.shape[-1]
+    rd = hd if variant == "standard" else hd // 2
+    inv = rope_frequencies(hd, theta, rd)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, rd/2)
+    sin = jnp.sin(ang)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+
+    xr = x[..., :rd]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    out = jnp.concatenate([rot, x[..., rd:].astype(jnp.float32)], -1)
+    return out.astype(x.dtype)

@@ -1,0 +1,186 @@
+"""Dense and TernaryDense layers.
+
+TernaryDense is the framework's first-class integration of the paper's
+technique.  Three operating modes, chosen statically by the params it is
+given plus the TernaryPolicy:
+
+  * QAT (training)  — master weights are full precision; the forward pass
+    fake-ternarizes them (STE) so gradients train the latent weights.
+    TTQ asymmetric scales are *learned* parameters (wp, wn).
+  * TiM serve       — weights are TernaryWeight codes (optionally 2-bit
+    packed); activations are quantized (ternary or 2-bit bit-serial) and
+    the matmul runs through kernels/ops.tim_matmul — the TPU port of the
+    TiM tile, ADC-fidelity mode available.
+  * weight-only serve — weights are codes, activations stay bf16; the
+    matmul dequantizes in-register.  Not in the paper (its PCU always
+    digitizes quantized inputs) — this is the beyond-paper deployable
+    mode for LLM serving where activation ternarization costs accuracy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary as T
+from repro.core.weights import TernaryWeight, ternarize_weight
+from repro.kernels import ops as kops
+from repro.nn.module import subkey, variance_scaling, zeros
+
+
+@dataclasses.dataclass(frozen=True)
+class TernaryPolicy:
+    """How ternary layers behave across the framework."""
+
+    enabled: bool = True
+    encoding: str = T.SYMMETRIC        # unweighted | symmetric | asymmetric
+    learned_scales: bool = False       # TTQ: learn wp/wn during QAT
+    act_mode: str = "none"             # none | ternary | int2 (bit-serial)
+    act_threshold: float = 0.5
+    n_max: Optional[int] = None        # ADC fidelity clamp (None = exact)
+    pack: bool = False                 # 2-bit packed serve weights
+    impl: str = "auto"                 # kernels/ops dispatch
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+FP32 = TernaryPolicy(enabled=False)
+
+
+# ---------------------------------------------------------------------------
+# Plain dense
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, use_bias: bool = False,
+               dtype=jnp.float32):
+    p = {"w": variance_scaling(subkey(key, "w"), (d_in, d_out), dtype)}
+    if use_bias:
+        p["b"] = zeros((d_out,), dtype)
+    return p
+
+
+def dense_specs(in_axis, out_axis, use_bias: bool = False):
+    s = {"w": (in_axis, out_axis)}
+    if use_bias:
+        s["b"] = (out_axis,)
+    return s
+
+
+def dense_apply(p, x, compute_dtype=jnp.bfloat16):
+    w = p["w"]
+    if isinstance(w, TernaryWeight):
+        w = w.dequantize(compute_dtype)
+    y = x.astype(compute_dtype) @ w.astype(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Ternary dense
+# ---------------------------------------------------------------------------
+
+def ternary_dense_init(key, d_in: int, d_out: int, policy: TernaryPolicy,
+                       use_bias: bool = False, dtype=jnp.float32):
+    p = dense_init(key, d_in, d_out, use_bias, dtype)
+    if policy.enabled and policy.learned_scales:
+        # TTQ: positive/negative scales, initialized near E|w|
+        p["wp"] = jnp.full((d_out,), 0.03, dtype)
+        p["wn"] = jnp.full((d_out,), 0.03, dtype)
+    return p
+
+
+def ternary_dense_specs(in_axis, out_axis, policy: TernaryPolicy,
+                        use_bias: bool = False):
+    s = dense_specs(in_axis, out_axis, use_bias)
+    if policy.enabled and policy.learned_scales:
+        s["wp"] = (out_axis,)
+        s["wn"] = (out_axis,)
+    return s
+
+
+def _quantize_master(p, policy: TernaryPolicy,
+                     compute_dtype=jnp.bfloat16):
+    """QAT forward view of the master weight.
+
+    The master is cast to compute dtype BEFORE the threshold stats so
+    that, under FSDP, GSPMD's weight all-gather moves compute-dtype
+    bytes — gathering the fp32 master doubles the dominant wire term
+    (measured in §Perf iteration 4).
+    """
+    w = p["w"].astype(compute_dtype)
+    if policy.learned_scales:
+        # TTQ: codes from threshold ternarization (STE), learned scales
+        q = T.fake_ternary(w, T.UNWEIGHTED)  # {-1,0,1} with identity grad
+        pos = jnp.maximum(q, 0.0)            # +1 codes
+        neg = jnp.minimum(q, 0.0)            # -1 codes
+        # value = +wp on positive codes, -wn on negative codes
+        return p["wp"] * pos + p["wn"] * neg
+    return T.fake_ternary(w, policy.encoding, axis=w.ndim - 2)
+
+
+def ternary_dense_apply(p, x, policy: TernaryPolicy,
+                        compute_dtype=jnp.bfloat16):
+    """Dispatch on param form: master fp weights (QAT) vs TernaryWeight
+    codes (serving)."""
+    w = p["w"]
+    if isinstance(w, TernaryWeight):
+        return _serve_apply(p, x, policy, compute_dtype)
+    if not policy.enabled:
+        return dense_apply(p, x, compute_dtype)
+    wq = _quantize_master(p, policy, compute_dtype)
+    xq = x
+    if policy.act_mode == "ternary":
+        xq = T.fake_ternary_act(x, policy.act_threshold)
+    elif policy.act_mode == "int2":
+        xq = T.fake_quant_act_unsigned(x, bits=2)
+    y = xq.astype(compute_dtype) @ wq.astype(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def _serve_apply(p, x, policy: TernaryPolicy, compute_dtype):
+    w: TernaryWeight = p["w"]
+    if policy.act_mode == "ternary":
+        qx, sx = T.quantize_act_ternary(x, policy.act_threshold)
+        y = kops.tim_matmul(qx, w, sx, n_max=policy.n_max, impl=policy.impl,
+                            out_dtype=compute_dtype)
+    elif policy.act_mode == "int2":
+        qa, step = T.quantize_act_unsigned(x, bits=2)
+        y = kops.tim_matmul_bitserial(qa, step, w, bits=2,
+                                      n_max=policy.n_max, impl=policy.impl,
+                                      out_dtype=compute_dtype)
+    else:
+        # weight-only: dequantize codes in-register, dense matmul
+        y = x.astype(compute_dtype) @ w.dequantize(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def ternarize_dense_params(p, policy: TernaryPolicy):
+    """Convert QAT/fp32 dense params into serving form (codes + scales)."""
+    w = p["w"]
+    if isinstance(w, TernaryWeight) or not policy.enabled:
+        return p
+    if policy.learned_scales:
+        q, _ = T.ternarize(w, T.UNWEIGHTED)
+        scales = T.TernaryScales(jnp.abs(p["wp"]), jnp.abs(p["wn"]), False)
+        tw = TernaryWeight(q, scales, False, w.shape[0])
+        if policy.pack:
+            from repro.core.packing import pack2b, CODES_PER_BYTE
+            pad = (-w.shape[0]) % CODES_PER_BYTE
+            qq = jnp.pad(q, ((0, pad), (0, 0))) if pad else q
+            tw = TernaryWeight(pack2b(qq, axis=0), scales, True, w.shape[0])
+    else:
+        tw = ternarize_weight(w, policy.encoding, per_channel=True,
+                              pack=policy.pack)
+    out = {"w": tw}
+    for k in ("b",):
+        if k in p:
+            out[k] = p[k]
+    return out

@@ -1,0 +1,48 @@
+"""Feed-forward blocks: SwiGLU / GELU MLPs with ternary weights."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import (TernaryPolicy, ternary_dense_apply,
+                             ternary_dense_init, ternary_dense_specs)
+from repro.nn.module import subkey
+
+
+def mlp_init(key, d_model: int, d_ff: int, policy: TernaryPolicy,
+             kind: str = "swiglu", dtype=jnp.float32):
+    p = {}
+    if kind == "swiglu":
+        p["gate"] = ternary_dense_init(subkey(key, "gate"), d_model, d_ff,
+                                       policy, dtype=dtype)
+        p["up"] = ternary_dense_init(subkey(key, "up"), d_model, d_ff,
+                                     policy, dtype=dtype)
+    else:  # gelu
+        p["up"] = ternary_dense_init(subkey(key, "up"), d_model, d_ff,
+                                     policy, dtype=dtype)
+    p["down"] = ternary_dense_init(subkey(key, "down"), d_ff, d_model,
+                                   policy, dtype=dtype)
+    return p
+
+
+def mlp_specs(policy: TernaryPolicy, kind: str = "swiglu"):
+    s = {}
+    if kind == "swiglu":
+        s["gate"] = ternary_dense_specs(None, "ff", policy)
+        s["up"] = ternary_dense_specs(None, "ff", policy)
+    else:
+        s["up"] = ternary_dense_specs(None, "ff", policy)
+    s["down"] = ternary_dense_specs("ff", None, policy)
+    return s
+
+
+def mlp_apply(p, x, policy: TernaryPolicy, kind: str = "swiglu",
+              compute_dtype=jnp.bfloat16):
+    if kind == "swiglu":
+        g = ternary_dense_apply(p["gate"], x, policy, compute_dtype)
+        u = ternary_dense_apply(p["up"], x, policy, compute_dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    else:
+        u = ternary_dense_apply(p["up"], x, policy, compute_dtype)
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(compute_dtype)
+    return ternary_dense_apply(p["down"], h, policy, compute_dtype)

@@ -1,0 +1,89 @@
+"""Minimal functional module system.
+
+No flax here — layers are (init, apply, spec) function triples over plain
+nested-dict pytrees.  Two parallel trees per model:
+
+  params : nested dict of jnp arrays (or TernaryWeight leaves when served)
+  specs  : same structure, leaves are tuples of *logical axis names*
+           (one per tensor dim, None = replicated dim)
+
+``distrib.sharding`` maps logical names -> mesh axes -> PartitionSpec.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+Spec = Tuple[Optional[str], ...]
+
+
+def subkey(key: jax.Array, name: str) -> jax.Array:
+    """Deterministic named key derivation (stable across processes)."""
+    return jax.random.fold_in(key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, dtype=jnp.float32, stddev=0.02):
+    return (stddev * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def variance_scaling(key, shape, dtype=jnp.float32, fan_in_axes=(0,)):
+    fan_in = int(np.prod([shape[a] for a in fan_in_axes]))
+    std = (1.0 / max(fan_in, 1)) ** 0.5
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tree helpers
+# ---------------------------------------------------------------------------
+
+def param_count(params: Params) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(int(np.prod(l.shape)) for l in leaves if hasattr(l, "shape"))
+
+
+def param_bytes(params: Params) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(l.nbytes for l in leaves if hasattr(l, "nbytes"))
+
+
+def tree_cast(params: Params, dtype) -> Params:
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(cast, params)
+
+
+def stack_layers(layer_params: Sequence[Params]) -> Params:
+    """Stack per-layer param trees along a leading 'layers' axis (for
+    lax.scan over depth)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *layer_params)
+
+
+def prepend_axis(specs: Params, name: Optional[str] = None) -> Params:
+    """Prefix every spec leaf with a leading axis (the scan 'layers' dim)."""
+    def add(s):
+        if isinstance(s, tuple):
+            return (name,) + s
+        return s
+    return jax.tree_util.tree_map(
+        add, specs, is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts with top-k routing and capacity-bounded dispatch.
+
+Scatter/gather dispatch (GShard capacity discipline without the dense
+(T, E, C) one-hot): token assignments are scattered into per-expert
+buffers (E, C, d), experts run as one batched einsum over stacked expert
+weights, results gather back weighted by the router gates.  Tokens past
+an expert's capacity are dropped (standard GShard behaviour); aux losses
+(load-balance + router-z) are returned for training.
+
+Expert weights are TernaryWeight-compatible: in QAT mode the stacked
+(E, d, ff) master weights are fake-ternarized per expert; in serve mode
+codes are stored int8 (packing of stacked 3-D weights keeps the same 4x
+saving).  The router always stays full precision (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary as T
+from repro.nn.linear import TernaryPolicy
+from repro.nn.module import subkey, variance_scaling
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden dim
+    capacity_factor: float = 1.25
+    kind: str = "swiglu"
+    period: int = 1                # MoE every `period` layers
+    aux_loss_weight: float = 0.01
+    router_z_weight: float = 1e-3
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, policy: TernaryPolicy,
+             dtype=jnp.float32):
+    e, f = cfg.num_experts, cfg.d_ff
+    p = {"router": variance_scaling(subkey(key, "router"),
+                                    (d_model, e), dtype)}
+    def w(name, shape):
+        return variance_scaling(subkey(key, name), shape, dtype,
+                                fan_in_axes=(1,))
+    if cfg.kind == "swiglu":
+        p["gate"] = w("gate", (e, d_model, f))
+        p["up"] = w("up", (e, d_model, f))
+    else:
+        p["up"] = w("up", (e, d_model, f))
+    p["down"] = w("down", (e, f, d_model))
+    return p
+
+
+def moe_specs(cfg: MoEConfig, policy: TernaryPolicy):
+    s = {"router": (None, None)}
+    ws = ("experts", None, "expert_ff")
+    if cfg.kind == "swiglu":
+        s["gate"] = ws
+        s["up"] = ws
+    else:
+        s["up"] = ws
+    s["down"] = ("experts", "expert_ff", None)
+    return s
+
+
+def _maybe_fake_ternary(w, policy: TernaryPolicy,
+                        compute_dtype=jnp.bfloat16):
+    if not policy.enabled:
+        return w.astype(compute_dtype)
+    from repro.core.weights import TernaryWeight
+    if isinstance(w, TernaryWeight):
+        return None  # handled by caller
+    # cast before stats: FSDP gathers then move compute-dtype bytes
+    return T.fake_ternary(w.astype(compute_dtype), policy.encoding,
+                          axis=w.ndim - 2)
+
+
+def _expert_matmul(w, x_ecd, policy: TernaryPolicy, compute_dtype):
+    """x: (E, C, d_in) @ w: (E, d_in, d_out) -> (E, C, d_out)."""
+    from repro.core.weights import TernaryWeight
+    if isinstance(w, TernaryWeight):
+        # serve form: codes stacked (E, d_in, d_out) int8 (axis info in
+        # TernaryWeight is 2-D centric; stacked case stores raw codes)
+        wq = w.codes()
+        wreal = (jnp.where(wq > 0, w.scales.pos, w.scales.neg)
+                 * wq.astype(compute_dtype))
+        return jnp.einsum("ecd,edf->ecf", x_ecd.astype(compute_dtype),
+                          wreal.astype(compute_dtype))
+    wq = _maybe_fake_ternary(w, policy, compute_dtype)
+    return jnp.einsum("ecd,edf->ecf", x_ecd.astype(compute_dtype),
+                      wq.astype(compute_dtype))
+
+
+def moe_apply(p, x, cfg: MoEConfig, policy: TernaryPolicy,
+              compute_dtype=jnp.bfloat16,
+              capacity_override: Optional[int] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (..., d), aux_loss scalar)."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    n_tok = xt.shape[0]
+    e, k = cfg.num_experts, cfg.top_k
+
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = capacity_override or max(
+        1, int(cfg.capacity_factor * n_tok * k / e))
+
+    # position of each assignment within its expert's buffer
+    flat_expert = expert_idx.reshape(-1)                       # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)   # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)      # exclusive
+    pos = jnp.take_along_axis(pos_in_expert, flat_expert[:, None],
+                              axis=1)[:, 0]                    # (T*k,)
+    keep = pos < capacity
+    pos_c = jnp.where(keep, pos, capacity)  # overflow -> scratch slot
+
+    # scatter tokens into (E, C+1, d); slot C is the drop bucket
+    from repro.distrib.sharding import hint_constrain
+    src = jnp.repeat(xt, k, axis=0).astype(compute_dtype)      # (T*k, d)
+    buf = jnp.zeros((e, capacity + 1, d), compute_dtype)
+    buf = buf.at[flat_expert, pos_c].add(src)
+    # §Perf hint: keep dispatch buffers sharded (experts x capacity)
+    # instead of letting GSPMD replicate the scatter output
+    buf = hint_constrain(buf, ("experts", "moe_cap", None))
+
+    # expert FFN over (E, C+1, d)
+    if cfg.kind == "swiglu":
+        g = _expert_matmul(p["gate"], buf, policy, compute_dtype)
+        u = _expert_matmul(p["up"], buf, policy, compute_dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    else:
+        u = _expert_matmul(p["up"], buf, policy, compute_dtype)
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(compute_dtype)
+    h = hint_constrain(h, ("experts", "moe_cap", "expert_ff"))
+    out_buf = _expert_matmul(p["down"], h, policy, compute_dtype)
+    out_buf = hint_constrain(out_buf, ("experts", "moe_cap", None))
+
+    # gather back and combine with gates
+    gathered = out_buf[flat_expert, pos_c]                     # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    combined = (gathered.reshape(n_tok, k, d)
+                * gate_vals[..., None].astype(compute_dtype)).sum(axis=1)
+
+    # aux losses: load balance (Switch) + router z-loss
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_expert].add(
+        1.0 / (n_tok * k))
+    lb = e * jnp.sum(me * ce)
+    zl = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = cfg.aux_loss_weight * lb + cfg.router_z_weight * zl
+
+    return combined.reshape(lead + (d,)).astype(x.dtype), aux

@@ -1,0 +1,257 @@
+"""Mamba2 (SSD — state-space duality) mixer block.
+
+Implements the discrete SSD recurrence (Dao & Gu, arXiv:2405.21060):
+
+    h_t = exp(A * dt_t) h_{t-1} + dt_t * B_t x_t        (A scalar / head)
+    y_t = C_t^T h_t + D x_t
+
+computed in the chunked dual form: intra-chunk "attention-like" term with
+a lower-triangular decay kernel, plus inter-chunk state propagation via a
+lax.scan over chunk states.  O(S * Q) memory (Q = chunk), linear in S —
+this is what makes the long_500k shapes feasible.
+
+Projections (in/out/xBC/dt) are TernaryDense-able (the paper's VMMs); the
+recurrence itself stays full precision (see DESIGN.md §4 — the state path
+is not a VMM and TiM does not apply).
+
+Decode carries (conv_state, ssm_state) in the cache and costs O(1)/token.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.basic import rmsnorm_apply, rmsnorm_init, rmsnorm_specs
+from repro.nn.linear import (TernaryPolicy, ternary_dense_apply,
+                             ternary_dense_init, ternary_dense_specs)
+from repro.nn.module import subkey
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba_init(key, cfg: MambaConfig, policy: TernaryPolicy,
+               dtype=jnp.float32):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    p = {
+        "z_proj": ternary_dense_init(subkey(key, "z"), d, di, policy,
+                                     dtype=dtype),
+        "x_proj": ternary_dense_init(subkey(key, "x"), d, di, policy,
+                                     dtype=dtype),
+        "bc_proj": ternary_dense_init(subkey(key, "bc"), d, 2 * n, policy,
+                                      dtype=dtype),
+        "dt_proj": ternary_dense_init(subkey(key, "dt"), d, h, policy,
+                                      dtype=dtype),
+        "out_proj": ternary_dense_init(subkey(key, "o"), di, d, policy,
+                                       dtype=dtype),
+        "norm": rmsnorm_init(di, dtype),
+        "conv_w": 0.1 * jax.random.normal(
+            subkey(key, "conv"), (cfg.conv_width, di + 2 * n), dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "D": jnp.ones((h,), dtype),
+    }
+    # A in (-dt_max_decay, 0): init log-uniform in [1, 16] then negate
+    a = jnp.exp(jax.random.uniform(subkey(key, "A"), (h,), jnp.float32,
+                                   0.0, jnp.log(16.0)))
+    p["A_log"] = jnp.log(a).astype(dtype)
+    # dt bias: inverse-softplus of log-uniform dt in [dt_min, dt_max]
+    u = jax.random.uniform(subkey(key, "dt_b"), (h,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min))
+                  + jnp.log(cfg.dt_min))
+    p["dt_bias"] = (dt0 + jnp.log(-jnp.expm1(-dt0))).astype(dtype)
+    return p
+
+
+def mamba_specs(cfg: MambaConfig, policy: TernaryPolicy):
+    return {
+        "z_proj": ternary_dense_specs(None, "ssm_inner", policy),
+        "x_proj": ternary_dense_specs(None, "ssm_inner", policy),
+        "bc_proj": ternary_dense_specs(None, None, policy),
+        "dt_proj": ternary_dense_specs(None, "ssm_heads", policy),
+        "out_proj": ternary_dense_specs("ssm_inner", None, policy),
+        "norm": rmsnorm_specs(),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "D": ("ssm_heads",),
+        "A_log": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv as a sum of shifted taps.
+
+    x: (B, S, C); w: (W, C).  Returns (y, new_state) where state is the
+    trailing (W-1) inputs for streaming decode.
+    """
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    y = sum(xp[:, i:i + s] * w[i] for i in range(width))
+    new_state = xp[:, xp.shape[1] - (width - 1):]
+    return jax.nn.silu((y + b).astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable 'segment sum': out[..., i, j] = sum_{j<m<=i} a[..., m].
+
+    Returns -inf above the diagonal (future positions).  a: (..., Q).
+    """
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(xh: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, chunk: int,
+             h0: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    xh: (B, S, H, P) head inputs;  dt: (B, S, H) positive step sizes;
+    a:  (H,) negative decay rates; b, c: (B, S, N) shared across heads
+    (ngroups=1).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bs, s, nh, hp = xh.shape
+    n = b.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    sp = xh.shape[1]
+    nc = sp // chunk
+
+    f32 = jnp.float32
+    xd = (xh.astype(f32) * dt.astype(f32)[..., None])       # dt-discretized
+    xd = xd.reshape(bs, nc, chunk, nh, hp)
+    adt = (a.astype(f32) * dt.astype(f32)).reshape(bs, nc, chunk, nh)
+    bc_ = b.astype(f32).reshape(bs, nc, chunk, n)
+    cc_ = c.astype(f32).reshape(bs, nc, chunk, n)
+
+    # intra-chunk (diagonal blocks): y_intra[l] = sum_{m<=l} C_l·B_m
+    #   * exp(sum_{m<j<=l} adt_j) * xd_m
+    L = jnp.exp(_segsum(jnp.moveaxis(adt, -1, -2)))          # (b,nc,h,Q,Q)
+    cb = jnp.einsum("bcln,bcmn->bclm", cc_, bc_)             # (b,nc,Q,Q)
+    y_intra = jnp.einsum("bclm,bchlm,bcmhp->bclhp", cb, L, xd)
+
+    # chunk summary states: S_c = sum_m exp(sum_{m<j<=Q} adt_j) B_m xd_m
+    adt_cum = jnp.cumsum(adt, axis=2)                        # (b,nc,Q,h)
+    decay_to_end = jnp.exp(adt_cum[:, :, -1:, :] - adt_cum)  # (b,nc,Q,h)
+    states = jnp.einsum("bcmn,bcmh,bcmhp->bchpn", bc_, decay_to_end, xd)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(adt_cum[:, :, -1, :])              # (b,nc,h)
+
+    def step(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((bs, nh, hp, n), f32)
+    h_fin, h_prev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                      # (b,nc,h,p,n)
+
+    # contribution of carried state to each position in the chunk
+    state_decay = jnp.exp(adt_cum)                           # (b,nc,Q,h)
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", cc_, state_decay, h_prev)
+
+    y = (y_intra + y_inter).reshape(bs, sp, nh, hp)[:, :s]
+    return y.astype(xh.dtype), h_fin
+
+
+def ssd_decode_step(x1: jax.Array, dt1: jax.Array, a: jax.Array,
+                    b1: jax.Array, c1: jax.Array, h: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD update.  x1: (B,H,P), dt1: (B,H), b1/c1: (B,N),
+    h: (B,H,P,N) -> (y (B,H,P), h_new)."""
+    f32 = jnp.float32
+    dec = jnp.exp(a.astype(f32) * dt1.astype(f32))           # (B,H)
+    upd = jnp.einsum("bn,bhp->bhpn", b1.astype(f32),
+                     x1.astype(f32) * dt1.astype(f32)[..., None])
+    h_new = h * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c1.astype(f32))
+    return y.astype(x1.dtype), h_new
+
+
+def mamba_apply(p, x, cfg: MambaConfig, policy: TernaryPolicy,
+                compute_dtype=jnp.bfloat16,
+                cache: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """Full mamba2 block.  cache (decode): {'conv': (B,W-1,C), 'ssm':
+    (B,H,P,N)}; pass None for training/prefill-from-scratch."""
+    bsz, s, _ = x.shape
+    di, n, nh, hp = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+
+    z = ternary_dense_apply(p["z_proj"], x, policy, compute_dtype)
+    xi = ternary_dense_apply(p["x_proj"], x, policy, compute_dtype)
+    bc = ternary_dense_apply(p["bc_proj"], x, policy, compute_dtype)
+    dt = ternary_dense_apply(p["dt_proj"], x, policy, compute_dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+
+    conv_in = jnp.concatenate([xi, bc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"].astype(
+        compute_dtype), p["conv_b"].astype(compute_dtype), conv_state)
+    xi, bc = conv_out[..., :di], conv_out[..., di:]
+    b_, c_ = bc[..., :n], bc[..., n:]
+    xh = xi.reshape(bsz, s, nh, hp)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is not None and s == 1:
+        y1, h_new = ssd_decode_step(xh[:, 0], dt[:, 0], a, b_[:, 0],
+                                    c_[:, 0], cache["ssm"])
+        y = y1[:, None]
+    else:
+        h0 = cache["ssm"] if cache is not None else None
+        y, h_new = ssd_scan(xh, dt, a, b_, c_, cfg.chunk, h0)
+
+    y = y + xh.astype(y.dtype) * p["D"].astype(y.dtype)[:, None]
+    y = y.reshape(bsz, s, di)
+    y = rmsnorm_apply(p["norm"], y)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = ternary_dense_apply(p["out_proj"], y, policy, compute_dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": h_new}
+    return out, new_cache
+
+
+def mamba_init_cache(cfg: MambaConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.d_state), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                         jnp.float32),
+    }

@@ -1,0 +1,1 @@
+"""Serving substrate: ternarized-weight engine, KV caches, continuous batching."""

@@ -1,0 +1,293 @@
+"""Serving engine: ternarized weights, batched prefill/decode, scheduler.
+
+``ternarize_model`` converts trained (or random) master weights into
+TiM serving form — every TernaryDense weight becomes int8 codes (+
+optional 2-bit packing), exactly what the paper's tiles store.  The
+engine then runs:
+
+  prefill_step : (tokens, caches) -> (next_token_logits, caches)
+  decode_step  : one token/seq against the caches (this is what the
+                 decode_32k / long_500k dry-run shapes lower)
+
+The BatchScheduler implements slot-based continuous batching: requests
+occupy cache slots, finished slots are refilled without stalling the
+running batch (the standard serving discipline, single-host version).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
+from repro.nn.linear import TernaryPolicy, ternarize_dense_params
+from repro.nn.module import subkey
+
+
+# ---------------------------------------------------------------------------
+# weight conversion (QAT/fp32 master -> TiM codes)
+# ---------------------------------------------------------------------------
+
+_TERNARY_LAYER_KEYS = {"q", "k", "v", "o", "gate", "up", "down", "z_proj",
+                       "x_proj", "bc_proj", "dt_proj", "out_proj"}
+
+
+def ternarize_model(params: Dict[str, Any], cfg: ArchConfig
+                    ) -> Dict[str, Any]:
+    """Walk the param tree; convert every ternary-dense subtree into
+    serving codes.  MoE expert stacks ternarize per expert (axis 1 is
+    the contraction dim of each (E, d_in, d_out) stack)."""
+    pol = cfg.ternary
+    if not pol.enabled:
+        return params
+
+    def convert(tree, path=()):
+        if isinstance(tree, dict):
+            if "w" in tree and hasattr(tree["w"], "ndim") \
+                    and tree["w"].ndim >= 2 \
+                    and (path and path[-1] in _TERNARY_LAYER_KEYS):
+                new = dict(tree)
+                new["w"] = _ternarize_stack(tree["w"], pol)
+                new.pop("wp", None)  # learned TTQ scales folded below
+                new.pop("wn", None)
+                if "wp" in tree:
+                    from repro.core.ternary import TernaryScales, ternarize
+                    # per-layer threshold (match QAT, which quantizes
+                    # each scan-sliced (K, N) with a per-tensor stat):
+                    # reduce over the last two dims of the stack
+                    w_ = tree["w"].astype(jnp.bfloat16)
+                    q, _ = ternarize(w_, "unweighted",
+                                     axis=(w_.ndim - 2, w_.ndim - 1))
+                    new["w"] = _pack_maybe(
+                        q, TernaryScales(jnp.abs(tree["wp"]),
+                                         jnp.abs(tree["wn"]), False),
+                        tree["w"].shape[-2], pol)
+                return new
+            return {k: convert(v, path + (k,)) for k, v in tree.items()}
+        return tree
+
+    out = convert(params)
+
+    # MoE expert stacks: (E, d_in, d_out) leaves named gate/up/down under
+    # an 'ffn' that has a router
+    def convert_moe(tree):
+        if isinstance(tree, dict):
+            if "router" in tree:
+                new = dict(tree)
+                for k in ("gate", "up", "down"):
+                    if k in tree and hasattr(tree[k], "ndim") \
+                            and tree[k].ndim >= 3:
+                        new[k] = _ternarize_stack(tree[k], pol)
+                return new
+            return {k: convert_moe(v) for k, v in tree.items()}
+        return tree
+
+    return convert_moe(out)
+
+
+def _ternarize_stack(w, pol: TernaryPolicy):
+    """(Possibly stacked) weights (..., d_in, d_out) -> TernaryWeight
+    with per-(stack, out_channel) scales; optional 2-bit packing.
+
+    Stats are computed on the bf16-cast master — the SAME view the QAT
+    forward pass quantizes (nn/linear._quantize_master) — so serving
+    codes match training bit-for-bit.
+    """
+    import jax.numpy as jnp
+    from repro.core.ternary import ternarize
+    q, scales = ternarize(w.astype(jnp.bfloat16), pol.encoding,
+                          axis=w.ndim - 2)
+    return _pack_maybe(q, scales, w.shape[-2], pol)
+
+
+def _pack_maybe(q, scales, k_dim: int, pol: TernaryPolicy):
+    from repro.core.packing import CODES_PER_BYTE, pack2b
+    from repro.core.weights import TernaryWeight
+    if not pol.pack:
+        return TernaryWeight(q, scales, False, k_dim)
+    ax = q.ndim - 2
+    pad = (-k_dim) % CODES_PER_BYTE
+    if pad:
+        widths = [(0, 0)] * q.ndim
+        widths[ax] = (0, pad)
+        q = jnp.pad(q, widths)
+    return TernaryWeight(pack2b(q, axis=ax), scales, True, k_dim)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch, caches):
+        b = next(iter(batch.values())).shape[0]
+        hidden, caches, _ = tfm.forward(
+            params, cfg, batch, mode="prefill", caches=caches,
+            cache_len=jnp.zeros((b,), jnp.int32))
+        lg = tfm.logits(params, cfg, hidden[:, -1:])
+        return lg[:, 0], caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, batch, caches, cache_len):
+        hidden, caches, _ = tfm.forward(
+            params, cfg, batch, mode="decode", caches=caches,
+            cache_len=cache_len)
+        lg = tfm.logits(params, cfg, hidden[:, -1:])
+        return lg[:, 0], caches
+    return decode_step
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_token(logits: jax.Array, key, temperature: float = 1.0
+                 ) -> jax.Array:
+    if temperature <= 0:
+        return greedy_token(logits)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (len,) int32
+    max_new_tokens: int
+    media: Optional[np.ndarray] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-based continuous batching over a fixed-size decode batch."""
+
+    def __init__(self, params, cfg: ArchConfig, batch_slots: int,
+                 max_len: int, greedy: bool = True, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+
+        self.caches = tfm.init_caches(cfg, batch_slots, max_len)
+        self.cache_len = jnp.zeros((batch_slots,), jnp.int32)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+
+        self._decode = jax.jit(make_decode_step(cfg),
+                               donate_argnums=(2,))
+        # per-slot prefill (batch=1) keeps arbitrary prompt lengths jit-
+        # friendly via bucketing to powers of two
+        self._prefill_cache = {}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            cfg = self.cfg
+
+            def fn(params, batch, caches, slot_caches_len):
+                hidden, new_caches, _ = tfm.forward(
+                    params, cfg, batch, mode="prefill", caches=caches,
+                    cache_len=jnp.zeros((1,), jnp.int32))
+                lg = tfm.logits(params, cfg, hidden[:, -1:])
+                return lg[:, 0], new_caches
+
+            self._prefill_cache[plen] = jax.jit(fn)
+        return self._prefill_cache[plen]
+
+    def _bucket(self, n: int) -> int:
+        b = 16
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            bucket = self._bucket(plen)
+            prompt = np.zeros((1, bucket), np.int32)
+            prompt[0, :plen] = req.prompt
+            batch = {"tokens": jnp.asarray(prompt)}
+            if req.media is not None:
+                batch["media"] = jnp.asarray(req.media[None])
+            # prefill into a fresh single-slot cache then splice into the
+            # batch cache at this slot
+            mini = tfm.init_caches(self.cfg, 1, self.max_len)
+            lg, mini = self._prefill_fn(bucket)(
+                self.params, batch, mini, None)
+            # account for bucket padding: valid length is plen
+            self.caches = jax.tree_util.tree_map(
+                lambda big, small: big.at[:, slot].set(small[:, 0]),
+                self.caches, mini)
+            self.cache_len = self.cache_len.at[slot].set(plen)
+            tok = int(greedy_token(lg[0, None])[0]) if self.greedy else \
+                int(sample_token(lg[0, None], self._next_key())[0])
+            req.out_tokens.append(tok)
+            self.slot_req[slot] = req
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def _active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def step(self):
+        """One engine iteration: admit -> decode all active slots."""
+        self._admit()
+        active = self._active_slots()
+        if not active:
+            return
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slot_req[i].out_tokens[-1]
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.n_media_tokens:
+            media = np.zeros((self.slots, self.cfg.n_media_tokens,
+                              self.cfg.media_dim), np.float32)
+            for i in active:
+                if self.slot_req[i].media is not None:
+                    media[i] = self.slot_req[i].media
+            batch["media"] = jnp.asarray(media)
+        lg, self.caches = self._decode(self.params, batch, self.caches,
+                                       self.cache_len)
+        self.cache_len = self.cache_len + jnp.asarray(
+            [1 if self.slot_req[i] is not None else 0
+             for i in range(self.slots)], jnp.int32)
+        toks = (greedy_token(lg) if self.greedy
+                else sample_token(lg, self._next_key()))
+        toks = np.asarray(toks)
+        for i in active:
+            req = self.slot_req[i]
+            req.out_tokens.append(int(toks[i]))
+            if len(req.out_tokens) >= req.max_new_tokens or \
+                    int(self.cache_len[i]) >= self.max_len - 1:
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[i] = None
+
+    def run_until_done(self, max_iters: int = 10000):
+        it = 0
+        while (self.queue or self._active_slots()) and it < max_iters:
+            self.step()
+            it += 1
+        return self.finished

@@ -1,0 +1,1 @@
+"""Architectural simulator calibrated to the paper's SPICE/RTL numbers."""

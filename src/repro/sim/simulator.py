@@ -1,0 +1,169 @@
+"""Architectural simulator: maps workloads onto TiM-DNN (or the
+near-memory baseline) and produces latency / energy / inference-rate,
+reproducing the paper's §V evaluation.
+
+Execution model (faithful to §III-C/D):
+
+  * a layer VMM (K x N) decomposes into ceil(K/16) block accesses x
+    ceil(N/256) column chunks; act_bits > 1 multiplies accesses
+    (bit-serial);
+  * TiM tile: one block access per 2.3 ns; baseline tile: 16 rows x
+    1.7 ns per block (row-by-row reads);
+  * tiles run in parallel with ideal load balance (the paper's mapper
+    replicates/partitions to that end);
+  * temporal mapping (CNNs): weights stream from DRAM each layer
+    (write rows + HBM bytes); spatial (RNNs): weights resident,
+    recurrent dependency serializes tokens, SFU adds per-token time;
+  * energy: per-access tile energy (sparsity-dependent BL term) +
+    programming writes + DRAM + buffers + RU/SFU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.sim import hwmodel as hw
+from repro.sim.workloads import Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    name: str
+    n_tiles: int
+    is_tim: bool
+    rows_per_access: int = 16     # TiM-8 => 8
+
+    @property
+    def block_latency_ns(self) -> float:
+        if self.is_tim:
+            return (16 // self.rows_per_access) * hw.TIM_ACCESS_NS
+        return 16 * hw.SRAM_ROW_NS
+
+    def block_energy_pj(self, sparsity: float, act_bits: int) -> float:
+        if self.is_tim:
+            var = hw.TIM16 if self.rows_per_access == 16 else hw.TIM8
+            return hw.kernel_energy_pj(var, sparsity, act_bits)
+        return hw.kernel_energy_baseline_pj(act_bits)
+
+
+TIM_DNN = DesignPoint("TiM-DNN", hw.N_TILES, True)
+TIM_DNN_8 = DesignPoint("TiM-DNN (TiM-8)", hw.N_TILES, True, 8)
+ISO_AREA = DesignPoint("near-mem iso-area", hw.N_BASE_TILES_ISO_AREA, False)
+ISO_CAP = DesignPoint("near-mem iso-capacity", hw.N_BASE_TILES_ISO_CAP,
+                      False)
+
+TILE_WORDS = hw.TILE_ROWS * hw.TILE_COLS
+TWC_WORDS = hw.N_TILES * TILE_WORDS          # 2M ternary words (paper)
+
+
+def _layer_accesses(k: int, n: int, repeats: int, act_bits: int) -> int:
+    return math.ceil(k / 16) * math.ceil(n / 256) * repeats * act_bits
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    design: str
+    mac_time_us: float
+    non_mac_time_us: float
+    program_time_us: float
+    total_time_us: float
+    inference_per_s: float
+    energy_uj: float
+    energy_parts: Dict[str, float]
+
+
+def simulate(w: Workload, d: DesignPoint,
+             output_sparsity: float = 0.5) -> SimResult:
+    total_accesses = sum(
+        _layer_accesses(l.k, l.n, l.repeats, w.act_bits) for l in w.layers)
+    # compute time: load balance across tiles degraded by the mapping
+    # efficiency (partial blocks, inter-layer pipeline bubbles)
+    mac_ns = total_accesses * d.block_latency_ns / (
+        d.n_tiles * w.mapping_efficiency)
+
+    # RNN recurrence serializes tokens: each token's chain is the
+    # per-token accesses of ONE tile pipeline + SFU latency
+    if w.kind == "rnn":
+        per_tok = sum(_layer_accesses(l.k, l.n, 1, w.act_bits)
+                      for l in w.layers)
+        # weights resident and spread over all tiles; the critical path
+        # is the deepest single-tile chain
+        chain = math.ceil(per_tok / d.n_tiles) * d.block_latency_ns
+        # gate nonlinearities on 20 SPEs.  NOTE (documented deviation):
+        # the paper's Fig-12 RNN speedups (5.1-7.7x) and its absolute
+        # 2e6 inf/s cannot be produced by one consistent per-token
+        # model — matching the speedups requires a ~60 ns non-MAC path,
+        # which yields ~8M tokens/s.  We calibrate to the *speedup
+        # ratios* (the headline claim) and report the absolute-rate
+        # overshoot explicitly in EXPERIMENTS.md.
+        sfu_ns = 60.0
+        mac_ns = max(mac_ns, chain) + sfu_ns
+
+    # programming (temporal mapping: weights streamed once per batch)
+    prog_ns = 0.0
+    dram_bytes = 0.0
+    if w.mapping == "temporal":
+        rows = w.weight_words / 256
+        prog_ns = rows * hw.WRITE_ROW_NS / d.n_tiles
+        dram_bytes = w.weight_words / 4  # 2-bit packed stream
+        prog_ns = max(prog_ns, dram_bytes / hw.HBM_GBPS)  # GB/s = B/ns
+        prog_ns /= max(w.batch, 1)
+        dram_bytes /= max(w.batch, 1)
+
+    # non-MAC ops run on the same SFU in all designs: equal absolute time
+    # (computed off the iso-capacity baseline so speedups show Amdahl)
+    base_mac_ns = total_accesses * ISO_CAP.block_latency_ns / (
+        ISO_CAP.n_tiles * w.mapping_efficiency)
+    non_mac_ns = w.non_mac_fraction * base_mac_ns / (1 - w.non_mac_fraction)
+
+    total_ns = mac_ns + non_mac_ns + prog_ns
+
+    # --- energy --------------------------------------------------------------
+    # act_bits is already inside total_accesses, so energy uses the
+    # single-access cost here
+    e_mac = total_accesses * d.block_energy_pj(output_sparsity, 1)
+    e_mac_tim_ref = total_accesses * TIM_DNN.block_energy_pj(
+        output_sparsity, 1)
+    e_prog = ((w.weight_words / 256) * 25.0 / max(w.batch, 1)
+              if w.mapping == "temporal" else 0)
+    e_dram = dram_bytes * hw.DRAM_PJ_PER_BYTE
+    act_bytes = sum(l.k * l.repeats for l in w.layers) * w.act_bits / 8 + \
+        sum(l.n * l.repeats for l in w.layers) * 2
+    e_buf = act_bytes * hw.BUFFER_PJ_PER_BYTE * 2
+    # SFU/RU cost is design-independent (same units in both): anchor on
+    # the TiM MAC energy so the ratio is not design-dependent
+    e_sfu = (0.15 if w.kind == "rnn" else 0.35) * e_mac_tim_ref
+    parts = {"MAC-Ops": e_mac / 1e6, "programming": e_prog / 1e6,
+             "DRAM": e_dram / 1e6, "buffers": e_buf / 1e6,
+             "RU+SFU": e_sfu / 1e6}
+    energy_uj = sum(parts.values())
+
+    return SimResult(
+        name=w.name, design=d.name,
+        mac_time_us=mac_ns / 1e3,
+        non_mac_time_us=non_mac_ns / 1e3,
+        program_time_us=prog_ns / 1e3,
+        total_time_us=total_ns / 1e3,
+        inference_per_s=1e9 / total_ns,
+        energy_uj=energy_uj,
+        energy_parts=parts,
+    )
+
+
+def speedup_table(workloads) -> Dict[str, Dict[str, float]]:
+    """Fig. 12: TiM speedup over iso-capacity / iso-area baselines."""
+    out = {}
+    for w in workloads:
+        tim = simulate(w, TIM_DNN)
+        cap = simulate(w, ISO_CAP)
+        area = simulate(w, ISO_AREA)
+        out[w.name] = {
+            "tim_inf_per_s": tim.inference_per_s,
+            "speedup_vs_iso_capacity": cap.total_time_us / tim.total_time_us,
+            "speedup_vs_iso_area": area.total_time_us / tim.total_time_us,
+            "energy_gain_vs_iso_area": (
+                simulate(w, ISO_AREA).energy_uj / tim.energy_uj),
+        }
+    return out

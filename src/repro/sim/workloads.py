@@ -1,0 +1,141 @@
+"""The paper's benchmark suite (Table III) as layer-dimension workloads.
+
+Each network is a list of VMM layers (K = fan-in, N = fan-out,
+repeats = spatial positions / time steps per inference).  Dims follow
+the standard architectures; CNNs use [2-bit A, ternary W] (WRPN), RNNs
+[T, T] (HitNet) — act_bits drives the bit-serial access count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class VMMLayer:
+    name: str
+    k: int           # fan-in (rows)
+    n: int           # fan-out (cols)
+    repeats: int     # VMMs per inference (spatial positions / timesteps)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    kind: str            # cnn | rnn
+    act_bits: int        # 2 for WRPN CNNs, 1 for ternary RNN activations
+    layers: Tuple[VMMLayer, ...]
+    mapping: str         # temporal | spatial
+    non_mac_fraction: float  # runtime share of ReLU/pool/norm etc (SFU)
+    mapping_efficiency: float = 1.0  # load-balance/pipeline-bubble factor
+    batch: int = 1       # inferences amortizing one weight stream
+
+    @property
+    def macs(self) -> int:
+        return sum(l.k * l.n * l.repeats for l in self.layers)
+
+    @property
+    def weight_words(self) -> int:
+        return sum(l.k * l.n for l in self.layers)
+
+
+def _conv(name, cin, k, cout, out_hw):
+    return VMMLayer(name, cin * k * k, cout, out_hw * out_hw)
+
+
+ALEXNET = Workload(
+    "AlexNet", "cnn", act_bits=2, mapping="temporal",
+    non_mac_fraction=0.06, mapping_efficiency=0.75, batch=64,
+    layers=(
+        _conv("conv1", 3, 11, 96, 55),
+        _conv("conv2", 96, 5, 256, 27),
+        _conv("conv3", 256, 3, 384, 13),
+        _conv("conv4", 384, 3, 384, 13),
+        _conv("conv5", 384, 3, 256, 13),
+        VMMLayer("fc6", 9216, 4096, 1),
+        VMMLayer("fc7", 4096, 4096, 1),
+        VMMLayer("fc8", 4096, 1000, 1),
+    ))
+
+def _res_block(name, cin, cout, hw, stride=1):
+    return (
+        _conv(f"{name}a", cin, 3, cout, hw),
+        _conv(f"{name}b", cout, 3, cout, hw),
+    )
+
+_RES34 = [
+    _conv("conv1", 3, 7, 64, 112),
+]
+for i in range(3):
+    _RES34 += list(_res_block(f"l1.{i}", 64, 64, 56))
+_RES34 += list(_res_block("l2.0", 64, 128, 28))
+for i in range(1, 4):
+    _RES34 += list(_res_block(f"l2.{i}", 128, 128, 28))
+_RES34 += list(_res_block("l3.0", 128, 256, 14))
+for i in range(1, 6):
+    _RES34 += list(_res_block(f"l3.{i}", 256, 256, 14))
+_RES34 += list(_res_block("l4.0", 256, 512, 7))
+for i in range(1, 3):
+    _RES34 += list(_res_block(f"l4.{i}", 512, 512, 7))
+_RES34.append(VMMLayer("fc", 512, 1000, 1))
+
+RESNET34 = Workload("ResNet-34", "cnn", act_bits=2, mapping="temporal",
+                    non_mac_fraction=0.08, mapping_efficiency=0.5,
+                    batch=64, layers=tuple(_RES34))
+
+# Inception-v1 (GoogLeNet) approximated by its 9 inception modules'
+# dominant convolutions + stem + fc
+_INC = [
+    _conv("stem1", 3, 7, 64, 112),
+    _conv("stem2", 64, 3, 192, 56),
+]
+_inc_cfg = [
+    (192, 28), (256, 28), (480, 14), (512, 14), (512, 14), (512, 14),
+    (528, 14), (832, 7), (832, 7),
+]
+for i, (cin, hw) in enumerate(_inc_cfg):
+    _INC += [
+        _conv(f"inc{i}.1x1", cin, 1, cin // 2, hw),
+        _conv(f"inc{i}.3x3", cin // 2, 3, cin // 2, hw),
+        _conv(f"inc{i}.5x5", cin // 8, 5, cin // 4, hw),
+    ]
+_INC.append(VMMLayer("fc", 1024, 1000, 1))
+INCEPTION = Workload("Inception", "cnn", act_bits=2, mapping="temporal",
+                     non_mac_fraction=0.10, mapping_efficiency=0.5,
+                     batch=64, layers=tuple(_INC))
+
+# HitNet-style PTB RNNs.  The paper says the RNNs "fit on TiM-DNN
+# entirely" (2 M ternary-word capacity), which bounds hidden size at
+# ~512 with x- and h-gate matrices resident (the vocab softmax runs
+# off-accelerator).  One "inference" = one token step (their 2e6
+# inf/s figure is only reachable per-token).
+_H = 512
+LSTM = Workload(
+    "LSTM", "rnn", act_bits=1, mapping="spatial", non_mac_fraction=0.20,
+    layers=(
+        VMMLayer("gates_x", _H, 4 * _H, 1),
+        VMMLayer("gates_h", _H, 4 * _H, 1),
+    ))
+GRU = Workload(
+    "GRU", "rnn", act_bits=1, mapping="spatial", non_mac_fraction=0.20,
+    layers=(
+        VMMLayer("gates_x", _H, 3 * _H, 1),
+        VMMLayer("gates_h", _H, 3 * _H, 1),
+    ))
+
+WORKLOADS = {w.name: w for w in
+             (ALEXNET, RESNET34, INCEPTION, LSTM, GRU)}
+
+# Accuracy table (Table III — reported, for the report readout)
+TABLE_III = {
+    "AlexNet":   {"fp32": 56.5,  "ternary": 55.8,  "metric": "top-1 %",
+                  "precision": "[2,T]", "method": "WRPN"},
+    "ResNet-34": {"fp32": 73.59, "ternary": 73.32, "metric": "top-1 %",
+                  "precision": "[2,T]", "method": "WRPN"},
+    "Inception": {"fp32": 71.64, "ternary": 70.75, "metric": "top-1 %",
+                  "precision": "[2,T]", "method": "WRPN"},
+    "LSTM":      {"fp32": 97.2,  "ternary": 110.3, "metric": "PPW",
+                  "precision": "[T,T]", "method": "HitNet"},
+    "GRU":       {"fp32": 102.7, "ternary": 113.5, "metric": "PPW",
+                  "precision": "[T,T]", "method": "HitNet"},
+}

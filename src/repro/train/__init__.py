@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, trainer loop, checkpointing, data,
+fault tolerance."""

@@ -1,0 +1,92 @@
+"""Deterministic synthetic data pipeline.
+
+Every batch is a pure function of (seed, step, shard) — the property
+fault tolerance relies on: after restart-from-checkpoint the pipeline
+resumes at exactly the right sample with no state file, and elastic
+re-sharding (different DP size) re-partitions the same global stream.
+
+The synthetic LM stream is a Zipf-ish token mixture with planted n-gram
+structure so losses actually go down during the example runs (pure
+uniform noise would pin CE at ln(V)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 1234
+    vocab_size: int = 256
+    seq_len: int = 128
+    global_batch: int = 8
+    kind: str = "lm"        # lm | frames (audio) | vlm
+
+
+def _fold(key, *vals):
+    for v in vals:
+        key = jax.random.fold_in(key, v)
+    return key
+
+
+def synthetic_lm_batch(cfg: DataConfig, step: int,
+                       shard: int = 0, num_shards: int = 1
+                       ) -> Dict[str, jax.Array]:
+    """Batch for this step/shard.  Planted structure: a *fixed* (per
+    seed) affine Markov chain `next = a*tok + b (mod V)` with 5% noise —
+    a 1-layer model learns it in tens of steps, so example training
+    runs show real loss curves (CE floor ~= 0.05 * ln V)."""
+    assert cfg.global_batch % num_shards == 0
+    b = cfg.global_batch // num_shards
+    v = cfg.vocab_size
+    chain_key = jax.random.PRNGKey(cfg.seed)
+    # odd multiplier => bijective map mod any V
+    a = int(jax.random.randint(chain_key, (), 1, max(v // 2, 2))) * 2 + 1
+    off = int(jax.random.randint(_fold(chain_key, 1), (), 0, v))
+
+    key = _fold(jax.random.PRNGKey(cfg.seed), step, shard)
+    k1, k2, k3 = jax.random.split(key, 3)
+    start = jax.random.randint(k1, (b, 1), 0, v)
+    seq = [start]
+    for _ in range(cfg.seq_len):
+        seq.append((seq[-1] * a + off) % v)
+    seq = jnp.concatenate(seq, axis=1)               # (b, S+1)
+    noise = jax.random.bernoulli(k2, 0.05, seq.shape)
+    rand_tok = jax.random.randint(k3, seq.shape, 0, v)
+    seq = jnp.where(noise, rand_tok, seq)
+    return {
+        "tokens": seq[:, :-1],
+        "labels": seq[:, 1:],
+        "mask": jnp.ones((b, cfg.seq_len), jnp.float32),
+    }
+
+
+def synthetic_frames_batch(cfg: DataConfig, step: int, frontend_dim: int,
+                           shard: int = 0, num_shards: int = 1
+                           ) -> Dict[str, jax.Array]:
+    b = cfg.global_batch // num_shards
+    key = _fold(jax.random.PRNGKey(cfg.seed), step, shard, 7)
+    k1, k2 = jax.random.split(key)
+    frames = jax.random.normal(k1, (b, cfg.seq_len, frontend_dim))
+    labels = jax.random.randint(k2, (b, cfg.seq_len), 0, cfg.vocab_size)
+    return {"frames": frames, "labels": labels,
+            "mask": jnp.ones((b, cfg.seq_len), jnp.float32)}
+
+
+def make_batch(cfg: DataConfig, arch_cfg, step: int,
+               shard: int = 0, num_shards: int = 1) -> Dict[str, jax.Array]:
+    if arch_cfg.frontend_dim:
+        return synthetic_frames_batch(cfg, step, arch_cfg.frontend_dim,
+                                      shard, num_shards)
+    batch = synthetic_lm_batch(cfg, step, shard, num_shards)
+    if arch_cfg.n_media_tokens:
+        key = _fold(jax.random.PRNGKey(cfg.seed), step, shard, 11)
+        b = cfg.global_batch // num_shards
+        batch["media"] = jax.random.normal(
+            key, (b, arch_cfg.n_media_tokens, arch_cfg.media_dim))
+    return batch

@@ -1,0 +1,147 @@
+"""Optimizers: AdamW (with optional ZeRO state sharding) + SGD-momentum.
+
+No optax in this environment — implemented directly over param pytrees.
+TTQ scale parameters (wp/wn leaves) train like any other leaf; the
+QAT STE in nn/linear.py routes their gradients.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # leaves whose path contains one of these substrings skip decay
+    no_decay: Tuple[str, ...] = ("scale", "bias", "b", "A_log", "dt_bias",
+                                 "D", "wp", "wn", "gate_attn", "gate_ffn")
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/".join(out)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), norm
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def adamw_update(cfg: OptConfig, params, grads, state, lr_t):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    flat_p, tree = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        gf = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        name = _path_str(path).split("/")[-1]
+        if cfg.weight_decay and name not in cfg.no_decay:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new = p.astype(jnp.float32) - lr_t * update
+        new_p.append(new.astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+
+    unf = jax.tree_util.tree_structure(params).unflatten
+    return unf(new_p), {"step": step, "m": unf(new_m), "v": unf(new_v)}
+
+
+def sgdm_init(params):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mom": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def sgdm_update(cfg: OptConfig, params, grads, state, lr_t,
+                momentum: float = 0.9):
+    def upd(p, g, m):
+        m2 = momentum * m + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * m2).astype(p.dtype), m2
+
+    pairs = jax.tree_util.tree_map(upd, params, grads, state["mom"])
+    new_p = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"step": state["step"] + 1, "mom": new_m}
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.name == "adamw":
+        return adamw_init, lambda p, g, s, lr: adamw_update(cfg, p, g, s, lr)
+    if cfg.name == "sgdm":
+        return sgdm_init, lambda p, g, s, lr: sgdm_update(cfg, p, g, s, lr)
+    raise ValueError(cfg.name)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_ratio: float = 0.1
+    kind: str = "cosine"   # cosine | linear | constant
+
+
+def lr_at(cfg: ScheduleConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = cfg.peak_lr * jnp.minimum(1.0, s / max(cfg.warmup_steps, 1))
+    if cfg.kind == "constant":
+        return warm
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.kind == "linear":
+        decay = 1.0 - (1.0 - cfg.min_ratio) * frac
+    else:
+        decay = cfg.min_ratio + 0.5 * (1 - cfg.min_ratio) * (
+            1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(s < cfg.warmup_steps, warm, cfg.peak_lr * decay)

@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device CPU semantics (the dry-run alone uses the
+# 512-device host-platform trick, inside its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

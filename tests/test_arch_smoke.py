@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step
+on CPU, asserting output shapes and finiteness (no NaNs).
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct,
+no allocation) — see launch/dryrun.py and tests/test_dryrun_fast.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import transformer as tfm
+from repro.models.losses import lm_loss
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg, key, b=B, s=S):
+    batch = {}
+    if cfg.frontend_dim:
+        batch["frames"] = jax.random.normal(key, (b, s, cfg.frontend_dim))
+    else:
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    if cfg.n_media_tokens:
+        batch["media"] = jax.random.normal(
+            key, (b, cfg.n_media_tokens, cfg.media_dim))
+    batch["labels"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(name):
+    cfg = get_config(name, smoke=True)
+    params = tfm.init(cfg, KEY)
+    batch = _batch(cfg, KEY)
+    h, caches, aux = tfm.forward(params, cfg, batch, mode="train")
+    assert h.shape == (B, S, cfg.d_model)
+    assert caches is None
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+    lg = tfm.logits(params, cfg, h[:, -1:])
+    assert lg.shape == (B, 1, cfg.vocab_padded)
+    # pad-vocab logits are masked to -inf
+    if cfg.vocab_padded != cfg.vocab_size:
+        assert float(lg[..., cfg.vocab_size:].max()) < -1e20
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_gradients(name):
+    cfg = get_config(name, smoke=True)
+    params = tfm.init(cfg, KEY)
+    batch = _batch(cfg, KEY)
+
+    def loss_fn(p):
+        loss, _ = lm_loss(p, cfg, batch)
+        return loss
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in flat)
+    # QAT: master weights receive nonzero gradient through the STE
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2)) for g in flat)
+    assert gnorm > 0.0
+
+
+@pytest.mark.parametrize("name", [n for n in ARCH_NAMES
+                                  if get_config(n, True).supports_decode])
+def test_prefill_decode_matches_full(name):
+    cfg = get_config(name, smoke=True)
+    params = tfm.init(cfg, KEY)
+    s_total, p_len = 24, 16
+    tokens = jax.random.randint(KEY, (B, s_total), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.n_media_tokens:
+        batch["media"] = jax.random.normal(
+            KEY, (B, cfg.n_media_tokens, cfg.media_dim))
+    h_full, _, _ = tfm.forward(params, cfg, batch, mode="train")
+
+    caches = tfm.init_caches(cfg, B, s_total)
+    bp = dict(batch, tokens=tokens[:, :p_len])
+    h_pre, caches, _ = tfm.forward(params, cfg, bp, mode="prefill",
+                                   caches=caches,
+                                   cache_len=jnp.zeros((B,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(h_pre, np.float32),
+                               np.asarray(h_full[:, :p_len], np.float32),
+                               rtol=3e-2, atol=3e-2)
+    clen = jnp.full((B,), p_len, jnp.int32)
+    outs = []
+    for t in range(p_len, s_total):
+        bd = dict(batch, tokens=tokens[:, t:t + 1])
+        h1, caches, _ = tfm.forward(params, cfg, bd, mode="decode",
+                                    caches=caches, cache_len=clen)
+        outs.append(h1)
+        clen = clen + 1
+    h_dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(h_dec, np.float32),
+                               np.asarray(h_full[:, p_len:], np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_encoder_only_is_bidirectional():
+    cfg = get_config("hubert-xlarge", smoke=True)
+    params = tfm.init(cfg, KEY)
+    frames = jax.random.normal(KEY, (1, 16, cfg.frontend_dim))
+    h1, _, _ = tfm.forward(params, cfg, {"frames": frames}, mode="train")
+    # perturb a LATE frame; encoder-only means EARLY outputs change too
+    frames2 = frames.at[:, -1].add(10.0)
+    h2, _, _ = tfm.forward(params, cfg, {"frames": frames2}, mode="train")
+    assert float(jnp.abs(h1[:, 0] - h2[:, 0]).max()) > 1e-4
+
+
+def test_causal_lm_is_causal():
+    cfg = get_config("granite-34b", smoke=True)
+    params = tfm.init(cfg, KEY)
+    tok = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+    h1, _, _ = tfm.forward(params, cfg, {"tokens": tok}, mode="train")
+    tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % cfg.vocab_size)
+    h2, _, _ = tfm.forward(params, cfg, {"tokens": tok2}, mode="train")
+    # changing the last token must not affect earlier positions
+    np.testing.assert_allclose(np.asarray(h1[:, :-1], np.float32),
+                               np.asarray(h2[:, :-1], np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_vlm_uses_media():
+    cfg = get_config("llama-3.2-vision-11b", smoke=True)
+    params = tfm.init(cfg, KEY)
+    # gates init at 0 => media has no effect until trained; force gate on
+    params = jax.tree_util.tree_map(lambda x: x, params)
+    layers = params["layers"]
+    layers["b4"]["gate_attn"] = jnp.ones_like(layers["b4"]["gate_attn"])
+    tok = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    m1 = jax.random.normal(KEY, (1, cfg.n_media_tokens, cfg.media_dim))
+    h1, _, _ = tfm.forward(params, cfg, {"tokens": tok, "media": m1},
+                           mode="train")
+    h2, _, _ = tfm.forward(params, cfg,
+                           {"tokens": tok, "media": m1 + 1.0}, mode="train")
+    assert float(jnp.abs(h1 - h2).max()) > 1e-4

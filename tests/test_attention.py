@@ -1,0 +1,101 @@
+"""Attention substrate: chunked-vs-full equivalence, GQA, RoPE, decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.attention import (chunked_attention, cross_attention,
+                                decode_attention, full_attention)
+from repro.nn.basic import apply_rope
+
+RNG = np.random.default_rng(3)
+
+
+def _qkv(b, sq, sk, h, hk, d):
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, sk, hk, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, sk, hk, d)).astype(np.float32))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("hk", [1, 2, 4])
+def test_chunked_matches_full(causal, hk):
+    q, k, v = _qkv(2, 48, 48, 4, hk, 16)
+    want = full_attention(q, k, v, causal=causal)
+    got = chunked_attention(q, k, v, causal=causal, chunk_kv=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_ragged_kv_and_offset():
+    q, k, v = _qkv(2, 8, 40, 4, 2, 16)
+    vlen = jnp.asarray([17, 33], jnp.int32)
+    want = full_attention(q, k, v, causal=True, q_offset=32,
+                          kv_valid_len=vlen)
+    got = chunked_attention(q, k, v, causal=True, chunk_kv=16,
+                            q_offset=32, kv_valid_len=vlen)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_full_last_position():
+    b, s, h, hk, d = 2, 24, 4, 2, 16
+    q, k, v = _qkv(b, s, s, h, hk, d)
+    full = full_attention(q, k, v, causal=True)
+    got = decode_attention(q[:, -1:], k, v,
+                           jnp.full((b,), s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(full[:, -1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_cross_attention_ignores_causality():
+    q, k, v = _qkv(1, 8, 20, 4, 4, 8)
+    got = cross_attention(q, k, v)
+    want = full_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    x = jnp.asarray(RNG.normal(size=(1, 8, 2, 32)).astype(np.float32))
+    pos = jnp.arange(8)[None]
+    for variant in ("standard", "half"):
+        y = apply_rope(x, pos, 10000.0, variant)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+def test_rope_relative_property():
+    # <rope(q, m), rope(k, n)> depends only on m - n
+    d = 32
+    q = jnp.asarray(RNG.normal(size=(1, 1, 1, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(1, 1, 1, d)).astype(np.float32))
+
+    def score(m, n):
+        qm = apply_rope(q, jnp.asarray([[m]]), 100.0, "standard")
+        kn = apply_rope(k, jnp.asarray([[n]]), 100.0, "standard")
+        return float(jnp.sum(qm * kn))
+
+    assert abs(score(5, 3) - score(9, 7)) < 1e-3
+    assert abs(score(5, 3) - score(6, 3)) > 1e-5  # actually varies
+
+
+def test_rope_half_leaves_second_half_untouched():
+    x = jnp.asarray(RNG.normal(size=(1, 4, 1, 16)).astype(np.float32))
+    y = apply_rope(x, jnp.arange(4)[None], 10000.0, "half")
+    np.testing.assert_allclose(np.asarray(y[..., 8:]),
+                               np.asarray(x[..., 8:]), rtol=1e-6)
+    assert not np.allclose(np.asarray(y[..., :8]), np.asarray(x[..., :8]))
+
+
+def test_rope_none_is_identity():
+    x = jnp.asarray(RNG.normal(size=(1, 4, 1, 16)).astype(np.float32))
+    y = apply_rope(x, jnp.arange(4)[None], 10000.0, "none")
+    assert y is x

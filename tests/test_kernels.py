@@ -1,0 +1,130 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ternary import ENCODINGS, TernaryScales, quantize_act_ternary
+from repro.core.weights import TernaryWeight, ternarize_weight
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(2)
+
+SHAPES = [
+    (1, 16, 16),        # single TiM block
+    (4, 64, 32),
+    (16, 256, 256),     # one full tile (paper kernel-level workload is 16x256)
+    (5, 130, 48),       # ragged — exercises padding
+    (128, 512, 128),    # multi-tile
+]
+
+
+def _case(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    qx, sx = quantize_act_ternary(x)
+    return w, qx, sx
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("enc", ENCODINGS)
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_exact_matches_oracle(shape, enc, impl):
+    m, k, n = shape
+    w, qx, sx = _case(m, k, n)
+    tw = ternarize_weight(w, enc, per_channel=True)
+    want = ref.ternary_matmul_ref(qx, tw.codes(), tw.scales, sx)
+    got = ops.tim_matmul(qx, tw, sx, impl=impl)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("enc", ENCODINGS)
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_saturating_matches_oracle(shape, enc, impl):
+    m, k, n = shape
+    w, qx, sx = _case(m, k, n, seed=3)
+    tw = ternarize_weight(w, enc, per_channel=True)
+    want = ref.ternary_matmul_saturating_ref(qx, tw.codes(), tw.scales, sx,
+                                             n_max=8)
+    got = ops.tim_matmul(qx, tw, sx, impl=impl, n_max=8)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_packed_weights_match_unpacked(shape, impl):
+    m, k, n = shape
+    w, qx, sx = _case(m, k, n, seed=4)
+    tw = ternarize_weight(w, "asymmetric", per_channel=True)
+    twp = ternarize_weight(w, "asymmetric", per_channel=True, pack=True)
+    want = ops.tim_matmul(qx, tw, sx, impl="xla")
+    got = ops.tim_matmul(qx, twp, sx, impl=impl)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # the TPC storage win: 4 codes per byte
+    assert twp.nbytes_hbm <= (tw.nbytes_hbm + 3) // 4 + n
+
+
+@pytest.mark.parametrize("block_m,block_n,block_k", [
+    (8, 128, 128), (128, 128, 64), (32, 256, 512), (64, 512, 256)])
+def test_block_shape_sweep(block_m, block_n, block_k):
+    m, k, n = 96, 384, 192
+    w, qx, sx = _case(m, k, n, seed=5)
+    tw = ternarize_weight(w, "symmetric", per_channel=True)
+    want = ref.ternary_matmul_ref(qx, tw.codes(), tw.scales, sx)
+    got = ops.tim_matmul(qx, tw, sx, impl="pallas", block_m=block_m,
+                         block_n=block_n, block_k=block_k)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_out_dtypes(out_dtype, impl):
+    w, qx, sx = _case(8, 128, 64, seed=6)
+    tw = ternarize_weight(w, "symmetric", per_channel=True)
+    got = ops.tim_matmul(qx, tw, sx, impl=impl, out_dtype=out_dtype)
+    assert got.dtype == out_dtype
+    want = ref.ternary_matmul_ref(qx, tw.codes(), tw.scales, sx)
+    np.testing.assert_allclose(got.astype(jnp.float32), want, rtol=2e-2,
+                               atol=2e-2)
+
+
+def test_batched_leading_dims():
+    w, _, _ = _case(1, 64, 32)
+    x = jnp.asarray(RNG.normal(size=(2, 3, 64)).astype(np.float32))
+    qx, sx = quantize_act_ternary(x)
+    tw = ternarize_weight(w, "symmetric")
+    got = ops.tim_matmul(qx, tw, sx, impl="xla")
+    assert got.shape == (2, 3, 32)
+    flat = ops.tim_matmul(qx.reshape(6, 64), tw, sx, impl="xla")
+    np.testing.assert_allclose(got.reshape(6, 32), flat, rtol=1e-5)
+
+
+def test_bitserial_op():
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    act = jnp.asarray(rng.integers(0, 4, size=(8, 64)).astype(np.int8))
+    step = jnp.float32(1 / 3)
+    tw = ternarize_weight(w, "symmetric", per_channel=True)
+    got = ops.tim_matmul_bitserial(act, step, tw, bits=2, impl="xla")
+    wreal = tw.dequantize()
+    want = (act.astype(jnp.float32) * step) @ wreal
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(ENCODINGS))
+@settings(max_examples=10, deadline=None)
+def test_property_xla_equals_ref(seed, enc):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 9))
+    k = int(rng.integers(4, 200))
+    n = int(rng.integers(1, 100))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    qx, sx = quantize_act_ternary(
+        jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)))
+    tw = ternarize_weight(w, enc, per_channel=True)
+    want = ref.ternary_matmul_ref(qx, tw.codes(), tw.scales, sx)
+    got = ops.tim_matmul(qx, tw, sx, impl="xla")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

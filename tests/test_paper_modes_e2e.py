@@ -1,0 +1,129 @@
+"""End-to-end coverage of the paper's encoding modes through the full
+model stack (not just the kernel level)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.models.losses import lm_loss
+from repro.serve.engine import ternarize_model
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(9)
+
+
+def _batch(cfg, b=2, s=16):
+    return {
+        "tokens": jnp.asarray(
+            RNG.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)),
+        "labels": jnp.asarray(
+            RNG.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)),
+    }
+
+
+def test_ttq_learned_scales_train_and_serve():
+    """TTQ (asymmetric, learned wp/wn): gradients reach the scales, and
+    the serving conversion folds |wp|/|wn| into the codes."""
+    cfg = get_config("granite-34b", smoke=True)
+    cfg = cfg.replace(ternary=cfg.ternary.replace(
+        encoding="asymmetric", learned_scales=True))
+    params = tfm.init(cfg, KEY)
+    # learned scales exist in the tree
+    assert "wp" in params["layers"]["b0"]["q"]
+    batch = _batch(cfg)
+
+    def loss(p):
+        return lm_loss(p, cfg, batch)[0]
+
+    g = jax.grad(loss)(params)
+    wp_g = g["layers"]["b0"]["q"]["wp"]
+    assert float(jnp.max(jnp.abs(wp_g))) > 0.0  # scales receive gradient
+
+    sparams = ternarize_model(params, cfg)
+    from repro.core.weights import TernaryWeight
+    tw = sparams["layers"]["b0"]["q"]["w"]
+    assert isinstance(tw, TernaryWeight)
+    assert not tw.scales.symmetric                 # asymmetric scales kept
+    h1, _, _ = tfm.forward(params, cfg, batch, mode="train")
+    h2, _, _ = tfm.forward(sparams, cfg, batch, mode="train")
+    err = float(jnp.max(jnp.abs(h1.astype(jnp.float32)
+                                - h2.astype(jnp.float32))))
+    assert err < 0.05, err
+
+
+@pytest.mark.parametrize("act_mode", ["ternary", "int2"])
+def test_paper_faithful_activation_modes(act_mode):
+    """[T,T] (HitNet-style) and [2,T] (WRPN-style) through the full LM:
+    QAT trains finite, serving runs the TiM S/T (or bit-serial) path."""
+    cfg = get_config("chatglm3-6b", smoke=True)
+    cfg = cfg.replace(ternary=cfg.ternary.replace(act_mode=act_mode))
+    params = tfm.init(cfg, KEY)
+    batch = _batch(cfg)
+    loss, _ = lm_loss(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: lm_loss(p, cfg, batch)[0])(params)
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in jax.tree_util.tree_leaves(g))
+
+    sparams = ternarize_model(params, cfg)
+    h, _, _ = tfm.forward(sparams, cfg, batch, mode="train")
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+
+
+def test_adc_fidelity_mode_through_model():
+    """The paper's n_max=8 saturating ADC, end to end: quantized serve
+    with the clamp enabled stays close to the exact engine."""
+    cfg = get_config("chatglm3-6b", smoke=True)
+    cfg_exact = cfg.replace(ternary=cfg.ternary.replace(
+        act_mode="ternary"))
+    cfg_adc = cfg.replace(ternary=cfg.ternary.replace(
+        act_mode="ternary", n_max=8))
+    params = tfm.init(cfg, KEY)
+    s_exact = ternarize_model(params, cfg_exact)
+    batch = _batch(cfg)
+    h_e, _, _ = tfm.forward(s_exact, cfg_exact, batch, mode="train")
+    h_a, _, _ = tfm.forward(s_exact, cfg_adc, batch, mode="train")
+    assert bool(jnp.all(jnp.isfinite(h_a.astype(jnp.float32))))
+    # saturation is a bounded perturbation.  NOTE: random (untrained)
+    # activations clamp far more than trained ones — the paper's
+    # accuracy-preservation claim is validated on a *trained* classifier
+    # in sim/variations.accuracy_impact_experiment (see
+    # tests/test_sharding_and_sim.py::test_sim_accuracy_under_fidelity);
+    # here we only bound the structural deviation.
+    rel = float(jnp.linalg.norm((h_a - h_e).astype(jnp.float32))
+                / jnp.linalg.norm(h_e.astype(jnp.float32)))
+    assert rel < 0.7, rel
+
+
+def test_int8_kv_cache_decode_consistency():
+    """Quantized KV cache (beyond-paper §Perf lever): decode path stays
+    within quantization tolerance of the full forward."""
+    cfg = get_config("chatglm3-6b", smoke=True).replace(
+        kv_cache_dtype="int8")
+    params = tfm.init(cfg, KEY)
+    b, s_total, p_len = 2, 24, 16
+    tokens = jnp.asarray(
+        RNG.integers(0, cfg.vocab_size, (b, s_total)).astype(np.int32))
+    h_full, _, _ = tfm.forward(params, cfg, {"tokens": tokens},
+                               mode="train")
+    caches = tfm.init_caches(cfg, b, s_total)
+    assert caches["b0"]["k"].dtype == jnp.int8
+    _, caches, _ = tfm.forward(params, cfg,
+                               {"tokens": tokens[:, :p_len]},
+                               mode="prefill", caches=caches,
+                               cache_len=jnp.zeros((b,), jnp.int32))
+    clen = jnp.full((b,), p_len, jnp.int32)
+    outs = []
+    for t in range(p_len, s_total):
+        h1, caches, _ = tfm.forward(params, cfg,
+                                    {"tokens": tokens[:, t:t + 1]},
+                                    mode="decode", caches=caches,
+                                    cache_len=clen)
+        outs.append(h1)
+        clen = clen + 1
+    h_dec = jnp.concatenate(outs, 1)
+    err = float(jnp.max(jnp.abs(h_dec.astype(jnp.float32)
+                                - h_full[:, p_len:].astype(jnp.float32))))
+    assert err < 0.15, err

@@ -1,0 +1,194 @@
+"""Unit + property tests for the core ternary library."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ASYMMETRIC, ENCODINGS, EXACT, NOISY, SATURATING, SYMMETRIC, UNWEIGHTED,
+    TernaryScales, TimConfig, bitserial_matmul, bitplanes, block_counts,
+    dequantize, fake_quant_act_unsigned, fake_ternary, fake_ternary_act,
+    pack2b, quantize_act_ternary, quantize_act_unsigned, ternarize,
+    ternary_sparsity, tim_matmul_reference, tim_matvec, unpack2b,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# quantizer invariants (property tests)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(ENCODINGS))
+@settings(max_examples=30, deadline=None)
+def test_ternarize_codes_are_ternary(seed, enc):
+    w = np.random.default_rng(seed).normal(size=(32, 16)).astype(np.float32)
+    q, s = ternarize(jnp.asarray(w), enc)
+    assert q.dtype == jnp.int8
+    assert set(np.unique(np.asarray(q))).issubset({-1, 0, 1})
+    assert bool(jnp.all(s.pos >= 0)) and bool(jnp.all(s.neg >= 0))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_ternarize_sign_preserved(seed):
+    w = np.random.default_rng(seed).normal(size=(64,)).astype(np.float32)
+    q, _ = ternarize(jnp.asarray(w), SYMMETRIC)
+    q = np.asarray(q)
+    # a nonzero code always matches the sign of the weight
+    nz = q != 0
+    assert (np.sign(w[nz]) == q[nz]).all()
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(ENCODINGS))
+@settings(max_examples=20, deadline=None)
+def test_dequantize_reduces_mse_vs_zero(seed, enc):
+    # the ternarized tensor is a better L2 fit than the all-zero tensor
+    w = jnp.asarray(
+        np.random.default_rng(seed).normal(size=(128,)).astype(np.float32))
+    q, s = ternarize(w, enc)
+    wq = dequantize(q, s)
+    assert float(jnp.sum((w - wq) ** 2)) <= float(jnp.sum(w ** 2)) + 1e-6
+
+
+def test_scale_semantics_per_encoding():
+    w = _randn(256, 8)
+    qu, su = ternarize(w, UNWEIGHTED)
+    assert float(su.pos) == 1.0 and su.symmetric
+    qs, ss = ternarize(w, SYMMETRIC)
+    assert ss.symmetric and np.allclose(np.asarray(ss.pos), np.asarray(ss.neg))
+    qa, sa = ternarize(w, ASYMMETRIC)
+    assert not sa.symmetric
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_pack_roundtrip(seed, rows, groups):
+    q = np.random.default_rng(seed).integers(-1, 2, size=(rows, groups * 4))
+    q = jnp.asarray(q.astype(np.int8))
+    assert (unpack2b(pack2b(q)) == q).all()
+    assert pack2b(q).nbytes * 4 == q.nbytes
+
+
+def test_pack_axis0():
+    q = jnp.asarray(RNG.integers(-1, 2, size=(8, 12)).astype(np.int8))
+    assert (unpack2b(pack2b(q, axis=0), axis=0) == q).all()
+
+
+# ---------------------------------------------------------------------------
+# TiM engine fidelity ladder
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("enc", ENCODINGS)
+def test_exact_engine_matches_dense(enc):
+    w, x = _randn(96, 48), _randn(6, 96)
+    qw, sw = ternarize(w, enc)
+    qx, sx = quantize_act_ternary(x)
+    got = tim_matvec(qx, qw, sw, sx, EXACT)
+    want = tim_matmul_reference(qx, qw, sw, sx)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_block_counts_bounds():
+    qw, _ = ternarize(_randn(64, 16), SYMMETRIC)
+    qx, _ = quantize_act_ternary(_randn(3, 64))
+    n, k = block_counts(qx, qw, SATURATING)
+    assert n.shape == (3, 4, 16)
+    assert int(n.max()) <= 8 and int(k.max()) <= 8 and int(n.min()) >= 0
+    n2, k2 = block_counts(qx, qw, EXACT)
+    assert int(n2.max()) <= 16  # at most L rows can match
+
+
+def test_saturation_only_reduces_counts():
+    qw, _ = ternarize(_randn(64, 16), SYMMETRIC)
+    qx, _ = quantize_act_ternary(_randn(3, 64))
+    n_e, k_e = block_counts(qx, qw, EXACT)
+    n_s, k_s = block_counts(qx, qw, SATURATING)
+    assert bool(jnp.all(n_s <= n_e)) and bool(jnp.all(k_s <= k_e))
+
+
+def test_noisy_engine_statistics():
+    # error magnitude is ±1 on counts; with the paper's P_SE table the
+    # result should differ from exact rarely and by small amounts
+    w, x = _randn(256, 64), _randn(32, 256)
+    qw, sw = ternarize(w, UNWEIGHTED)
+    qx, sx = quantize_act_ternary(x)
+    sat = tim_matvec(qx, qw, sw, sx, SATURATING)
+    noisy = tim_matvec(qx, qw, sw, sx, NOISY, key=jax.random.PRNGKey(7))
+    diff = np.asarray(jnp.abs(noisy - sat))
+    assert diff.max() <= 4.0  # few ±1 count flips per output
+    assert (diff > 0).mean() < 0.05
+
+
+def test_two_phase_equals_fused_when_symmetric():
+    w, x = _randn(64, 32), _randn(4, 64)
+    qw, sw = ternarize(w, SYMMETRIC)
+    qx, sx = quantize_act_ternary(x)
+    fused = tim_matvec(qx, qw, sw, sx, EXACT)
+    # force two-phase by marking scales asymmetric with equal values
+    sw2 = TernaryScales(sw.pos, sw.neg, sym=False)
+    phased = tim_matvec(qx, qw, sw2, sx, EXACT)
+    np.testing.assert_allclose(fused, phased, rtol=1e-4, atol=1e-4)
+
+
+def test_bitserial_matches_dense():
+    w, x = _randn(64, 32), jax.nn.relu(_randn(8, 64))
+    qw, sw = ternarize(w, ASYMMETRIC)
+    qa, step = quantize_act_unsigned(x, 2)
+    got = bitserial_matmul(qa, step, qw, sw, 2, EXACT)
+    wref = jnp.where(qw > 0, sw.pos, sw.neg) * qw.astype(jnp.float32)
+    want = (qa.astype(jnp.float32) * step) @ wref
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_bitplanes():
+    q = jnp.asarray([[0, 1, 2, 3]], dtype=jnp.int8)
+    p = bitplanes(q, 2)
+    np.testing.assert_array_equal(np.asarray(p[0]), [[0, 1, 0, 1]])
+    np.testing.assert_array_equal(np.asarray(p[1]), [[0, 0, 1, 1]])
+
+
+# ---------------------------------------------------------------------------
+# STE / QAT
+# ---------------------------------------------------------------------------
+
+def test_fake_ternary_forward_is_ternary():
+    w = _randn(64, 64)
+    wq = fake_ternary(w, SYMMETRIC)
+    vals = np.unique(np.asarray(wq))
+    assert len(vals) <= 3
+
+
+def test_fake_ternary_gradient_is_identity():
+    w = _randn(16, 16)
+    g = jax.grad(lambda w: jnp.sum(fake_ternary(w, ASYMMETRIC)))(w)
+    np.testing.assert_array_equal(np.asarray(g), np.ones_like(g))
+
+
+def test_fake_ternary_act_ste_masks_saturation():
+    x = jnp.asarray([-3.0, -0.6, 0.1, 0.7, 2.5])
+    g = jax.grad(lambda x: jnp.sum(fake_ternary_act(x)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+def test_fake_quant_act_levels():
+    x = jnp.linspace(-0.5, 1.5, 101)
+    q = np.asarray(fake_quant_act_unsigned(x, bits=2))
+    levels = np.array([0.0, 1 / 3, 2 / 3, 1.0], dtype=np.float32)
+    assert np.abs(q[:, None] - levels[None, :]).min(axis=1).max() < 1e-6
+
+
+def test_sparsity_claim_on_gaussian_weights():
+    # paper §III-B: ternary DNNs have >=40% zeros — with the TWN 0.7
+    # threshold, gaussian weights give ~43% zeros.
+    q, _ = ternarize(_randn(512, 512), SYMMETRIC)
+    assert float(ternary_sparsity(q)) > 0.40
