@@ -5,6 +5,13 @@ sizes) the Pallas kernel in interpret mode.  On this CPU container the
 numbers are *relative* sanity checks — the TPU story is the roofline
 analysis — but they verify the int8 S/T decomposition is not slower
 than dense fp32 even on CPU, and they feed run.py's us_per_call CSV.
+
+The asymmetric rows additionally compare the fused single-launch route
+against the historical two-launch route and report the analytic HBM
+weight-byte traffic of each (kernels/ops.weight_stream_stats): the
+fused kernels stream each weight tile once per matmul, so asymmetric
+layers — the dominant serving configuration — see a >=2x weight-byte
+reduction (4x for 2-bit bit-serial activations).
 """
 from __future__ import annotations
 
@@ -68,4 +75,52 @@ def bench() -> List[Dict[str, Any]]:
                          qx, sx, iters=3, warmup=1)
             row["tim_pallas_interpret_us"] = round(t_pl, 1)
         rows.append(row)
+        rows.append(_bench_asym(name, m, k, n, w, qx, sx))
     return rows
+
+
+def _bench_asym(name: str, m: int, k: int, n: int, w, qx, sx
+                ) -> Dict[str, Any]:
+    """Fused vs two-launch on the asymmetric (two-phase) encoding.
+
+    Wall-clock times the xla route (interpret-mode pallas is too slow to
+    time at these sizes on CPU); the ``weight_*`` columns are the
+    analytic HBM model of the *pallas fused kernel* — the TPU serving
+    path, where each W tile is read once per launch.  The xla fused
+    route stacks phases along M (2m rows), so its own analytic traffic
+    is reported separately: it matches the kernel's 2x win while 2m
+    stays within one row-block (the decode regime) and converges to the
+    two-launch total at large M.
+    """
+    twa = ternarize_weight(w, "asymmetric", per_channel=True)
+    fused = jax.jit(lambda q, s: ops.tim_matmul(q, twa, s, impl="xla",
+                                                fused=True))
+    two = jax.jit(lambda q, s: ops.tim_matmul(q, twa, s, impl="xla",
+                                              fused=False))
+    t_fused = _time(fused, qx, sx)
+    t_two = _time(two, qx, sx)
+    sf = ops.weight_stream_stats(m, twa, sx, fused=True)
+    su = ops.weight_stream_stats(m, twa, sx, fused=False)
+    sx_f = ops.weight_stream_stats(2 * m, twa, sx, fused=True)
+    row = {
+        "case": name + "_asym",
+        "tim_xla_fused_us": round(t_fused, 1),
+        "tim_xla_two_launch_us": round(t_two, 1),
+        "weight_streams_fused_kernel": sf["launches"],
+        "weight_streams_two_launch": su["launches"],
+        "weight_bytes_streamed_fused_kernel": sf["weight_bytes_streamed"],
+        "weight_bytes_streamed_fused_xla": sx_f["weight_bytes_streamed"],
+        "weight_bytes_streamed_two_launch": su["weight_bytes_streamed"],
+        "hbm_weight_byte_reduction": round(
+            su["weight_bytes_streamed"] / sf["weight_bytes_streamed"], 2),
+    }
+    if m <= 64:  # direct fused-kernel evidence where interpret is viable
+        t_plf = _time(lambda q, s: ops.tim_matmul(q, twa, s, impl="pallas",
+                                                  fused=True),
+                      qx, sx, iters=3, warmup=1)
+        t_pl2 = _time(lambda q, s: ops.tim_matmul(q, twa, s, impl="pallas",
+                                                  fused=False),
+                      qx, sx, iters=3, warmup=1)
+        row["tim_pallas_fused_interpret_us"] = round(t_plf, 1)
+        row["tim_pallas_two_launch_interpret_us"] = round(t_pl2, 1)
+    return row

@@ -1,0 +1,13 @@
+"""Version-compat helpers shared by the Pallas kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both spellings
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+
+
+def compiler_params(dimension_semantics):
+    """CompilerParams with the given grid dimension semantics."""
+    return CompilerParams(dimension_semantics=tuple(dimension_semantics))

@@ -2,8 +2,8 @@
 
 Three implementations of the same contract:
 
-  * ``impl='pallas'`` — the Pallas TPU kernel (kernels/tim_matmul.py);
-    interpret=True on CPU so the kernel body is validated everywhere.
+  * ``impl='pallas'`` — the Pallas TPU kernels (kernels/tim_matmul.py);
+    interpret=True on CPU so the kernel bodies are validated everywhere.
   * ``impl='xla'``    — the same S/T sign-magnitude decomposition written
     as jnp int8 dot_generals.  This is what distributed model code uses
     under jit: XLA fuses the epilogue, GSPMD shards it, and the dry-run
@@ -18,6 +18,26 @@ with I/W the weighted ternary decodings, optional per-L-block ADC
 saturation (``n_max``), and two-phase execution when the encoding
 demands it (asymmetric weights with signed inputs, or asymmetric
 inputs).
+
+Fused multi-pass execution (default)
+------------------------------------
+Two-phase and bit-serial cases historically lowered as multiple full
+launches — ``run(pos) - run(neg)`` and one launch per bit-plane — each
+re-streaming the whole weight matrix from HBM.  With ``fused=True``
+(the default) a single launch performs every pass per tile:
+
+  * pallas: the fused kernels derive phase masks / bit-planes in-VMEM
+    and apply them against one W tile read
+    (``tim_matmul_fused_pallas`` / ``tim_matmul_bitserial_fused_pallas``);
+  * xla: the phase (or bit-plane) patterns are stacked along M so a
+    *single* dot_general streams W once; the signed / shifted
+    combination is an epilogue over the stacked result.
+
+``fused=False`` keeps the historical multi-launch route — it is the
+parity oracle for the fused path (tests assert bit-identical two-phase
+output) and a fallback if a backend dislikes the fused kernels.
+``weight_stream_stats`` quantifies the HBM weight-traffic win; the
+kernel benchmark and tests consume it.
 """
 from __future__ import annotations
 
@@ -76,24 +96,78 @@ def _st_matmul_xla(x_q, w_q, w1, w2, i1, need_t, n_max, l_block=16):
     return i1 * out
 
 
+def _st_matmul_xla_fused_phases(x_q, w_q, w1, w2, i1, i2, need_t, n_max):
+    """Two-phase S/T matmul with a single weight stream.
+
+    The pos/neg phase patterns (Fig. 5b) are stacked along M so one
+    dot_general reads W once; the signed i1*p1 - i2*p2 combination is
+    applied to the split halves.
+    """
+    m = x_q.shape[0]
+    pos = jnp.where(x_q > 0, 1, 0).astype(jnp.int8)
+    neg = jnp.where(x_q < 0, 1, 0).astype(jnp.int8)
+    both = jnp.concatenate([pos, neg], axis=0)
+    out = _st_matmul_xla(both, w_q, w1, w2, 1.0, need_t, n_max)
+    return i1 * out[:m] - i2 * out[m:]
+
+
+def _st_matmul_xla_fused_bitserial(act_codes, w_q, w1, w2, step, bits,
+                                   need_t, n_max):
+    """Bit-serial S/T matmul with a single weight stream: all bit-planes
+    stacked along M, one dot_general, PCU shift applied on the split."""
+    m = act_codes.shape[0]
+    planes = jnp.concatenate(
+        [((act_codes >> b) & 1).astype(jnp.int8) for b in range(bits)],
+        axis=0)
+    out = _st_matmul_xla(planes, w_q, w1, w2, 1.0, need_t, n_max)
+    acc = out[:m]
+    for b in range(1, bits):
+        acc = acc + out[b * m:(b + 1) * m] * float(1 << b)
+    return acc * step
+
+
+def _pad_packed_k(xq: jax.Array, w: TernaryWeight) -> jax.Array:
+    """Pad activations along K to the packed weight's padded K (zero
+    codes are inert, so pack padding never changes the product)."""
+    kp = w.data.shape[0] * 4
+    if kp != xq.shape[1]:
+        xq = jnp.pad(xq, ((0, 0), (0, kp - xq.shape[1])))
+    return xq
+
+
+def _flatten_lead(x: jax.Array, w: TernaryWeight):
+    """Flatten leading batch dims to a (M, K) codes matrix."""
+    return x.shape[:-1], w.shape[1], x.reshape(-1, x.shape[-1])
+
+
+def _dispatch_prelude(w: TernaryWeight, impl: str, n_max: Optional[int]):
+    """Shared entry-point prep: vectorize the weight scales and reject
+    the unsupported packed+fidelity combo."""
+    if impl == "pallas" and w.packed and n_max is not None:
+        raise NotImplementedError(
+            "packed weights + ADC fidelity mode: unpack first")
+    n = w.shape[1]
+    return _as_vec(w.scales.pos, n), _as_vec(w.scales.neg, n)
+
+
 def tim_matmul(x_q: jax.Array, w: TernaryWeight,
                i_scales: Optional[TernaryScales] = None,
                *, n_max: Optional[int] = None,
-               impl: str = "auto", out_dtype=jnp.float32,
+               impl: str = "auto", fused: bool = True,
+               out_dtype=jnp.float32,
                block_m: int = _tk.DEFAULT_BM, block_n: int = _tk.DEFAULT_BN,
                block_k: int = _tk.DEFAULT_BK) -> jax.Array:
     """Weighted ternary matmul: (..., K) codes x TernaryWeight(K, N).
 
-    Handles arbitrary leading batch dims, phase decomposition, packed
-    weights (pallas/xla), and the ADC-saturation fidelity mode.
+    Handles arbitrary leading batch dims, phase decomposition (fused
+    single-launch by default; ``fused=False`` restores the historical
+    two-launch route), packed weights (pallas/xla), and the
+    ADC-saturation fidelity mode.
     """
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "xla"
 
-    lead = x_q.shape[:-1]
-    kdim = x_q.shape[-1]
-    n = w.shape[1]
-    x2 = x_q.reshape(-1, kdim)
+    lead, n, x2 = _flatten_lead(x_q, w)
 
     if impl == "ref":
         out = _ref.ternary_matmul_ref(x2, w.codes(), w.scales, i_scales,
@@ -103,8 +177,7 @@ def tim_matmul(x_q: jax.Array, w: TernaryWeight,
                                                out_dtype=out_dtype)
         return out.reshape(lead + (n,))
 
-    w1 = _as_vec(w.scales.pos, n)
-    w2 = _as_vec(w.scales.neg, n)
+    w1, w2 = _dispatch_prelude(w, impl, n_max)
     asym_w = not w.scales.symmetric
     asym_i = i_scales is not None and not i_scales.symmetric
     need_phases = asym_i or asym_w
@@ -115,13 +188,11 @@ def tim_matmul(x_q: jax.Array, w: TernaryWeight,
         if impl == "pallas":
             interp = not _on_tpu()
             if w.packed:
-                kp = w.data.shape[0] * 4
-                if kp != xq.shape[1]:  # pack padding: zero codes are inert
-                    xq = jnp.pad(xq, ((0, 0), (0, kp - xq.shape[1])))
                 return _tk.tim_matmul_packed_pallas(
-                    xq, w.data, w1, w2, jnp.asarray(i1), need_t=need_t,
-                    block_m=block_m, block_n=block_n, block_k=block_k,
-                    out_dtype=out_dtype, interpret=interp)[..., :n]
+                    _pad_packed_k(xq, w), w.data, w1, w2, jnp.asarray(i1),
+                    need_t=need_t, block_m=block_m, block_n=block_n,
+                    block_k=block_k, out_dtype=out_dtype,
+                    interpret=interp)[..., :n]
             return _tk.tim_matmul_pallas(
                 xq, w.data, w1, w2, jnp.asarray(i1), need_t=need_t,
                 n_max=n_max, block_m=block_m, block_n=block_n,
@@ -129,10 +200,6 @@ def tim_matmul(x_q: jax.Array, w: TernaryWeight,
         wq = w.codes()
         return _st_matmul_xla(xq, wq, w1, w2, jnp.asarray(
             i1, jnp.float32), need_t, n_max).astype(out_dtype)
-
-    if impl == "pallas" and w.packed and n_max is not None:
-        raise NotImplementedError(
-            "packed weights + ADC fidelity mode: unpack first")
 
     if not need_phases:
         i1 = i_scales.pos if i_scales is not None else 1.0
@@ -142,9 +209,23 @@ def tim_matmul(x_q: jax.Array, w: TernaryWeight,
         # patterns disambiguate the W1/W2 scale per product.
         i1 = i_scales.pos if i_scales is not None else 1.0
         i2 = i_scales.neg if i_scales is not None else 1.0
-        pos = jnp.where(x2 > 0, 1, 0).astype(jnp.int8)
-        neg = jnp.where(x2 < 0, 1, 0).astype(jnp.int8)
-        out = run(pos, i1) - run(neg, i2)
+        if fused and impl == "pallas":
+            interp = not _on_tpu()
+            xf = _pad_packed_k(x2, w) if w.packed else x2
+            out = _tk.tim_matmul_fused_pallas(
+                xf, w.data, w1, w2, jnp.asarray(i1), jnp.asarray(i2),
+                packed=w.packed, need_t=need_t, n_max=n_max,
+                block_m=block_m, block_n=block_n, block_k=block_k,
+                out_dtype=out_dtype, interpret=interp)[..., :n]
+        elif fused:  # impl == 'xla'
+            out = _st_matmul_xla_fused_phases(
+                x2, w.codes(), w1, w2,
+                jnp.asarray(i1, jnp.float32), jnp.asarray(i2, jnp.float32),
+                need_t, n_max).astype(out_dtype)
+        else:
+            pos = jnp.where(x2 > 0, 1, 0).astype(jnp.int8)
+            neg = jnp.where(x2 < 0, 1, 0).astype(jnp.int8)
+            out = run(pos, i1) - run(neg, i2)
 
     return out.reshape(lead + (n,))
 
@@ -152,14 +233,82 @@ def tim_matmul(x_q: jax.Array, w: TernaryWeight,
 def tim_matmul_bitserial(act_codes: jax.Array, act_step: jax.Array,
                          w: TernaryWeight, bits: int,
                          *, n_max: Optional[int] = None,
-                         impl: str = "auto", out_dtype=jnp.float32
-                         ) -> jax.Array:
-    """Bit-serial unsigned activations (WRPN 2-bit) x ternary weights."""
+                         impl: str = "auto", fused: bool = True,
+                         out_dtype=jnp.float32,
+                         block_m: int = _tk.DEFAULT_BM,
+                         block_n: int = _tk.DEFAULT_BN,
+                         block_k: int = _tk.DEFAULT_BK) -> jax.Array:
+    """Bit-serial unsigned activations (WRPN 2-bit) x ternary weights.
+
+    ``fused=True`` (default) applies every bit-plane against a single
+    weight stream; ``fused=False`` restores the historical one-launch-
+    per-plane route (the parity oracle).
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+
+    if impl != "ref" and fused:
+        lead, n, a2 = _flatten_lead(act_codes, w)
+        w1, w2 = _dispatch_prelude(w, impl, n_max)
+        need_t = not w.scales.symmetric
+        if impl == "pallas":
+            interp = not _on_tpu()
+            if w.packed:
+                a2 = _pad_packed_k(a2, w)
+            out = _tk.tim_matmul_bitserial_fused_pallas(
+                a2, w.data, w1, w2, jnp.asarray(act_step),
+                bits=bits, packed=w.packed, need_t=need_t, n_max=n_max,
+                block_m=block_m, block_n=block_n, block_k=block_k,
+                out_dtype=out_dtype, interpret=interp)[..., :n]
+        else:
+            out = _st_matmul_xla_fused_bitserial(
+                a2, w.codes(), w1, w2,
+                jnp.asarray(act_step, jnp.float32), bits, need_t,
+                n_max).astype(out_dtype)
+        return out.reshape(lead + (n,))
+
     acc = None
     for b in range(bits):
         plane = ((act_codes >> b) & 1).astype(jnp.int8)
         part = tim_matmul(plane, w, None, n_max=n_max, impl=impl,
-                          out_dtype=out_dtype)
+                          fused=False, out_dtype=out_dtype)
         part = part * (2.0 ** b)
         acc = part if acc is None else acc + part
     return (acc * act_step).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# HBM weight-traffic accounting (consumed by benchmarks/kernel_bench.py
+# and the fused-kernel tests).
+# ---------------------------------------------------------------------------
+
+def weight_stream_stats(m: int, w: TernaryWeight,
+                        i_scales: Optional[TernaryScales] = None,
+                        *, bits: Optional[int] = None, fused: bool = True,
+                        block_m: int = _tk.DEFAULT_BM) -> dict:
+    """Analytic HBM weight-byte traffic for one matmul of M rows.
+
+    Each launch streams the full weight matrix once per M-grid step
+    (the K x N tile grid revisits every W tile for each row-block i).
+    The fused kernels always issue exactly one launch; the historical
+    route issues one per phase (two-phase) and, bit-serially, one per
+    bit-plane *times* the per-plane phase count.
+    """
+    asym_w = not w.scales.symmetric
+    asym_i = i_scales is not None and not i_scales.symmetric
+    if bits is None:
+        launches = 2 if (asym_w or asym_i) else 1
+    else:
+        # historical bit-serial: each plane pays the full tim_matmul
+        # dispatch, including a (degenerate, all-zero) negative phase
+        # when the weights are asymmetric.
+        launches = bits * (2 if asym_w else 1)
+    if fused:
+        launches = 1
+    m_steps = -(-m // min(block_m, max(8, m)))
+    bytes_per_stream = w.nbytes_hbm * m_steps
+    return {
+        "launches": launches,
+        "weight_bytes_per_stream": bytes_per_stream,
+        "weight_bytes_streamed": launches * bytes_per_stream,
+    }

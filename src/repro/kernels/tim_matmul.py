@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for TiM ternary matrix multiplication.
+"""Pallas TPU kernels for TiM ternary matrix multiplication.
 
 This is the TPU-native re-expression of the TiM tile (paper §III-B/C).
 The analog bitline trick — accumulate +1 products on BL (count n) and -1
@@ -14,25 +14,56 @@ so any weighted ternary output is an epilogue over S and T:
     out = I * [ W1*n - W2*k ] = I * [ (W1-W2)/2 * T + (W1+W2)/2 * S ]
 
 For symmetric encodings (W1 == W2) the T matmul vanishes and one int8
-MXU pass suffices — the fast path.
+MXU pass suffices — the fast path (``tim_matmul_pallas``).
+
+Fused multi-pass kernels
+------------------------
+The paper's hardware runs asymmetric encodings in two phases (Fig. 5b:
+apply the positive input mask, then the negative mask) and multi-bit
+activations bit-serially (§III-C: one access per bit-plane).  A naive
+port pays for that fidelity at the *launch* level — one ``pallas_call``
+per phase / per bit-plane, each re-streaming the full weight matrix
+from HBM.  The fused kernels here collapse all passes into a single
+launch:
+
+* ``tim_matmul_fused_pallas`` — reads each X/W tile into VMEM **once**;
+  the phase masks are derived in-kernel from the signed codes
+  (``pos = max(x, 0)``, ``neg = max(-x, 0)``), the 2–4 int8 MXU passes
+  per tile (S/T × phase) accumulate into per-phase VMEM scratch, and
+  the signed ``i1·p1 − i2·p2`` epilogue runs once at ``kk == nsteps-1``.
+  Identical arithmetic to the two-launch path (each phase's f32
+  epilogue is cast to ``out_dtype`` before the subtraction), at half
+  the HBM weight traffic.
+
+* ``tim_matmul_bitserial_fused_pallas`` — applies all ``bits``
+  bit-planes of an activation tile against a single W read; the PCU
+  shifter becomes an exact int32 ``<< b`` folded into the accumulation,
+  and the scale epilogue runs once.  HBM weight traffic drops by
+  ``bits``× (and by ``2·bits``× vs the naive route, which also paid an
+  all-zero negative phase per plane).
+
+Both fused kernels take dense int8 codes or TPC-style 2-bit packed
+weights (static ``packed`` flag; the unpack runs on the VPU after the
+4x-smaller tile is already in VMEM).
 
 Fidelity mode (``n_max``) reproduces the 3-bit flash ADC: counts are
-clamped per L=16-row block before digital accumulation, exactly as the
-tile hardware saturates.  This forces the K-grid step to L (=16), which
-is deliberately *not* a performance path — it exists to validate the
-paper's accuracy claims, while the fast path is what serving uses.
+clamped per L=16-row block (per phase / per plane, exactly as the tile
+hardware saturates each access) before digital accumulation.  This
+forces the K-grid step to L (=16), which is deliberately *not* a
+performance path — it exists to validate the paper's accuracy claims,
+while the fast path is what serving uses.
 
-VMEM tiling: X tile (bm, bk) int8, W tile (bk, bn) int8, two int32
-accumulators (bm, bn) in VMEM scratch.  bm/bn default to 128/256 —
-MXU-aligned (multiples of 128 in the lane dim, int8 native) — and
-bk=512 keeps the working set at
-  128*512 + 512*256 + 2*128*256*4 B ≈ 0.45 MB ≪ 16 MB VMEM,
+VMEM tiling: X tile (bm, bk) int8, W tile (bk, bn) int8, up to four
+int32 accumulators (bm, bn) in VMEM scratch.  bm/bn default to 128/256
+— MXU-aligned (multiples of 128 in the lane dim, int8 native) — and
+bk=512 keeps the fused working set at
+  128*512 + 512*256 + 4*128*256*4 B ≈ 0.7 MB ≪ 16 MB VMEM,
 leaving headroom for double-buffered HBM→VMEM pipelining.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,11 +71,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.packing import CODES_PER_BYTE
+from repro.kernels._compat import compiler_params
 
 DEFAULT_BM = 128
 DEFAULT_BN = 256
 DEFAULT_BK = 512
 L_BLOCK = 16
+
+
+def _compiler_params():
+    # grid is always (M/bm, N/bn, K/bk) with K innermost-accumulating
+    return compiler_params(("parallel", "parallel", "arbitrary"))
 
 
 def _dot_i32(a, b):
@@ -61,6 +98,14 @@ def _epilogue(s, t, w1, w2, i1, out_dtype):
     tf = t.astype(jnp.float32)
     c_t = (w1 - w2) * 0.5
     return (i1 * (c_s * sf + c_t * tf)).astype(out_dtype)
+
+
+def _clamped_st(s, t, n_max):
+    """ADC saturation for one access: clamp (n, k) at n_max, return the
+    clamped counts re-expressed in the (S, T) basis."""
+    n = jnp.minimum((t + s) // 2, n_max)
+    k = jnp.minimum((t - s) // 2, n_max)
+    return n - k, n + k
 
 
 def _tim_kernel(x_ref, w_ref, w1_ref, w2_ref, i1_ref, o_ref,
@@ -87,13 +132,9 @@ def _tim_kernel(x_ref, w_ref, w1_ref, w2_ref, i1_ref, o_ref,
     else:
         # ADC fidelity: this K-step is one L=16 block; clamp n and k at
         # n_max before accumulating (bitline voltage saturation).
-        n = (t + s) // 2
-        k = (t - s) // 2
-        n = jnp.minimum(n, n_max)
-        k = jnp.minimum(k, n_max)
-        # store back in (S, T) basis so the epilogue is shared
-        s_acc[...] += n - k
-        t_acc[...] += n + k
+        sc, tc = _clamped_st(s, t, n_max)
+        s_acc[...] += sc
+        t_acc[...] += tc
 
     @pl.when(kk == nsteps - 1)
     def _done():
@@ -111,6 +152,61 @@ def _pad_dim(a, axis, mult):
     widths = [(0, 0)] * a.ndim
     widths[axis] = (0, pad)
     return jnp.pad(a, widths)
+
+
+class _TilePlan(NamedTuple):
+    """Shared tiling for every TiM kernel wrapper: clamped block sizes,
+    block-padded operands, the (M, N, K) grid, and the block specs."""
+
+    x: jax.Array
+    w: jax.Array
+    w1: jax.Array
+    w2: jax.Array
+    bm: int
+    bn: int
+    grid: tuple
+    in_specs: list
+    out_spec: "pl.BlockSpec"
+    out_shape: tuple
+
+
+def _tile_plan(x, w_data, w1, w2, *, packed: bool, block_m: int,
+               block_n: int, block_k: int) -> _TilePlan:
+    m, kdim = x.shape
+    n = w_data.shape[1]
+    bm = min(block_m, max(8, m))
+    bk = min(block_k, kdim)
+    if packed:
+        bk -= bk % CODES_PER_BYTE
+    bn = min(block_n, n)
+
+    x = _pad_dim(_pad_dim(x, 0, bm), 1, bk)
+    wk = bk // CODES_PER_BYTE if packed else bk
+    w_data = _pad_dim(_pad_dim(w_data, 0, wk), 1, bn)
+    w1 = _pad_dim(w1, 0, bn)
+    w2 = _pad_dim(w2, 0, bn)
+    mp, kp = x.shape
+    np_ = w_data.shape[1]
+    return _TilePlan(
+        x=x, w=w_data, w1=w1, w2=w2, bm=bm, bn=bn,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((wk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_spec=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=(mp, np_),
+    )
+
+
+def _acc_shapes(plan: _TilePlan, flags) -> list:
+    """VMEM int32 accumulators; (1, 1) dummies keep signatures uniform
+    for the accumulators a configuration doesn't need."""
+    return [pltpu.VMEM((plan.bm, plan.bn) if on else (1, 1), jnp.int32)
+            for on in flags]
 
 
 @functools.partial(
@@ -135,46 +231,23 @@ def tim_matmul_pallas(x_q: jax.Array, w_q: jax.Array,
         block_k = L_BLOCK
         need_t = True
 
-    bm = min(block_m, max(8, m))
-    bk = min(block_k, kdim)
-    bn = min(block_n, n)
-
-    x_q = _pad_dim(_pad_dim(x_q, 0, bm), 1, bk)
-    w_q = _pad_dim(_pad_dim(w_q, 0, bk), 1, bn)
-    w1 = _pad_dim(w1, 0, bn)
-    w2 = _pad_dim(w2, 0, bn)
-    mp, kp = x_q.shape
-    _, np_ = w_q.shape
-    grid = (mp // bm, np_ // bn, kp // bk)
-
+    plan = _tile_plan(x_q, w_q, w1, w2, packed=False, block_m=block_m,
+                      block_n=block_n, block_k=block_k)
     kernel = functools.partial(
-        _tim_kernel, nsteps=grid[2], need_t=need_t, n_max=n_max,
+        _tim_kernel, nsteps=plan.grid[2], need_t=need_t, n_max=n_max,
         out_dtype=out_dtype)
-
-    scratch = [pltpu.VMEM((bm, bn), jnp.int32)]
-    scratch.append(pltpu.VMEM((bm, bn), jnp.int32) if need_t else None)
-    scratch = [s for s in scratch if s is not None]
-    if not need_t:
-        # keep kernel signature uniform: dummy 1-element scratch for t
-        scratch.append(pltpu.VMEM((1, 1), jnp.int32))
 
     out = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
-            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
-        scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        grid=plan.grid,
+        in_specs=plan.in_specs,
+        out_specs=plan.out_spec,
+        out_shape=jax.ShapeDtypeStruct(plan.out_shape, out_dtype),
+        scratch_shapes=_acc_shapes(plan, (True, need_t)),
+        compiler_params=_compiler_params(),
         interpret=interpret,
-    )(x_q, w_q, w1, w2, jnp.reshape(i1, (1,)).astype(jnp.float32))
+    )(plan.x, plan.w, plan.w1, plan.w2,
+      jnp.reshape(i1, (1,)).astype(jnp.float32))
     return out[:m, :n]
 
 
@@ -242,42 +315,242 @@ def tim_matmul_packed_pallas(x_q: jax.Array, w_packed: jax.Array,
     kp4, n = w_packed.shape
     assert kp4 * CODES_PER_BYTE == kdim, (x_q.shape, w_packed.shape)
 
-    bm = min(block_m, max(8, m))
-    bk = min(block_k, kdim)
-    bk -= bk % CODES_PER_BYTE
-    bn = min(block_n, n)
-
-    x_q = _pad_dim(_pad_dim(x_q, 0, bm), 1, bk)
-    w_packed = _pad_dim(_pad_dim(w_packed, 0, bk // CODES_PER_BYTE), 1, bn)
-    w1 = _pad_dim(w1, 0, bn)
-    w2 = _pad_dim(w2, 0, bn)
-    mp, kp = x_q.shape
-    _, np_ = w_packed.shape
-    grid = (mp // bm, np_ // bn, kp // bk)
-
+    plan = _tile_plan(x_q, w_packed, w1, w2, packed=True, block_m=block_m,
+                      block_n=block_n, block_k=block_k)
     kernel = functools.partial(
-        _tim_kernel_packed, nsteps=grid[2], need_t=need_t,
+        _tim_kernel_packed, nsteps=plan.grid[2], need_t=need_t,
         out_dtype=out_dtype)
-
-    scratch = [pltpu.VMEM((bm, bn), jnp.int32),
-               pltpu.VMEM((bm, bn) if need_t else (1, 1), jnp.int32)]
 
     out = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk // CODES_PER_BYTE, bn),
-                         lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
-            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
-        scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        grid=plan.grid,
+        in_specs=plan.in_specs,
+        out_specs=plan.out_spec,
+        out_shape=jax.ShapeDtypeStruct(plan.out_shape, out_dtype),
+        scratch_shapes=_acc_shapes(plan, (True, need_t)),
+        compiler_params=_compiler_params(),
         interpret=interpret,
-    )(x_q, w_packed, w1, w2, jnp.reshape(i1, (1,)).astype(jnp.float32))
+    )(plan.x, plan.w, plan.w1, plan.w2,
+      jnp.reshape(i1, (1,)).astype(jnp.float32))
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Fused two-phase kernel: both phases of the paper's asymmetric execution
+# (Fig. 5b) against a single HBM read of each X/W tile.
+# ---------------------------------------------------------------------------
+
+def _tim_kernel_fused(x_ref, w_ref, w1_ref, w2_ref, i12_ref, o_ref,
+                      sp_acc, tp_acc, sn_acc, tn_acc, *, nsteps: int,
+                      need_t: bool, n_max: Optional[int], packed: bool,
+                      out_dtype):
+    """Grid (M/bm, N/bn, K/bk); K innermost (arbitrary semantics).
+
+    The signed X tile is read once; the non-negative phase patterns of
+    Fig. 5b are derived in-register (pos = max(x, 0), neg = max(-x, 0))
+    and each phase's S (and T, for asymmetric weights) partials go to
+    their own VMEM accumulator.  The signed combination i1*p1 - i2*p2
+    happens once, in the epilogue.
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        sp_acc[...] = jnp.zeros_like(sp_acc)
+        sn_acc[...] = jnp.zeros_like(sn_acc)
+        if need_t:
+            tp_acc[...] = jnp.zeros_like(tp_acc)
+            tn_acc[...] = jnp.zeros_like(tn_acc)
+
+    x = x_ref[...]
+    w = _unpack2b_tile(w_ref[...]) if packed else w_ref[...]
+    pos = jnp.maximum(x, 0)
+    neg = jnp.maximum(-x, 0)
+    sp = _dot_i32(pos, w)
+    sn = _dot_i32(neg, w)
+    if need_t:
+        aw = jnp.abs(w)
+        tp = _dot_i32(pos, aw)
+        tn = _dot_i32(neg, aw)
+
+    if n_max is None:
+        sp_acc[...] += sp
+        sn_acc[...] += sn
+        if need_t:
+            tp_acc[...] += tp
+            tn_acc[...] += tn
+    else:
+        # each phase is a separate hardware access: clamp per phase
+        spc, tpc = _clamped_st(sp, tp, n_max)
+        snc, tnc = _clamped_st(sn, tn, n_max)
+        sp_acc[...] += spc
+        tp_acc[...] += tpc
+        sn_acc[...] += snc
+        tn_acc[...] += tnc
+
+    @pl.when(kk == nsteps - 1)
+    def _done():
+        w1 = w1_ref[...].astype(jnp.float32)
+        w2 = w2_ref[...].astype(jnp.float32)
+        i1 = i12_ref[0].astype(jnp.float32)
+        i2 = i12_ref[1].astype(jnp.float32)
+        tp_fin = tp_acc[...] if need_t else None
+        tn_fin = tn_acc[...] if need_t else None
+        # per-phase epilogues cast to out_dtype before the subtraction —
+        # same arithmetic as the two-launch run(pos) - run(neg) path.
+        # (Exactly the same: the only deviation the compiler may
+        # introduce is FMA-contracting the last scale mul into the
+        # subtraction, which single-rounds where two launches rounded
+        # twice — invisible whenever the products are exact.)
+        p1 = _epilogue(sp_acc[...], tp_fin, w1, w2, i1, out_dtype)
+        p2 = _epilogue(sn_acc[...], tn_fin, w1, w2, i2, out_dtype)
+        o_ref[...] = (p1 - p2).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("packed", "need_t", "n_max", "block_m", "block_n",
+                     "block_k", "out_dtype", "interpret"))
+def tim_matmul_fused_pallas(x_q: jax.Array, w_data: jax.Array,
+                            w1: jax.Array, w2: jax.Array,
+                            i1: jax.Array, i2: jax.Array,
+                            *, packed: bool, need_t: bool,
+                            n_max: Optional[int] = None,
+                            block_m: int = DEFAULT_BM,
+                            block_n: int = DEFAULT_BN,
+                            block_k: int = DEFAULT_BK,
+                            out_dtype=jnp.float32,
+                            interpret: bool = False) -> jax.Array:
+    """Fused two-phase ternary matmul: one launch, one weight stream.
+
+    x_q: (M, K) *signed* int8 codes; w_data: (K, N) int8 codes or
+    (K//4, N) uint8 packed codes; w1/w2: (N,) weight scales; i1/i2:
+    scalar positive/negative input scales.  Computes
+    ``i1 * phase(pos) - i2 * phase(neg)`` in a single ``pallas_call``.
+    """
+    m, kdim = x_q.shape
+    if packed:
+        assert n_max is None, "packed + ADC fidelity: unpack first"
+        kp4, n = w_data.shape
+        assert kp4 * CODES_PER_BYTE == kdim, (x_q.shape, w_data.shape)
+    else:
+        k2, n = w_data.shape
+        assert kdim == k2, (x_q.shape, w_data.shape)
+    if n_max is not None:
+        block_k = L_BLOCK
+        need_t = True
+
+    plan = _tile_plan(x_q, w_data, w1, w2, packed=packed, block_m=block_m,
+                      block_n=block_n, block_k=block_k)
+    kernel = functools.partial(
+        _tim_kernel_fused, nsteps=plan.grid[2], need_t=need_t, n_max=n_max,
+        packed=packed, out_dtype=out_dtype)
+
+    i12 = jnp.stack([jnp.reshape(i1, ()), jnp.reshape(i2, ())]
+                    ).astype(jnp.float32)
+    out = pl.pallas_call(
+        kernel,
+        grid=plan.grid,
+        in_specs=plan.in_specs,
+        out_specs=plan.out_spec,
+        out_shape=jax.ShapeDtypeStruct(plan.out_shape, out_dtype),
+        scratch_shapes=_acc_shapes(plan, (True, need_t, True, need_t)),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(plan.x, plan.w, plan.w1, plan.w2, i12)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Fused bit-serial kernel: every bit-plane of the activation tile applied
+# against a single W read; the PCU shift is an exact int32 << b folded
+# into the accumulation (§III-C, one launch instead of `bits`).
+# ---------------------------------------------------------------------------
+
+def _tim_kernel_bitserial(x_ref, w_ref, w1_ref, w2_ref, step_ref, o_ref,
+                          s_acc, t_acc, *, nsteps: int, bits: int,
+                          need_t: bool, n_max: Optional[int], packed: bool,
+                          out_dtype):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        s_acc[...] = jnp.zeros_like(s_acc)
+        if need_t:
+            t_acc[...] = jnp.zeros_like(t_acc)
+
+    x = x_ref[...]                        # unsigned codes < 2**bits
+    w = _unpack2b_tile(w_ref[...]) if packed else w_ref[...]
+    aw = jnp.abs(w) if need_t else None
+    for b in range(bits):
+        plane = ((x >> b) & 1).astype(jnp.int8)
+        s = _dot_i32(plane, w)
+        t = _dot_i32(plane, aw) if need_t else None
+        if n_max is not None:
+            # every bit-plane is its own hardware access: clamp per plane
+            s, t = _clamped_st(s, t, n_max)
+        s_acc[...] += s * (1 << b)
+        if need_t:
+            t_acc[...] += t * (1 << b)
+
+    @pl.when(kk == nsteps - 1)
+    def _done():
+        w1 = w1_ref[...].astype(jnp.float32)
+        w2 = w2_ref[...].astype(jnp.float32)
+        step = step_ref[0].astype(jnp.float32)
+        t_fin = t_acc[...] if need_t else None
+        o_ref[...] = _epilogue(s_acc[...], t_fin, w1, w2, step, out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "packed", "need_t", "n_max", "block_m",
+                     "block_n", "block_k", "out_dtype", "interpret"))
+def tim_matmul_bitserial_fused_pallas(act_codes: jax.Array,
+                                      w_data: jax.Array,
+                                      w1: jax.Array, w2: jax.Array,
+                                      act_step: jax.Array,
+                                      *, bits: int, packed: bool,
+                                      need_t: bool,
+                                      n_max: Optional[int] = None,
+                                      block_m: int = DEFAULT_BM,
+                                      block_n: int = DEFAULT_BN,
+                                      block_k: int = DEFAULT_BK,
+                                      out_dtype=jnp.float32,
+                                      interpret: bool = False) -> jax.Array:
+    """Fused bit-serial matmul: all bit-planes in one launch.
+
+    act_codes: (M, K) int8 unsigned codes in [0, 2**bits); w_data as in
+    ``tim_matmul_fused_pallas``; act_step: scalar activation step size
+    (folded into the epilogue, like the PCU's final scale).
+    """
+    m, kdim = act_codes.shape
+    if packed:
+        assert n_max is None, "packed + ADC fidelity: unpack first"
+        kp4, n = w_data.shape
+        assert kp4 * CODES_PER_BYTE == kdim, (act_codes.shape, w_data.shape)
+    else:
+        k2, n = w_data.shape
+        assert kdim == k2, (act_codes.shape, w_data.shape)
+    if n_max is not None:
+        block_k = L_BLOCK
+        need_t = True
+
+    plan = _tile_plan(act_codes, w_data, w1, w2, packed=packed,
+                      block_m=block_m, block_n=block_n, block_k=block_k)
+    kernel = functools.partial(
+        _tim_kernel_bitserial, nsteps=plan.grid[2], bits=bits,
+        need_t=need_t, n_max=n_max, packed=packed, out_dtype=out_dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=plan.grid,
+        in_specs=plan.in_specs,
+        out_specs=plan.out_spec,
+        out_shape=jax.ShapeDtypeStruct(plan.out_shape, out_dtype),
+        scratch_shapes=_acc_shapes(plan, (True, need_t)),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(plan.x, plan.w, plan.w1, plan.w2,
+      jnp.reshape(act_step, (1,)).astype(jnp.float32))
     return out[:m, :n]

@@ -280,9 +280,10 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh,
                                       shape.seq_len)
         batch_ps = jax.tree_util.tree_map(lambda _: bspec, batch_sds)
         step = build_train_step(cfg, grad_compress="gc8" in feats)
-        jitted = jax.jit(step,
-                         in_shardings=(p_ps, opt_ps, batch_ps),
-                         out_shardings=(p_ps, opt_ps, P()))
+        jitted = jax.jit(
+            step,
+            in_shardings=shd.as_shardings((p_ps, opt_ps, batch_ps), mesh),
+            out_shardings=shd.as_shardings((p_ps, opt_ps, P()), mesh))
         args = (params_sds, opt_sds, batch_sds)
     else:
         params_sds = param_specs(cfg, serve=True)
@@ -307,9 +308,10 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh,
             c_ps = shd.tree_pspecs(tfm.cache_specs(cfg, shard_cache), rules)
             batch_ps = jax.tree_util.tree_map(lambda _: bspec, batch_sds)
             step = make_prefill_step(cfg)
-            jitted = jax.jit(step,
-                             in_shardings=(p_ps, batch_ps, c_ps),
-                             out_shardings=(bspec, c_ps))
+            jitted = jax.jit(
+                step,
+                in_shardings=shd.as_shardings((p_ps, batch_ps, c_ps), mesh),
+                out_shardings=shd.as_shardings((bspec, c_ps), mesh))
             args = (params_sds, batch_sds, caches)
         else:
             batch_sds = batch_specs(cfg, shape.global_batch, 1)
@@ -318,12 +320,14 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh,
             clen = SDS((shape.global_batch,), jnp.int32)
             batch_ps = jax.tree_util.tree_map(lambda _: bspec, batch_sds)
             step = build_serve_step(cfg)
-            jitted = jax.jit(step,
-                             in_shardings=(p_ps, batch_ps, c_ps, bspec),
-                             out_shardings=(bspec, c_ps))
+            jitted = jax.jit(
+                step,
+                in_shardings=shd.as_shardings((p_ps, batch_ps, c_ps, bspec),
+                                              mesh),
+                out_shardings=shd.as_shardings((bspec, c_ps), mesh))
             args = (params_sds, batch_sds, caches, clen)
 
-    with jax.set_mesh(mesh), shd.sharding_hints(hints):
+    with shd.use_mesh(mesh), shd.sharding_hints(hints):
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()

@@ -42,6 +42,7 @@ class TernaryPolicy:
     n_max: Optional[int] = None        # ADC fidelity clamp (None = exact)
     pack: bool = False                 # 2-bit packed serve weights
     impl: str = "auto"                 # kernels/ops dispatch
+    fused: bool = True                 # single-launch multi-pass kernels
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -148,11 +149,12 @@ def _serve_apply(p, x, policy: TernaryPolicy, compute_dtype):
     if policy.act_mode == "ternary":
         qx, sx = T.quantize_act_ternary(x, policy.act_threshold)
         y = kops.tim_matmul(qx, w, sx, n_max=policy.n_max, impl=policy.impl,
-                            out_dtype=compute_dtype)
+                            fused=policy.fused, out_dtype=compute_dtype)
     elif policy.act_mode == "int2":
         qa, step = T.quantize_act_unsigned(x, bits=2)
         y = kops.tim_matmul_bitserial(qa, step, w, bits=2,
                                       n_max=policy.n_max, impl=policy.impl,
+                                      fused=policy.fused,
                                       out_dtype=compute_dtype)
     else:
         # weight-only: dequantize codes in-register, dense matmul

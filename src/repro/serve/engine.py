@@ -2,8 +2,12 @@
 
 ``ternarize_model`` converts trained (or random) master weights into
 TiM serving form — every TernaryDense weight becomes int8 codes (+
-optional 2-bit packing), exactly what the paper's tiles store.  The
-engine then runs:
+optional 2-bit packing), exactly what the paper's tiles store.  Ternary
+matmuls dispatch through kernels/ops with ``policy.fused=True`` by
+default, so asymmetric (two-phase) and bit-serial layers execute as a
+*single* kernel launch per matmul — one HBM weight stream instead of
+2–4 (``weight_stream_report`` quantifies the saving for a converted
+model).  The engine then runs:
 
   prefill_step : (tokens, caches) -> (next_token_logits, caches)
   decode_step  : one token/seq against the caches (this is what the
@@ -116,6 +120,51 @@ def _pack_maybe(q, scales, k_dim: int, pol: TernaryPolicy):
         widths[ax] = (0, pad)
         q = jnp.pad(q, widths)
     return TernaryWeight(pack2b(q, axis=ax), scales, True, k_dim)
+
+
+def weight_stream_report(params: Dict[str, Any], cfg: ArchConfig,
+                         decode_batch: int = 1) -> Dict[str, int]:
+    """Aggregate HBM weight-byte traffic for one forward pass.
+
+    Walks the converted param tree and sums, over every TernaryWeight
+    leaf, the analytic per-matmul weight stream (kernels/ops.
+    weight_stream_stats) for the fused single-launch route vs the
+    historical multi-launch route.  The ratio is the serving-side HBM
+    win of the fused kernels: 2x on two-phase asymmetric layers, bits x
+    on bit-serial ones (2 * bits x when the weights are also
+    asymmetric, since each plane historically paid both phases), and
+    1x for weight-only serving, which never launches a TiM kernel.
+    """
+    from repro.core.weights import TernaryWeight
+    from repro.kernels.ops import weight_stream_stats
+
+    pol = cfg.ternary
+    # weight-only serving (act_mode 'none') never runs a TiM launch:
+    # the dense matmul streams W exactly once either way
+    tim_serving = pol.act_mode in ("ternary", "int2")
+    bits = 2 if pol.act_mode == "int2" else None
+    fused_bytes = unfused_bytes = resident = 0
+
+    def visit(tree):
+        nonlocal fused_bytes, unfused_bytes, resident
+        if isinstance(tree, TernaryWeight):
+            resident += tree.nbytes_hbm
+            f = weight_stream_stats(decode_batch, tree, None, bits=bits,
+                                    fused=True)
+            u = weight_stream_stats(decode_batch, tree, None, bits=bits,
+                                    fused=False) if tim_serving else f
+            fused_bytes += f["weight_bytes_streamed"]
+            unfused_bytes += u["weight_bytes_streamed"]
+        elif isinstance(tree, dict):
+            for v in tree.values():
+                visit(v)
+
+    visit(params)
+    return {
+        "weight_bytes_resident": resident,
+        "weight_bytes_streamed_fused": fused_bytes,
+        "weight_bytes_streamed_unfused": unfused_bytes,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,68 @@
+"""Thin `hypothesis` fallback so property tests run in bare envs.
+
+When `hypothesis` is importable this module just re-exports the real
+``given`` / ``settings`` / ``strategies``.  Otherwise it provides a
+minimal deterministic stand-in covering exactly the strategy surface
+this repo's tests use (``st.integers``, ``st.sampled_from``): ``@given``
+runs the test body over ``max_examples`` example tuples drawn from a
+per-test seeded numpy Generator, and ``@settings`` honours only
+``max_examples``.  No shrinking, no database — the point is that
+``pytest`` collects and exercises the properties with zero optional
+dependencies, per the ISSUE-1 satellite.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import types
+    import zlib
+
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value,
+                                         endpoint=True)))
+
+    def _sampled_from(elements) -> _Strategy:
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    strategies = types.SimpleNamespace(integers=_integers,
+                                       sampled_from=_sampled_from)
+
+    class settings:  # noqa: N801 — mirrors the hypothesis API
+        def __init__(self, max_examples: int = 10, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._max_examples = self.max_examples
+            return fn
+
+    def given(*strats: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # read at call time so @settings works above or below
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 10))
+                rng = _np.random.default_rng(
+                    zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    drawn = tuple(s.draw(rng) for s in strats)
+                    fn(*args, *drawn, **kwargs)
+            # hide the drawn parameters from pytest's fixture resolution
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco

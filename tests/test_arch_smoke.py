@@ -3,6 +3,11 @@ on CPU, asserting output shapes and finiteness (no NaNs).
 
 The FULL configs are exercised only via the dry-run (ShapeDtypeStruct,
 no allocation) — see launch/dryrun.py and tests/test_dryrun_fast.py.
+
+Tiering: the forward sweep covers every architecture in the fast tier;
+the (much more compile-heavy) gradient and prefill/decode sweeps keep a
+representative per-family subset fast and push the rest to ``-m slow``
+so the default `pytest -q` finishes in minutes on CPU.
 """
 import jax
 import jax.numpy as jnp
@@ -15,6 +20,16 @@ from repro.models.losses import lm_loss
 
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 32
+
+# fast-tier representatives: dense, MoE, SSM, encoder — one per family.
+# The hybrid/VLM/huge archs compile for minutes on CPU and run as slow.
+_FAST_HEAVY = {"granite-34b", "granite-moe-3b-a800m", "mamba2-1.3b",
+               "chatglm3-6b", "hubert-xlarge"}
+
+
+def _tiered(names):
+    return [n if n in _FAST_HEAVY else
+            pytest.param(n, marks=pytest.mark.slow) for n in names]
 
 
 def _batch(cfg, key, b=B, s=S):
@@ -46,7 +61,7 @@ def test_forward_shapes_and_finite(name):
         assert float(lg[..., cfg.vocab_size:].max()) < -1e20
 
 
-@pytest.mark.parametrize("name", ARCH_NAMES)
+@pytest.mark.parametrize("name", _tiered(ARCH_NAMES))
 def test_train_step_gradients(name):
     cfg = get_config(name, smoke=True)
     params = tfm.init(cfg, KEY)
@@ -66,8 +81,8 @@ def test_train_step_gradients(name):
     assert gnorm > 0.0
 
 
-@pytest.mark.parametrize("name", [n for n in ARCH_NAMES
-                                  if get_config(n, True).supports_decode])
+@pytest.mark.parametrize("name", _tiered(
+    [n for n in ARCH_NAMES if get_config(n, True).supports_decode]))
 def test_prefill_decode_matches_full(name):
     cfg = get_config(name, smoke=True)
     params = tfm.init(cfg, KEY)

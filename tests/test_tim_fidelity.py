@@ -1,0 +1,211 @@
+"""Fidelity ladder of the behavioral TiM tile (core/tim_engine.py).
+
+Promised by the tim_engine docstring: validate the paper's n_max=8 /
+L=16 ADC clamp (§III-B, Fig. 6) and the P_SE(SE|n) sensing-error
+profile (§V-F, Figs. 17/18) against the behavioral oracle across the
+EXACT / SATURATING / NOISY configs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ternary import (
+    ENCODINGS, TernaryScales, quantize_act_ternary, quantize_act_unsigned,
+    ternarize,
+)
+from repro.core.tim_engine import (
+    EXACT, L_BLOCK, N_MAX, NOISY, SATURATING, TimConfig, bitserial_matmul,
+    block_counts, inject_sensing_errors, tim_matvec, tim_matmul_reference,
+)
+
+RNG = np.random.default_rng(11)
+
+
+def _randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+def _case(m=6, k=96, n=32, enc="symmetric", seed=0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    qw, sw = ternarize(w, enc)
+    qx, sx = quantize_act_ternary(x)
+    return qw, sw, qx, sx
+
+
+# ---------------------------------------------------------------------------
+# config plumbing
+# ---------------------------------------------------------------------------
+
+def test_config_constants_match_paper():
+    # Table II / §III-B: 3-bit flash ADC reliable to 8 of 16 rows
+    assert SATURATING.l_block == L_BLOCK == 16
+    assert SATURATING.n_max == N_MAX == 8
+    assert EXACT.n_max is None and not EXACT.sensing_error
+    assert NOISY.sensing_error and NOISY.n_max == N_MAX
+    assert EXACT.exact and not SATURATING.exact and not NOISY.exact
+
+
+def test_p_se_table_is_a_valid_error_profile():
+    # P_SE(SE|n) must be a probability profile that *grows* toward the
+    # saturated counts (bitline increments shrink near n_max, Fig. 17)
+    table = np.asarray(NOISY.p_se_table)
+    assert table.shape[0] == N_MAX + 1
+    assert (table >= 0).all() and (table <= 1).all()
+    assert (np.diff(table) >= 0).all()
+    assert table[N_MAX] > table[0]
+
+
+# ---------------------------------------------------------------------------
+# SATURATING: the n_max=8 / L=16 ADC clamp
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("enc", ENCODINGS)
+def test_adc_clamp_bounds_counts(enc):
+    qw, _, qx, _ = _case(enc=enc)
+    n, k = block_counts(qx, qw, SATURATING)
+    assert n.shape == (6, 96 // L_BLOCK, 32)
+    assert int(n.max()) <= N_MAX and int(k.max()) <= N_MAX
+    n_e, k_e = block_counts(qx, qw, EXACT)
+    # clamping only ever reduces, and exact counts cannot exceed L
+    assert bool(jnp.all(n <= n_e)) and bool(jnp.all(k <= k_e))
+    assert int(n_e.max()) <= L_BLOCK
+
+
+def test_adc_clamp_saturates_dense_worst_case():
+    # all-ones inputs x all-ones weights: every row of every block
+    # fires, exact count is L, ADC reads n_max — the Fig. 6 saturation
+    qx = jnp.ones((2, 2 * L_BLOCK), jnp.int8)
+    qw = jnp.ones((2 * L_BLOCK, 4), jnp.int8)
+    n_e, _ = block_counts(qx, qw, EXACT)
+    n_s, _ = block_counts(qx, qw, SATURATING)
+    assert int(n_e.min()) == L_BLOCK
+    assert int(n_s.max()) == N_MAX == int(n_s.min())
+
+
+def test_saturating_equals_exact_at_paper_sparsity():
+    # §III-B design bet: at >=40% zeros (plus input zeros) blocks rarely
+    # exceed 8 events, so the clamp has no effect on typical ternary
+    # workloads.  Gaussian weights/acts land well under the threshold.
+    qw, sw, qx, sx = _case(m=16, k=256, n=64, seed=5)
+    exact = tim_matvec(qx, qw, sw, sx, EXACT)
+    sat = tim_matvec(qx, qw, sw, sx, SATURATING)
+    match = np.mean(np.asarray(exact) == np.asarray(sat))
+    assert match > 0.95
+
+
+@pytest.mark.parametrize("enc", ENCODINGS)
+def test_saturating_two_phase_asymmetric(enc):
+    # two-phase execution composes with the clamp (each phase is its own
+    # hardware access); the result must match the per-phase oracle
+    qw, sw, qx, _ = _case(enc=enc, seed=7)
+    sxa = TernaryScales(jnp.float32(0.8), jnp.float32(0.4), sym=False)
+    got = tim_matvec(qx, qw, sw, sxa, SATURATING)
+    pos = jnp.where(qx > 0, 1, 0).astype(jnp.int8)
+    neg = jnp.where(qx < 0, 1, 0).astype(jnp.int8)
+
+    def phase(q):
+        n, k = block_counts(q, qw, SATURATING)
+        return (sw.pos.astype(jnp.float32) * n
+                - sw.neg.astype(jnp.float32) * k).sum(-2)
+
+    want = 0.8 * phase(pos) - 0.4 * phase(neg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bitserial_clamps_per_plane():
+    # bit-planes are separate accesses: the clamp applies before the
+    # PCU shift, so plane-1 saturation costs 2x in the output
+    qw = jnp.ones((L_BLOCK, 1), jnp.int8)
+    act = jnp.full((1, L_BLOCK), 3, jnp.int8)   # both planes all-ones
+    step = jnp.float32(1.0)
+    sw = TernaryScales(jnp.float32(1.0), jnp.float32(1.0), sym=True)
+    got = bitserial_matmul(act, step, qw, sw, 2, SATURATING)
+    # exact would be 16 + 2*16 = 48; clamped is 8 + 2*8 = 24
+    assert float(got[0, 0]) == 3 * N_MAX
+    exact = bitserial_matmul(act, step, qw, sw, 2, EXACT)
+    assert float(exact[0, 0]) == 3 * L_BLOCK
+
+
+# ---------------------------------------------------------------------------
+# NOISY: the P_SE sensing-error profile
+# ---------------------------------------------------------------------------
+
+def test_inject_errors_are_plus_minus_one_and_clamped():
+    cfg = TimConfig(p_se_table=(1.0,) * 9)   # force an error on every count
+    counts = jnp.asarray(RNG.integers(0, N_MAX + 1, size=(64, 64)),
+                         dtype=jnp.int32)
+    noisy = inject_sensing_errors(counts, cfg, jax.random.PRNGKey(0))
+    delta = np.asarray(noisy - counts)
+    assert set(np.unique(delta)).issubset({-1, 0, 1})   # 0 only at clamps
+    assert int(noisy.min()) >= 0 and int(noisy.max()) <= N_MAX
+    # away from the range edges every count must have moved
+    interior = (np.asarray(counts) > 0) & (np.asarray(counts) < N_MAX)
+    assert (delta[interior] != 0).all()
+
+
+def test_error_rate_tracks_p_se_table():
+    # counts pinned at n: observed flip rate ≈ P_SE(SE|n) (both ways off
+    # the clamp boundary; at the boundary half the flips are suppressed)
+    cfg = NOISY
+    key = jax.random.PRNGKey(3)
+    for n_val, p in [(5, cfg.p_se_table[5]), (7, cfg.p_se_table[7])]:
+        counts = jnp.full((400, 400), n_val, jnp.int32)
+        noisy = inject_sensing_errors(counts, cfg, key)
+        rate = float(jnp.mean((noisy != counts).astype(jnp.float32)))
+        assert abs(rate - p) < max(5e-4, 3 * p)
+    # reliable region: zero error below count 5
+    counts = jnp.full((400, 400), 3, jnp.int32)
+    assert bool(jnp.all(inject_sensing_errors(counts, cfg, key) == counts))
+
+
+def test_noisy_mean_error_rate_near_paper_p_e():
+    # end-to-end: with gaussian ternary codes the mixture over observed
+    # counts should land near the paper's P_E = 1.5e-4 (Fig. 18) —
+    # loose band, it is a mixture over the count distribution
+    qw, sw, qx, sx = _case(m=64, k=512, n=128, seed=9)
+    n, k = block_counts(qx, qw, SATURATING)
+    noisy_n = inject_sensing_errors(n, NOISY, jax.random.PRNGKey(1))
+    rate = float(jnp.mean((noisy_n != n).astype(jnp.float32)))
+    assert rate < 5e-3   # overwhelmingly reliable
+    sat = tim_matvec(qx, qw, sw, sx, SATURATING)
+    noisy = tim_matvec(qx, qw, sw, sx, NOISY, key=jax.random.PRNGKey(2))
+    # each flip moves one count by 1 → output moves by one scale unit
+    diff = np.abs(np.asarray(noisy) - np.asarray(sat))
+    assert (diff > 0).mean() < 0.05
+    assert diff.max() <= 4 * float(jnp.maximum(sw.pos, sw.neg))
+
+
+def test_noisy_requires_key():
+    qw, sw, qx, sx = _case()
+    with pytest.raises(AssertionError):
+        tim_matvec(qx, qw, sw, sx, NOISY)
+
+
+# ---------------------------------------------------------------------------
+# EXACT: anchors the ladder to dense math
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("enc", ENCODINGS)
+def test_exact_matches_dense_reference(enc):
+    qw, sw, qx, sx = _case(enc=enc, seed=13)
+    got = tim_matvec(qx, qw, sw, sx, EXACT)
+    want = tim_matmul_reference(qx, qw, sw, sx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bitserial_exact_matches_dense():
+    rng = np.random.default_rng(17)
+    w = jnp.asarray(rng.normal(size=(96, 24)).astype(np.float32))
+    x = jax.nn.relu(jnp.asarray(rng.normal(size=(5, 96)).astype(np.float32)))
+    qw, sw = ternarize(w, "asymmetric")
+    qa, step = quantize_act_unsigned(x, 2)
+    got = bitserial_matmul(qa, step, qw, sw, 2, EXACT)
+    wreal = jnp.where(qw > 0, sw.pos, sw.neg) * qw.astype(jnp.float32)
+    want = (qa.astype(jnp.float32) * step) @ wreal
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
