@@ -1,0 +1,115 @@
+"""Regression gate for the kernel-bench analytic baseline.
+
+``python -m benchmarks.check_baseline`` re-derives the deterministic
+kernel-bench columns (case rows, launch counts, HBM weight-byte
+accounting — everything except the machine-dependent ``*_us``
+wall-clock) and compares them against the tracked CSV at
+benchmarks/baselines/kernel_bench_baseline.csv.  It fails on
+
+  * missing rows (a case disappeared from the bench), and
+  * any changed analytic value (e.g. a weight_stream_stats regression
+    that silently inflates or deflates the fused kernels' claimed HBM
+    weight-traffic win).
+
+This begins the ROADMAP "tracked perf baseline" item without gating on
+wall-clock: CI runs the bench in interpret mode (``--exercise`` times
+the small paper-tile case once, driving the fused Pallas kernels
+through the interpreter) but only the analytic columns are compared.
+
+``--update`` regenerates the CSV after an intentional change (new rows
+are an error until recorded here, so additions stay deliberate).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+from typing import Dict, List
+
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baselines", "kernel_bench_baseline.csv")
+
+
+def _rows_to_csv(rows: List[Dict], path: str) -> None:
+    keys: List[str] = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+
+
+def _load_csv(path: str) -> Dict[str, Dict[str, str]]:
+    with open(path, newline="") as f:
+        return {r["case"]: r for r in csv.DictReader(f)}
+
+
+def compare_against_baseline(rows: List[Dict],
+                             baseline_path: str = BASELINE) -> List[str]:
+    """Return a list of human-readable problems (empty = pass)."""
+    if not os.path.exists(baseline_path):
+        return [f"baseline CSV missing: {baseline_path} "
+                f"(run with --update to create it)"]
+    base = _load_csv(baseline_path)
+    got = {r["case"]: r for r in rows}
+    problems = []
+    for case, brow in base.items():
+        if case not in got:
+            problems.append(f"missing bench row: {case}")
+            continue
+        grow = got[case]
+        for col, bval in brow.items():
+            if bval == "":   # column not applicable to this row kind
+                continue
+            gval = "" if grow.get(col) is None else str(grow.get(col))
+            if gval != bval:
+                problems.append(
+                    f"{case}.{col}: baseline {bval!r} != current {gval!r}")
+    for case in got:
+        if case not in base:
+            problems.append(f"unrecorded bench row: {case} "
+                            f"(run --update to track it)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline CSV from the current bench")
+    ap.add_argument("--exercise", action="store_true",
+                    help="also wall-clock the small case (runs the fused "
+                         "Pallas kernels in interpret mode); timings are "
+                         "printed, never compared")
+    args = ap.parse_args(argv)
+
+    from benchmarks.kernel_bench import bench, deterministic_view
+    full = bench(timed=args.exercise, quick=True)
+    if args.exercise:
+        for r in full:
+            us = {k: v for k, v in r.items() if k.endswith("_us")}
+            if us:
+                print(f"[exercise] {r['case']}: {us}")
+    rows = deterministic_view(full)
+
+    if args.update:
+        _rows_to_csv(rows, BASELINE)
+        print(f"[check_baseline] wrote {BASELINE} ({len(rows)} rows)")
+        return 0
+
+    problems = compare_against_baseline(rows)
+    if problems:
+        for p in problems:
+            print(f"[check_baseline] FAIL: {p}", file=sys.stderr)
+        return 1
+    print(f"[check_baseline] OK: {len(rows)} rows match the baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

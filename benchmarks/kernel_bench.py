@@ -7,11 +7,22 @@ analysis — but they verify the int8 S/T decomposition is not slower
 than dense fp32 even on CPU, and they feed run.py's us_per_call CSV.
 
 The asymmetric rows additionally compare the fused single-launch route
-against the historical two-launch route and report the analytic HBM
-weight-byte traffic of each (kernels/ops.weight_stream_stats): the
-fused kernels stream each weight tile once per matmul, so asymmetric
-layers — the dominant serving configuration — see a >=2x weight-byte
-reduction (4x for 2-bit bit-serial activations).
+against the historical two-launch route, and the bit-serial rows sweep
+the activation width (2-bit WRPN vs 4-bit serving — the ``int2`` /
+``int4`` policy knobs); both report the analytic HBM weight-byte
+traffic of each route (kernels/ops.weight_stream_stats).  The fused
+kernels stream each weight tile once per matmul, so asymmetric layers
+see a >=2x weight-byte reduction and bit-serial layers a ``bits``x one
+(2*bits x when the weights are also asymmetric) — the 2-vs-4-bit rows
+expose the crossover where extra activation precision stops being free.
+
+Modes: ``bench(timed=False)`` computes only the analytic columns (no
+jit, no wall-clock — what the CI baseline gate compares);
+``bench(quick=True)`` times only the small paper-tile case with minimal
+iterations (still exercising the fused Pallas kernels in interpret
+mode).  Column convention: anything ending in ``_us`` is wall-clock and
+machine-dependent; every other column is deterministic and tracked in
+benchmarks/baselines/kernel_bench_baseline.csv (see check_baseline.py).
 """
 from __future__ import annotations
 
@@ -22,9 +33,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ternary import quantize_act_ternary
+from repro.core.ternary import quantize_act_ternary, quantize_act_unsigned
 from repro.core.weights import ternarize_weight
 from repro.kernels import ops
+
+CASES = [
+    ("paper_tile_16x256", 16, 256, 256),
+    ("mid_256x1024x1024", 256, 1024, 1024),
+    ("large_512x4096x4096", 512, 4096, 4096),
+]
+
+BITSERIAL_BITS = (2, 4)
 
 
 def _time(fn, *args, iters=20, warmup=3) -> float:
@@ -38,49 +57,66 @@ def _time(fn, *args, iters=20, warmup=3) -> float:
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def bench() -> List[Dict[str, Any]]:
+def deterministic_view(rows: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Strip the machine-dependent wall-clock (``*_us``) columns; what
+    remains is the analytic baseline tracked in CSV."""
+    return [{k: v for k, v in r.items() if not k.endswith("_us")}
+            for r in rows]
+
+
+def bench(timed: bool = True, quick: bool = False) -> List[Dict[str, Any]]:
     rng = np.random.default_rng(0)
     rows = []
-    cases = [
-        ("paper_tile_16x256", 16, 256, 256),
-        ("mid_256x1024x1024", 256, 1024, 1024),
-        ("large_512x4096x4096", 512, 4096, 4096),
-    ]
-    for name, m, k, n in cases:
+    for name, m, k, n in CASES:
         w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
         x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
-        qx, sx = quantize_act_ternary(x)
-        tw = ternarize_weight(w, "symmetric", per_channel=True)
-        twp = ternarize_weight(w, "symmetric", per_channel=True, pack=True)
+        # quick mode times only the small case (the one that also runs
+        # the Pallas kernels in interpret mode)
+        time_this = timed and (not quick or m <= 64)
+        iters, warmup = (2, 1) if quick else (20, 3)
 
-        dense = jax.jit(lambda a, b: (a.astype(jnp.bfloat16)
-                                      @ b.astype(jnp.bfloat16)))
-        t_dense = _time(dense, x, w)
-        tim_xla = jax.jit(lambda q, s: ops.tim_matmul(q, tw, s, impl="xla"))
-        t_xla = _time(tim_xla, qx, sx)
-        tim_packed = jax.jit(
-            lambda q, s: ops.tim_matmul(q, twp, s, impl="xla"))
-        t_packed = _time(tim_packed, qx, sx)
-        row = {
-            "case": name,
-            "dense_bf16_us": round(t_dense, 1),
-            "tim_xla_int8_us": round(t_xla, 1),
-            "tim_xla_packed_us": round(t_packed, 1),
-            "weight_bytes_int8": tw.nbytes_hbm,
-            "weight_bytes_packed": twp.nbytes_hbm,
-        }
-        if m <= 64:  # interpret-mode pallas is slow; only tiny case
-            t_pl = _time(lambda q, s: ops.tim_matmul(q, tw, s,
-                                                     impl="pallas"),
-                         qx, sx, iters=3, warmup=1)
-            row["tim_pallas_interpret_us"] = round(t_pl, 1)
-        rows.append(row)
-        rows.append(_bench_asym(name, m, k, n, w, qx, sx))
+        rows.append(_bench_sym(name, m, k, n, w, x, time_this, iters,
+                               warmup))
+        rows.append(_bench_asym(name, m, k, n, w, x, time_this, iters,
+                                warmup))
+        for bits in BITSERIAL_BITS:
+            # the stacked bit-planes multiply M by `bits`: cap wall-clock
+            # at the mid case so the large row stays analytic-only
+            rows.append(_bench_bitserial(name, m, k, n, w, x, bits,
+                                         time_this and m <= 256, iters,
+                                         warmup))
     return rows
 
 
-def _bench_asym(name: str, m: int, k: int, n: int, w, qx, sx
-                ) -> Dict[str, Any]:
+def _bench_sym(name, m, k, n, w, x, timed, iters, warmup) -> Dict[str, Any]:
+    qx, sx = quantize_act_ternary(x)
+    tw = ternarize_weight(w, "symmetric", per_channel=True)
+    twp = ternarize_weight(w, "symmetric", per_channel=True, pack=True)
+    row: Dict[str, Any] = {
+        "case": name,
+        "weight_bytes_int8": tw.nbytes_hbm,
+        "weight_bytes_packed": twp.nbytes_hbm,
+    }
+    if not timed:
+        return row
+    dense = jax.jit(lambda a, b: (a.astype(jnp.bfloat16)
+                                  @ b.astype(jnp.bfloat16)))
+    row["dense_bf16_us"] = round(_time(dense, x, w, iters=iters,
+                                       warmup=warmup), 1)
+    tim_xla = jax.jit(lambda q, s: ops.tim_matmul(q, tw, s, impl="xla"))
+    row["tim_xla_int8_us"] = round(_time(tim_xla, qx, sx, iters=iters,
+                                         warmup=warmup), 1)
+    tim_packed = jax.jit(lambda q, s: ops.tim_matmul(q, twp, s, impl="xla"))
+    row["tim_xla_packed_us"] = round(_time(tim_packed, qx, sx, iters=iters,
+                                           warmup=warmup), 1)
+    if m <= 64:  # interpret-mode pallas is slow; only tiny case
+        t_pl = _time(lambda q, s: ops.tim_matmul(q, tw, s, impl="pallas"),
+                     qx, sx, iters=3, warmup=1)
+        row["tim_pallas_interpret_us"] = round(t_pl, 1)
+    return row
+
+
+def _bench_asym(name, m, k, n, w, x, timed, iters, warmup) -> Dict[str, Any]:
     """Fused vs two-launch on the asymmetric (two-phase) encoding.
 
     Wall-clock times the xla route (interpret-mode pallas is too slow to
@@ -92,20 +128,13 @@ def _bench_asym(name: str, m: int, k: int, n: int, w, qx, sx
     stays within one row-block (the decode regime) and converges to the
     two-launch total at large M.
     """
+    qx, sx = quantize_act_ternary(x)
     twa = ternarize_weight(w, "asymmetric", per_channel=True)
-    fused = jax.jit(lambda q, s: ops.tim_matmul(q, twa, s, impl="xla",
-                                                fused=True))
-    two = jax.jit(lambda q, s: ops.tim_matmul(q, twa, s, impl="xla",
-                                              fused=False))
-    t_fused = _time(fused, qx, sx)
-    t_two = _time(two, qx, sx)
     sf = ops.weight_stream_stats(m, twa, sx, fused=True)
     su = ops.weight_stream_stats(m, twa, sx, fused=False)
     sx_f = ops.weight_stream_stats(2 * m, twa, sx, fused=True)
-    row = {
+    row: Dict[str, Any] = {
         "case": name + "_asym",
-        "tim_xla_fused_us": round(t_fused, 1),
-        "tim_xla_two_launch_us": round(t_two, 1),
         "weight_streams_fused_kernel": sf["launches"],
         "weight_streams_two_launch": su["launches"],
         "weight_bytes_streamed_fused_kernel": sf["weight_bytes_streamed"],
@@ -114,6 +143,16 @@ def _bench_asym(name: str, m: int, k: int, n: int, w, qx, sx
         "hbm_weight_byte_reduction": round(
             su["weight_bytes_streamed"] / sf["weight_bytes_streamed"], 2),
     }
+    if not timed:
+        return row
+    fused = jax.jit(lambda q, s: ops.tim_matmul(q, twa, s, impl="xla",
+                                                fused=True))
+    two = jax.jit(lambda q, s: ops.tim_matmul(q, twa, s, impl="xla",
+                                              fused=False))
+    row["tim_xla_fused_us"] = round(_time(fused, qx, sx, iters=iters,
+                                          warmup=warmup), 1)
+    row["tim_xla_two_launch_us"] = round(_time(two, qx, sx, iters=iters,
+                                               warmup=warmup), 1)
     if m <= 64:  # direct fused-kernel evidence where interpret is viable
         t_plf = _time(lambda q, s: ops.tim_matmul(q, twa, s, impl="pallas",
                                                   fused=True),
@@ -123,4 +162,49 @@ def _bench_asym(name: str, m: int, k: int, n: int, w, qx, sx
                       qx, sx, iters=3, warmup=1)
         row["tim_pallas_fused_interpret_us"] = round(t_plf, 1)
         row["tim_pallas_two_launch_interpret_us"] = round(t_pl2, 1)
+    return row
+
+
+def _bench_bitserial(name, m, k, n, w, x, bits, timed, iters,
+                     warmup) -> Dict[str, Any]:
+    """Bit-serial activation width sweep (the int2 / int4 policy knobs).
+
+    One row per ``bits``: the fused kernel applies every plane against a
+    single weight stream, the historical route pays one launch per plane
+    (x2 on asymmetric weights for the degenerate negative phase), so the
+    analytic weight-traffic gap grows linearly with ``bits`` while the
+    fused wall-clock grows only in MXU passes — the 2-vs-4 rows place
+    the serving crossover.
+    """
+    twa = ternarize_weight(w, "asymmetric", per_channel=True)
+    qa, step = quantize_act_unsigned(jnp.abs(x), bits=bits)
+    sf = ops.weight_stream_stats(m, twa, None, bits=bits, fused=True)
+    su = ops.weight_stream_stats(m, twa, None, bits=bits, fused=False)
+    # 'unfused' columns are TOTALS for the whole matmul on the
+    # historical route: bits planes x (2 phases when asymmetric) launches
+    row: Dict[str, Any] = {
+        "case": f"{name}_bitserial_b{bits}",
+        "act_bits": bits,
+        "weight_streams_fused_kernel": sf["launches"],
+        "weight_streams_unfused": su["launches"],
+        "weight_bytes_streamed_fused_kernel": sf["weight_bytes_streamed"],
+        "weight_bytes_streamed_unfused": su["weight_bytes_streamed"],
+        "hbm_weight_byte_reduction": round(
+            su["weight_bytes_streamed"] / sf["weight_bytes_streamed"], 2),
+    }
+    if not timed:
+        return row
+    fused = jax.jit(lambda q, s: ops.tim_matmul_bitserial(
+        q, s, twa, bits=bits, impl="xla", fused=True))
+    two = jax.jit(lambda q, s: ops.tim_matmul_bitserial(
+        q, s, twa, bits=bits, impl="xla", fused=False))
+    row["tim_xla_fused_us"] = round(_time(fused, qa, step, iters=iters,
+                                          warmup=warmup), 1)
+    row["tim_xla_per_plane_us"] = round(_time(two, qa, step, iters=iters,
+                                              warmup=warmup), 1)
+    if m <= 64:
+        t_plf = _time(lambda q, s: ops.tim_matmul_bitserial(
+            q, s, twa, bits=bits, impl="pallas", fused=True),
+            qa, step, iters=3, warmup=1)
+        row["tim_pallas_fused_interpret_us"] = round(t_plf, 1)
     return row

@@ -102,7 +102,7 @@ def roofline_row(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
     useful_frac = mf_dev / flops_dev if flops_dev else 0.0
     # roofline fraction: useful model FLOP/s achieved at the bound vs peak
     ach_flops = mf_dev / step_time if step_time else 0.0
-    return {
+    row = {
         "arch": cell["arch"], "shape": cell["shape"],
         "mesh": cell["mesh"], "variant": cell.get("variant", "baseline"),
         "t_compute_s": t_compute, "t_memory_s": t_memory,
@@ -116,6 +116,23 @@ def roofline_row(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
         "temp_gb_per_dev": mem.get("temp_size_in_bytes", 0) / 2**30,
         "wire_mb_per_dev": wire / 2**20,
     }
+    ws = cell.get("weight_stream")
+    if ws:
+        # fused-kernel weight-stream terms (serve cells): the memory
+        # term above prices one weight stream (argument bytes read
+        # once); the unfused multi-launch route would have re-streamed
+        # the extra bytes on top of it.
+        extra = (ws["weight_bytes_streamed_unfused_per_dev"]
+                 - ws["weight_bytes_streamed_fused_per_dev"])
+        row.update({
+            "weight_stream_fused_gb_per_dev":
+                ws["weight_bytes_streamed_fused_per_dev"] / 2**30,
+            "weight_stream_unfused_gb_per_dev":
+                ws["weight_bytes_streamed_unfused_per_dev"] / 2**30,
+            "fused_traffic_ratio": ws["fused_traffic_ratio"],
+            "t_memory_unfused_s": t_memory + max(extra, 0) / HBM_BW,
+        })
+    return row
 
 
 def load_report(path: str) -> List[Dict[str, Any]]:

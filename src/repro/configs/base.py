@@ -70,6 +70,9 @@ class ArchConfig:
         assert self.n_layers % len(self.layout) == 0, (
             f"{self.name}: n_layers {self.n_layers} not divisible by "
             f"period {len(self.layout)}")
+        # NOTE: ternary.act_mode ('none' | 'ternary' | 'int<bits>', e.g.
+        # int2/int4 bit-serial serving) is validated by TernaryPolicy's
+        # own __post_init__ — a config can never hold an invalid mode.
 
     @property
     def n_periods(self) -> int:

@@ -47,7 +47,11 @@ class TernaryWeight:
 
     @property
     def nbytes_hbm(self) -> int:
-        return self.data.nbytes
+        # works for concrete arrays and ShapeDtypeStruct stand-ins (the
+        # dry-run cost model walks eval_shape'd param trees)
+        d = self.data
+        return int(getattr(d, "nbytes", None)
+                   or d.size * jnp.dtype(d.dtype).itemsize)
 
     def codes(self) -> jax.Array:
         """Materialize int8 codes (unpacks if necessary).

@@ -170,6 +170,32 @@ def hint_constrain(x, spec: Tuple[Optional[str], ...]):
     return jax.lax.with_sharding_constraint(x, ps)
 
 
+# Logical spec of the fused TiM matmuls' stacked operand: the fused xla
+# routes (kernels/ops._st_matmul_xla_fused_*) stack the per-phase /
+# per-bit-plane non-negative patterns along a FRESH leading axis, so the
+# operand is a (phases, M, K) int8 tensor — leading axis unsharded
+# (replicating it is the point: every device runs all phases over its M
+# shard against its local W tile), M on the batch (DP) axes, K unsharded
+# (it is the dot contraction against W's K).
+TIM_STACKED_SPEC: Tuple[Optional[str], ...] = (None, "batch", None)
+
+
+def tim_stacked_constraint(x):
+    """Keep the fused-TiM stacked activation on the batch (DP) axes.
+
+    The phase stack doubles (two-phase) or ``bits``-tuples (bit-serial)
+    the per-device M work; without a constraint GSPMD may resolve the
+    stack to fully replicated, which then re-gathers W for the single
+    dot and forfeits the fused kernels' one-weight-stream win.  (The
+    stack is a fresh leading axis on purpose — concatenating along the
+    batch-sharded M dim miscompiles on XLA:CPU 0.4.x, summing the
+    model-axis replicas of each activation shard.)  No-op outside an
+    active ``sharding_hints`` context, so kernel-level tests and plain
+    CPU runs see zero constraints.
+    """
+    return hint_constrain(x, TIM_STACKED_SPEC)
+
+
 # ---------------------------------------------------------------------------
 # ZeRO (optimizer-state sharding over the data axis)
 # ---------------------------------------------------------------------------

@@ -17,7 +17,17 @@ The contract (all impls agree to float tolerance):
 with I/W the weighted ternary decodings, optional per-L-block ADC
 saturation (``n_max``), and two-phase execution when the encoding
 demands it (asymmetric weights with signed inputs, or asymmetric
-inputs).
+inputs).  Every combination now lowers on every impl: 2-bit packed
+weights compose with the ADC-fidelity clamp (the pallas kernels force
+the K step to L=16 codes = 4 packed bytes and unpack in-VMEM before
+clamping), so ``tim_matmul(..., impl='pallas')`` with packed weights
+and ``n_max`` set is a supported serving configuration, not an error.
+
+Bit-serial activations take arbitrary ``bits`` (``tim_matmul_bitserial``);
+the policy level exposes 2-bit (WRPN, ``act_mode='int2'``) and 4-bit
+(``act_mode='int4'``) serving — the fused kernel applies all ``bits``
+planes against one weight stream, so the HBM weight-traffic win grows
+linearly with ``bits``.
 
 Fused multi-pass execution (default)
 ------------------------------------
@@ -68,61 +78,85 @@ def _as_vec(scale, n, dtype=jnp.float32):
 
 
 def _st_matmul_xla(x_q, w_q, w1, w2, i1, need_t, n_max, l_block=16):
-    """S/T decomposition in plain jnp (GSPMD-friendly path)."""
+    """S/T decomposition in plain jnp (GSPMD-friendly path).
+
+    ``x_q`` may carry leading batch dims — (..., M, K) codes against a
+    (K, N) weight.  The fused routes rely on this: they stack phase /
+    bit-plane patterns along a fresh leading axis.
+    """
+    cdims = (((x_q.ndim - 1,), (0,)), ((), ()))
     if n_max is None:
-        s = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
+        s = jax.lax.dot_general(x_q, w_q, cdims,
                                 preferred_element_type=jnp.int32)
         out = (w1 + w2) * 0.5 * s.astype(jnp.float32)
         if need_t:
-            t = jax.lax.dot_general(jnp.abs(x_q), jnp.abs(w_q),
-                                    (((1,), (0,)), ((), ())),
+            t = jax.lax.dot_general(jnp.abs(x_q), jnp.abs(w_q), cdims,
                                     preferred_element_type=jnp.int32)
             out = out + (w1 - w2) * 0.5 * t.astype(jnp.float32)
         return i1 * out
     # saturating: block the K dim and clamp counts per block
-    m, kdim = x_q.shape
+    kdim = x_q.shape[-1]
     pad = (-kdim) % l_block
     if pad:
-        x_q = jnp.pad(x_q, ((0, 0), (0, pad)))
+        widths = [(0, 0)] * (x_q.ndim - 1) + [(0, pad)]
+        x_q = jnp.pad(x_q, widths)
         w_q = jnp.pad(w_q, ((0, pad), (0, 0)))
-    nb = x_q.shape[1] // l_block
-    xb = x_q.reshape(m, nb, l_block).astype(jnp.int32)
+    nb = x_q.shape[-1] // l_block
+    xb = x_q.reshape(x_q.shape[:-1] + (nb, l_block)).astype(jnp.int32)
     wb = w_q.reshape(nb, l_block, -1).astype(jnp.int32)
-    s = jnp.einsum("mbl,bln->mbn", xb, wb)
-    t = jnp.einsum("mbl,bln->mbn", jnp.abs(xb), jnp.abs(wb))
+    s = jnp.einsum("...bl,bln->...bn", xb, wb)
+    t = jnp.einsum("...bl,bln->...bn", jnp.abs(xb), jnp.abs(wb))
     n = jnp.minimum((t + s) // 2, n_max)
     k = jnp.minimum((t - s) // 2, n_max)
-    out = (w1 * n.astype(jnp.float32) - w2 * k.astype(jnp.float32)).sum(1)
+    out = (w1 * n.astype(jnp.float32) - w2 * k.astype(jnp.float32)).sum(-2)
     return i1 * out
+
+
+def _constrain_stacked(x):
+    """Pin the phase/bit-plane-stacked activation to the batch (DP)
+    axes under GSPMD (no-op outside an active sharding_hints context).
+
+    Lazy import: kernels must stay importable without distrib (which
+    transitively imports configs -> nn -> this module).
+    """
+    from repro.distrib.sharding import tim_stacked_constraint
+    return tim_stacked_constraint(x)
 
 
 def _st_matmul_xla_fused_phases(x_q, w_q, w1, w2, i1, i2, need_t, n_max):
     """Two-phase S/T matmul with a single weight stream.
 
-    The pos/neg phase patterns (Fig. 5b) are stacked along M so one
-    dot_general reads W once; the signed i1*p1 - i2*p2 combination is
-    applied to the split halves.
+    The pos/neg phase patterns (Fig. 5b) are stacked along a fresh
+    leading axis so one dot_general reads W once; the signed
+    i1*p1 - i2*p2 combination is applied to the per-phase slices.
+
+    GSPMD note: the stack axis is deliberately a NEW (unsharded) dim,
+    not a concat along M.  Concatenating along the batch-sharded M dim
+    lowers to a dynamic-update-slice + all-reduce materialization that
+    sums the model-axis replicas of each activation shard (observed on
+    XLA:CPU 0.4.x: results scaled by the model axis size).  Stacking on
+    a fresh axis keeps every per-device tile local — the per-device M
+    work still doubles, W stays sharded exactly as in the unfused route.
     """
-    m = x_q.shape[0]
     pos = jnp.where(x_q > 0, 1, 0).astype(jnp.int8)
     neg = jnp.where(x_q < 0, 1, 0).astype(jnp.int8)
-    both = jnp.concatenate([pos, neg], axis=0)
+    both = _constrain_stacked(jnp.stack([pos, neg], axis=0))
     out = _st_matmul_xla(both, w_q, w1, w2, 1.0, need_t, n_max)
-    return i1 * out[:m] - i2 * out[m:]
+    return i1 * out[0] - i2 * out[1]
 
 
 def _st_matmul_xla_fused_bitserial(act_codes, w_q, w1, w2, step, bits,
                                    need_t, n_max):
     """Bit-serial S/T matmul with a single weight stream: all bit-planes
-    stacked along M, one dot_general, PCU shift applied on the split."""
-    m = act_codes.shape[0]
-    planes = jnp.concatenate(
+    stacked along a fresh leading axis (same GSPMD reasoning as the
+    two-phase route), one dot_general, PCU shift applied per slice."""
+    planes = _constrain_stacked(jnp.stack(
         [((act_codes >> b) & 1).astype(jnp.int8) for b in range(bits)],
-        axis=0)
+        axis=0))
     out = _st_matmul_xla(planes, w_q, w1, w2, 1.0, need_t, n_max)
-    acc = out[:m]
+    acc = out[0]
     for b in range(1, bits):
-        acc = acc + out[b * m:(b + 1) * m] * float(1 << b)
+        acc = acc + out[b] * float(1 << b)
     return acc * step
 
 
@@ -140,12 +174,8 @@ def _flatten_lead(x: jax.Array, w: TernaryWeight):
     return x.shape[:-1], w.shape[1], x.reshape(-1, x.shape[-1])
 
 
-def _dispatch_prelude(w: TernaryWeight, impl: str, n_max: Optional[int]):
-    """Shared entry-point prep: vectorize the weight scales and reject
-    the unsupported packed+fidelity combo."""
-    if impl == "pallas" and w.packed and n_max is not None:
-        raise NotImplementedError(
-            "packed weights + ADC fidelity mode: unpack first")
+def _dispatch_prelude(w: TernaryWeight):
+    """Shared entry-point prep: vectorize the weight scales."""
     n = w.shape[1]
     return _as_vec(w.scales.pos, n), _as_vec(w.scales.neg, n)
 
@@ -177,7 +207,7 @@ def tim_matmul(x_q: jax.Array, w: TernaryWeight,
                                                out_dtype=out_dtype)
         return out.reshape(lead + (n,))
 
-    w1, w2 = _dispatch_prelude(w, impl, n_max)
+    w1, w2 = _dispatch_prelude(w)
     asym_w = not w.scales.symmetric
     asym_i = i_scales is not None and not i_scales.symmetric
     need_phases = asym_i or asym_w
@@ -190,8 +220,8 @@ def tim_matmul(x_q: jax.Array, w: TernaryWeight,
             if w.packed:
                 return _tk.tim_matmul_packed_pallas(
                     _pad_packed_k(xq, w), w.data, w1, w2, jnp.asarray(i1),
-                    need_t=need_t, block_m=block_m, block_n=block_n,
-                    block_k=block_k, out_dtype=out_dtype,
+                    need_t=need_t, n_max=n_max, block_m=block_m,
+                    block_n=block_n, block_k=block_k, out_dtype=out_dtype,
                     interpret=interp)[..., :n]
             return _tk.tim_matmul_pallas(
                 xq, w.data, w1, w2, jnp.asarray(i1), need_t=need_t,
@@ -249,7 +279,7 @@ def tim_matmul_bitserial(act_codes: jax.Array, act_step: jax.Array,
 
     if impl != "ref" and fused:
         lead, n, a2 = _flatten_lead(act_codes, w)
-        w1, w2 = _dispatch_prelude(w, impl, n_max)
+        w1, w2 = _dispatch_prelude(w)
         need_t = not w.scales.symmetric
         if impl == "pallas":
             interp = not _on_tpu()

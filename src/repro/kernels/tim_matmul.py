@@ -51,7 +51,9 @@ clamped per L=16-row block (per phase / per plane, exactly as the tile
 hardware saturates each access) before digital accumulation.  This
 forces the K-grid step to L (=16), which is deliberately *not* a
 performance path — it exists to validate the paper's accuracy claims,
-while the fast path is what serving uses.
+while the fast path is what serving uses.  It composes with packed
+weights in every kernel: L=16 is 4-code aligned, so one K step is
+exactly 4 packed bytes and the in-VMEM unpack runs before the clamp.
 
 VMEM tiling: X tile (bm, bk) int8, W tile (bk, bn) int8, up to four
 int32 accumulators (bm, bn) in VMEM scratch.  bm/bn default to 128/256
@@ -110,7 +112,7 @@ def _clamped_st(s, t, n_max):
 
 def _tim_kernel(x_ref, w_ref, w1_ref, w2_ref, i1_ref, o_ref,
                 s_acc, t_acc, *, nsteps: int, need_t: bool,
-                n_max: Optional[int], out_dtype):
+                n_max: Optional[int], packed: bool, out_dtype):
     """Grid (M/bm, N/bn, K/bk); K innermost (arbitrary semantics)."""
     kk = pl.program_id(2)
 
@@ -121,7 +123,7 @@ def _tim_kernel(x_ref, w_ref, w1_ref, w2_ref, i1_ref, o_ref,
             t_acc[...] = jnp.zeros_like(t_acc)
 
     x = x_ref[...]
-    w = w_ref[...]
+    w = _unpack2b_tile(w_ref[...]) if packed else w_ref[...]
     s = _dot_i32(x, w)
     t = _dot_i32(jnp.abs(x), jnp.abs(w)) if need_t else None
 
@@ -235,7 +237,7 @@ def tim_matmul_pallas(x_q: jax.Array, w_q: jax.Array,
                       block_n=block_n, block_k=block_k)
     kernel = functools.partial(
         _tim_kernel, nsteps=plan.grid[2], need_t=need_t, n_max=n_max,
-        out_dtype=out_dtype)
+        packed=False, out_dtype=out_dtype)
 
     out = pl.pallas_call(
         kernel,
@@ -269,39 +271,13 @@ def _unpack2b_tile(pw):
     return q.reshape(bkp * CODES_PER_BYTE, bn).astype(jnp.int8)
 
 
-def _tim_kernel_packed(x_ref, pw_ref, w1_ref, w2_ref, i1_ref, o_ref,
-                       s_acc, t_acc, *, nsteps: int, need_t: bool,
-                       out_dtype):
-    kk = pl.program_id(2)
-
-    @pl.when(kk == 0)
-    def _init():
-        s_acc[...] = jnp.zeros_like(s_acc)
-        if need_t:
-            t_acc[...] = jnp.zeros_like(t_acc)
-
-    x = x_ref[...]
-    w = _unpack2b_tile(pw_ref[...])
-    s_acc[...] += _dot_i32(x, w)
-    if need_t:
-        t_acc[...] += _dot_i32(jnp.abs(x), jnp.abs(w))
-
-    @pl.when(kk == nsteps - 1)
-    def _done():
-        w1 = w1_ref[...].astype(jnp.float32)
-        w2 = w2_ref[...].astype(jnp.float32)
-        i1 = i1_ref[0].astype(jnp.float32)
-        t_fin = t_acc[...] if need_t else None
-        o_ref[...] = _epilogue(s_acc[...], t_fin, w1, w2, i1, out_dtype)
-
-
 @functools.partial(
     jax.jit,
-    static_argnames=("need_t", "block_m", "block_n", "block_k",
+    static_argnames=("need_t", "n_max", "block_m", "block_n", "block_k",
                      "out_dtype", "interpret"))
 def tim_matmul_packed_pallas(x_q: jax.Array, w_packed: jax.Array,
                              w1: jax.Array, w2: jax.Array, i1: jax.Array,
-                             *, need_t: bool,
+                             *, need_t: bool, n_max: Optional[int] = None,
                              block_m: int = DEFAULT_BM,
                              block_n: int = DEFAULT_BN,
                              block_k: int = DEFAULT_BK,
@@ -310,16 +286,22 @@ def tim_matmul_packed_pallas(x_q: jax.Array, w_packed: jax.Array,
     """Ternary matmul with 2-bit packed weights.
 
     x_q: (M, K) int8; w_packed: (K//4, N) uint8 (packed along K, axis 0).
+    ``n_max`` enables the per-L-block ADC clamp: the K grid step drops to
+    L=16 codes (4 packed bytes — 4-code aligned, so the in-VMEM unpack
+    composes with the clamp unchanged).
     """
     m, kdim = x_q.shape
     kp4, n = w_packed.shape
     assert kp4 * CODES_PER_BYTE == kdim, (x_q.shape, w_packed.shape)
+    if n_max is not None:
+        block_k = L_BLOCK
+        need_t = True
 
     plan = _tile_plan(x_q, w_packed, w1, w2, packed=True, block_m=block_m,
                       block_n=block_n, block_k=block_k)
     kernel = functools.partial(
-        _tim_kernel_packed, nsteps=plan.grid[2], need_t=need_t,
-        out_dtype=out_dtype)
+        _tim_kernel, nsteps=plan.grid[2], need_t=need_t, n_max=n_max,
+        packed=True, out_dtype=out_dtype)
 
     out = pl.pallas_call(
         kernel,
@@ -430,7 +412,6 @@ def tim_matmul_fused_pallas(x_q: jax.Array, w_data: jax.Array,
     """
     m, kdim = x_q.shape
     if packed:
-        assert n_max is None, "packed + ADC fidelity: unpack first"
         kp4, n = w_data.shape
         assert kp4 * CODES_PER_BYTE == kdim, (x_q.shape, w_data.shape)
     else:
@@ -526,7 +507,6 @@ def tim_matmul_bitserial_fused_pallas(act_codes: jax.Array,
     """
     m, kdim = act_codes.shape
     if packed:
-        assert n_max is None, "packed + ADC fidelity: unpack first"
         kp4, n = w_data.shape
         assert kp4 * CODES_PER_BYTE == kdim, (act_codes.shape, w_data.shape)
     else:

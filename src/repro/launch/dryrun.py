@@ -1,7 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the
-# device count at first init).  Everything below is normal code.
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512"
+                           ).strip()
+# The lines above MUST run before any other import (jax locks the device
+# count at first init).  Pre-existing XLA_FLAGS (user/CI) are preserved —
+# the device-count flag is *appended*.  Everything below is normal code.
 
 """Multi-pod dry-run: lower + compile every (architecture x input-shape)
 cell on the production meshes and extract the roofline terms.
@@ -31,6 +34,10 @@ Variants (--variant, '+'-composable) are the §Perf levers:
   moefull       replicate experts, shard capacity over data x model
   kvseq         shard the KV-cache sequence dim over `model`
   kv8           int8-quantized KV cache (per-token-per-head scales)
+  ternaryact    [T,T] serving: ternary activations through the TiM path
+  int2 / int4   bit-serial serving at 2 / 4 activation bits (the fused
+                kernels' weight-stream win scales with bits; see the
+                per-cell weight_stream report)
   gc8           int8 error-feedback gradient compression
   rematdots     save-dots remat policy
 """
@@ -231,6 +238,15 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh,
         cfg = cfg.replace(remat="dots")
     if "kv8" in feats:
         cfg = cfg.replace(kv_cache_dtype="int8")
+    if "ternaryact" in feats:
+        cfg = cfg.replace(ternary=cfg.ternary.replace(
+            encoding="asymmetric", act_mode="ternary"))
+    if "int2" in feats:
+        cfg = cfg.replace(ternary=cfg.ternary.replace(
+            encoding="asymmetric", act_mode="int2"))
+    if "int4" in feats:
+        cfg = cfg.replace(ternary=cfg.ternary.replace(
+            encoding="asymmetric", act_mode="int4"))
     if extra_cfg:
         cfg = cfg.replace(**extra_cfg)
 
@@ -301,6 +317,17 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh,
         p_ps = shd.pspecs_for_params(
             spec_tree, params_sds, rules, mesh,
             fsdp_axes=dp_axis_names(mesh) if fsdp_serve else ())
+
+        # fused-kernel HBM weight-stream accounting: the analytic fused
+        # vs multi-launch weight traffic for one forward of this cell's
+        # row count (kernels/ops.weight_stream_stats per ternary leaf)
+        from repro.launch.hlo_analysis import weight_stream_summary
+        from repro.serve.engine import weight_stream_report
+        mm_rows = shape.global_batch * (shape.seq_len
+                                        if shape.kind == "prefill" else 1)
+        result["weight_stream"] = weight_stream_summary(
+            weight_stream_report(params_sds, cfg, decode_batch=mm_rows),
+            n_dev)
 
         if shape.kind == "prefill":
             batch_sds = batch_specs(cfg, shape.global_batch, shape.seq_len)

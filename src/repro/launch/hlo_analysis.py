@@ -184,3 +184,33 @@ def analyze_hlo(hlo: str, n_devices: int = 1) -> Dict[str, Any]:
         "total_wire_bytes": sum(wire.values()),
         "n_computations": len(comps),
     }
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel HBM weight-stream accounting
+# ---------------------------------------------------------------------------
+
+def weight_stream_summary(report: Dict[str, int],
+                          n_devices: int = 1) -> Dict[str, Any]:
+    """Cost-model view of a serve cell's HBM weight traffic.
+
+    ``report`` is serve/engine.weight_stream_report's aggregate (built
+    from kernels/ops.weight_stream_stats over every TernaryWeight leaf):
+    the fused single-launch kernels stream each weight tile once per
+    matmul, the historical multi-launch route streams it once per phase
+    x bit-plane.  Per-device numbers assume weights are fully sharded
+    over the mesh (TP/2-D serving layouts — the dry-run's serving
+    default), so they are the *lower bound* the roofline memory term
+    should see; the ``fused_traffic_ratio`` is layout-independent.
+    """
+    fused = int(report["weight_bytes_streamed_fused"])
+    unfused = int(report["weight_bytes_streamed_unfused"])
+    nd = max(n_devices, 1)
+    return {
+        "weight_bytes_resident": int(report["weight_bytes_resident"]),
+        "weight_bytes_streamed_fused": fused,
+        "weight_bytes_streamed_unfused": unfused,
+        "weight_bytes_streamed_fused_per_dev": fused // nd,
+        "weight_bytes_streamed_unfused_per_dev": unfused // nd,
+        "fused_traffic_ratio": (unfused / fused) if fused else 1.0,
+    }

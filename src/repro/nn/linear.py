@@ -30,19 +30,50 @@ from repro.kernels import ops as kops
 from repro.nn.module import subkey, variance_scaling, zeros
 
 
+_MAX_ACT_BITS = 7  # unsigned codes must fit the kernels' int8 operands
+
+
 @dataclasses.dataclass(frozen=True)
 class TernaryPolicy:
-    """How ternary layers behave across the framework."""
+    """How ternary layers behave across the framework.
+
+    ``act_mode`` selects the activation path: ``none`` (weight-only
+    serving), ``ternary`` ([T,T] codes through the S/T kernels), or
+    ``int<bits>`` — WRPN-style unsigned bit-serial activations at an
+    arbitrary width (``int2`` and ``int4`` are the benchmarked serving
+    points; any 1 < bits <= 7 lowers through the same fused kernel).
+    """
 
     enabled: bool = True
     encoding: str = T.SYMMETRIC        # unweighted | symmetric | asymmetric
     learned_scales: bool = False       # TTQ: learn wp/wn during QAT
-    act_mode: str = "none"             # none | ternary | int2 (bit-serial)
+    act_mode: str = "none"             # none | ternary | int<bits>
     act_threshold: float = 0.5
     n_max: Optional[int] = None        # ADC fidelity clamp (None = exact)
     pack: bool = False                 # 2-bit packed serve weights
     impl: str = "auto"                 # kernels/ops dispatch
     fused: bool = True                 # single-launch multi-pass kernels
+
+    def __post_init__(self):
+        if self.act_mode not in ("none", "ternary"):
+            bits = self._parse_bits(self.act_mode)
+            if bits is None:
+                raise ValueError(
+                    f"act_mode {self.act_mode!r}: expected 'none', "
+                    f"'ternary', or 'int<bits>' with 1 < bits <= "
+                    f"{_MAX_ACT_BITS}")
+
+    @staticmethod
+    def _parse_bits(mode: str) -> Optional[int]:
+        if not (mode.startswith("int") and mode[3:].isdigit()):
+            return None
+        bits = int(mode[3:])
+        return bits if 1 < bits <= _MAX_ACT_BITS else None
+
+    @property
+    def act_bits(self) -> Optional[int]:
+        """Bit-serial activation width, or None for none/ternary."""
+        return self._parse_bits(self.act_mode)
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -136,8 +167,8 @@ def ternary_dense_apply(p, x, policy: TernaryPolicy,
     xq = x
     if policy.act_mode == "ternary":
         xq = T.fake_ternary_act(x, policy.act_threshold)
-    elif policy.act_mode == "int2":
-        xq = T.fake_quant_act_unsigned(x, bits=2)
+    elif policy.act_bits is not None:
+        xq = T.fake_quant_act_unsigned(x, bits=policy.act_bits)
     y = xq.astype(compute_dtype) @ wq.astype(compute_dtype)
     if "b" in p:
         y = y + p["b"].astype(compute_dtype)
@@ -150,9 +181,10 @@ def _serve_apply(p, x, policy: TernaryPolicy, compute_dtype):
         qx, sx = T.quantize_act_ternary(x, policy.act_threshold)
         y = kops.tim_matmul(qx, w, sx, n_max=policy.n_max, impl=policy.impl,
                             fused=policy.fused, out_dtype=compute_dtype)
-    elif policy.act_mode == "int2":
-        qa, step = T.quantize_act_unsigned(x, bits=2)
-        y = kops.tim_matmul_bitserial(qa, step, w, bits=2,
+    elif policy.act_bits is not None:
+        bits = policy.act_bits
+        qa, step = T.quantize_act_unsigned(x, bits=bits)
+        y = kops.tim_matmul_bitserial(qa, step, w, bits=bits,
                                       n_max=policy.n_max, impl=policy.impl,
                                       fused=policy.fused,
                                       out_dtype=compute_dtype)

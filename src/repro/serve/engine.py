@@ -131,9 +131,10 @@ def weight_stream_report(params: Dict[str, Any], cfg: ArchConfig,
     weight_stream_stats) for the fused single-launch route vs the
     historical multi-launch route.  The ratio is the serving-side HBM
     win of the fused kernels: 2x on two-phase asymmetric layers, bits x
-    on bit-serial ones (2 * bits x when the weights are also
-    asymmetric, since each plane historically paid both phases), and
-    1x for weight-only serving, which never launches a TiM kernel.
+    on bit-serial ones — any ``act_mode='int<bits>'``, e.g. 2x for int2
+    and 4x for int4 (2 * bits x when the weights are also asymmetric,
+    since each plane historically paid both phases) — and 1x for
+    weight-only serving, which never launches a TiM kernel.
     """
     from repro.core.weights import TernaryWeight
     from repro.kernels.ops import weight_stream_stats
@@ -141,8 +142,8 @@ def weight_stream_report(params: Dict[str, Any], cfg: ArchConfig,
     pol = cfg.ternary
     # weight-only serving (act_mode 'none') never runs a TiM launch:
     # the dense matmul streams W exactly once either way
-    tim_serving = pol.act_mode in ("ternary", "int2")
-    bits = 2 if pol.act_mode == "int2" else None
+    bits = pol.act_bits
+    tim_serving = pol.act_mode == "ternary" or bits is not None
     fused_bytes = unfused_bytes = resident = 0
 
     def visit(tree):
@@ -220,15 +221,24 @@ class Request:
 
 
 class ServeEngine:
-    """Slot-based continuous batching over a fixed-size decode batch."""
+    """Slot-based continuous batching over a fixed-size decode batch.
+
+    ``oversize`` controls prompts longer than ``max_len - 1`` (the cache
+    must keep at least one slot free for the first decoded token):
+    ``'error'`` rejects them at ``submit`` with a ValueError,
+    ``'truncate'`` keeps the most recent ``max_len - 1`` tokens.
+    """
 
     def __init__(self, params, cfg: ArchConfig, batch_slots: int,
-                 max_len: int, greedy: bool = True, seed: int = 0):
+                 max_len: int, greedy: bool = True, seed: int = 0,
+                 oversize: str = "error"):
+        assert oversize in ("error", "truncate"), oversize
         self.params = params
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
         self.greedy = greedy
+        self.oversize = oversize
         self.key = jax.random.PRNGKey(seed)
 
         self.caches = tfm.init_caches(cfg, batch_slots, max_len)
@@ -244,21 +254,33 @@ class ServeEngine:
         self._prefill_cache = {}
 
     def submit(self, req: Request):
+        limit = self.max_len - 1   # >= 1 cache slot for the first token
+        plen = len(req.prompt)
+        if plen > limit and self.oversize != "truncate":
+            raise ValueError(
+                f"prompt of {plen} tokens exceeds the engine's "
+                f"max_len - 1 = {limit} (max_len={self.max_len}); "
+                f"resubmit a shorter prompt or construct the engine "
+                f"with oversize='truncate'")
         self.queue.append(req)
 
-    def _prefill_fn(self, plen: int):
-        if plen not in self._prefill_cache:
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_cache:
             cfg = self.cfg
 
-            def fn(params, batch, caches, slot_caches_len):
+            def fn(params, batch, caches, last_pos):
                 hidden, new_caches, _ = tfm.forward(
                     params, cfg, batch, mode="prefill", caches=caches,
                     cache_len=jnp.zeros((1,), jnp.int32))
-                lg = tfm.logits(params, cfg, hidden[:, -1:])
+                # the prompt is right-padded to the bucket length: the
+                # last *valid* position is plen - 1, not bucket - 1
+                last = jax.lax.dynamic_slice_in_dim(hidden, last_pos, 1,
+                                                    axis=1)
+                lg = tfm.logits(params, cfg, last)
                 return lg[:, 0], new_caches
 
-            self._prefill_cache[plen] = jax.jit(fn)
-        return self._prefill_cache[plen]
+            self._prefill_cache[bucket] = jax.jit(fn)
+        return self._prefill_cache[bucket]
 
     def _bucket(self, n: int) -> int:
         b = 16
@@ -271,10 +293,17 @@ class ServeEngine:
             if self.slot_req[slot] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
-            plen = len(req.prompt)
+            tokens_in = req.prompt
+            limit = self.max_len - 1
+            if len(tokens_in) > limit:
+                # oversize == 'truncate' (submit rejected it otherwise):
+                # keep the most recent context, WITHOUT mutating the
+                # caller's Request — req.prompt stays intact
+                tokens_in = tokens_in[len(tokens_in) - limit:]
+            plen = len(tokens_in)
             bucket = self._bucket(plen)
             prompt = np.zeros((1, bucket), np.int32)
-            prompt[0, :plen] = req.prompt
+            prompt[0, :plen] = tokens_in
             batch = {"tokens": jnp.asarray(prompt)}
             if req.media is not None:
                 batch["media"] = jnp.asarray(req.media[None])
@@ -282,7 +311,7 @@ class ServeEngine:
             # batch cache at this slot
             mini = tfm.init_caches(self.cfg, 1, self.max_len)
             lg, mini = self._prefill_fn(bucket)(
-                self.params, batch, mini, None)
+                self.params, batch, mini, jnp.asarray(plen - 1, jnp.int32))
             # account for bucket padding: valid length is plen
             self.caches = jax.tree_util.tree_map(
                 lambda big, small: big.at[:, slot].set(small[:, 0]),

@@ -1,0 +1,42 @@
+"""The kernel-bench analytic baseline gate (benchmarks/check_baseline).
+
+Runs the bench with wall-clock disabled — only the deterministic
+columns (launch counts, HBM weight-byte accounting) are derived — and
+asserts they match the tracked CSV.  This is the same comparison the CI
+step runs; keeping it in the fast tier means a weight_stream_stats
+regression fails locally before it reaches CI.
+"""
+import os
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO)
+
+
+def test_kernel_bench_analytic_baseline():
+    from benchmarks.check_baseline import compare_against_baseline
+    from benchmarks.kernel_bench import bench, deterministic_view
+
+    rows = deterministic_view(bench(timed=False))
+    problems = compare_against_baseline(rows)
+    assert not problems, "\n".join(problems)
+
+
+def test_bitserial_rows_expose_crossover():
+    """The 2-vs-4-bit rows must show the linear fused-traffic win."""
+    from benchmarks.kernel_bench import bench
+
+    rows = {r["case"]: r for r in bench(timed=False)}
+    b2 = rows["paper_tile_16x256_bitserial_b2"]
+    b4 = rows["paper_tile_16x256_bitserial_b4"]
+    # fused: one stream regardless of bits; unfused totals = 2*bits
+    # launches (bits planes x 2 phases on asymmetric weights)
+    assert b2["weight_streams_fused_kernel"] == 1
+    assert b4["weight_streams_fused_kernel"] == 1
+    assert b2["weight_streams_unfused"] == 4
+    assert b4["weight_streams_unfused"] == 8
+    assert b4["weight_bytes_streamed_unfused"] \
+        == 2 * b2["weight_bytes_streamed_unfused"]
+    assert b4["hbm_weight_byte_reduction"] == 2 * b2["hbm_weight_byte_reduction"]

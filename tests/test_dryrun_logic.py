@@ -59,6 +59,57 @@ def test_serve_params_packed_are_quarter_size():
     assert codes_bytes(packed) * 4 <= codes_bytes(plain) + 1024
 
 
+def test_xla_flags_preserved_on_import():
+    """launch/dryrun must APPEND its device-count flag — overwriting
+    XLA_FLAGS silently discards user/CI flags."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env["XLA_FLAGS"] = "--xla_cpu_enable_fast_math=false"
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.launch.dryrun, os; print(os.environ['XLA_FLAGS'])"],
+        env=env, capture_output=True, text=True, timeout=240)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    flags = proc.stdout.strip().splitlines()[-1]
+    assert "--xla_cpu_enable_fast_math=false" in flags, flags
+    assert "--xla_force_host_platform_device_count=512" in flags, flags
+
+
+def test_weight_stream_summary_math():
+    from repro.launch.hlo_analysis import weight_stream_summary
+    rep = {"weight_bytes_resident": 1000,
+           "weight_bytes_streamed_fused": 4000,
+           "weight_bytes_streamed_unfused": 16000}
+    s = weight_stream_summary(rep, n_devices=8)
+    assert s["weight_bytes_streamed_fused_per_dev"] == 500
+    assert s["weight_bytes_streamed_unfused_per_dev"] == 2000
+    assert s["fused_traffic_ratio"] == 4.0
+    # degenerate (no ternary leaves): ratio defined, no div-by-zero
+    z = weight_stream_summary({"weight_bytes_resident": 0,
+                               "weight_bytes_streamed_fused": 0,
+                               "weight_bytes_streamed_unfused": 0}, 8)
+    assert z["fused_traffic_ratio"] == 1.0
+
+
+def test_weight_stream_report_on_sds_tree():
+    """The dry-run walks eval_shape'd (ShapeDtypeStruct) param trees;
+    the accounting must work without concrete arrays."""
+    import jax
+    from repro.launch.dryrun import param_specs
+    from repro.serve.engine import weight_stream_report
+
+    cfg = get_config("chatglm3-6b")
+    cfg = cfg.replace(ternary=cfg.ternary.replace(
+        encoding="asymmetric", act_mode="ternary"))
+    sds = param_specs(cfg, serve=True)
+    rep = weight_stream_report(sds, cfg, decode_batch=128)
+    assert rep["weight_bytes_resident"] > 0
+    # asymmetric two-phase serving: the historical route streams 2x
+    assert rep["weight_bytes_streamed_unfused"] \
+        == 2 * rep["weight_bytes_streamed_fused"]
+
+
 @pytest.mark.slow
 def test_one_cell_compiles_in_subprocess():
     """End-to-end dry-run of the fastest cell on the real 256-dev mesh."""
@@ -77,3 +128,8 @@ def test_one_cell_compiles_in_subprocess():
         report = json.load(open(out))
         assert report[0]["status"] == "ok"
         assert report[0]["hlo"]["dot_flops"] > 0
+        # serve cells carry the fused weight-stream accounting
+        ws = report[0]["weight_stream"]
+        assert ws["weight_bytes_streamed_fused"] > 0
+        assert ws["weight_bytes_streamed_unfused"] \
+            >= ws["weight_bytes_streamed_fused"]

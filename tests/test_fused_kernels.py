@@ -125,6 +125,47 @@ def test_fused_saturating_matches_oracle(enc, impl):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("shape", [(6, 96, 40), (5, 130, 48), (3, 20, 7)])
+@pytest.mark.parametrize("enc,asym_inputs", [
+    ("symmetric", False),
+    ("asymmetric", False),
+    ("symmetric", True),
+    ("asymmetric", True),
+])
+@pytest.mark.parametrize("fused", [True, False])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_saturating_packed_matches_oracle(shape, enc, asym_inputs, fused,
+                                          impl):
+    """Packed weights + ADC fidelity (the combination that used to raise
+    NotImplementedError on pallas): the 2-bit in-VMEM unpack composes
+    with the per-L-block clamp on every impl, fused and unfused, across
+    the symmetric/asymmetric x ragged-shape matrix."""
+    m, k, n = shape
+    tw, qx, sx = _case(m, k, n, enc, asym_inputs, pack=True, seed=2)
+    want = ref.ternary_matmul_saturating_ref(qx, tw.codes(), tw.scales, sx,
+                                             n_max=8)
+    got = ops.tim_matmul(qx, tw, sx, impl=impl, n_max=8, fused=fused)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("pack", [False, True])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_bitserial_saturating_packed(pack, impl):
+    """Bit-serial + n_max (+ packed): fused matches the historical
+    one-launch-per-plane route, which clamps each plane separately."""
+    m, k, n = 5, 64, 24
+    rng = np.random.default_rng(8)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    x = jnp.asarray(np.abs(rng.normal(size=(m, k))).astype(np.float32))
+    qa, step = quantize_act_unsigned(x, 2)
+    tw = ternarize_weight(w, "asymmetric", per_channel=True, pack=pack)
+    got = ops.tim_matmul_bitserial(qa, step, tw, bits=2, n_max=8,
+                                   impl=impl, fused=True)
+    want = ops.tim_matmul_bitserial(qa, step, tw, bits=2, n_max=8,
+                                    impl=impl, fused=False)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("enc", ["unweighted", "symmetric", "asymmetric"])
 @pytest.mark.parametrize("pack", [False, True])
@@ -141,6 +182,27 @@ def test_fused_bitserial_matches_dense(shape, enc, pack, impl):
                                    fused=True)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
     unfused = ops.tim_matmul_bitserial(qa, step, tw, bits=2, impl=impl,
+                                       fused=False)
+    np.testing.assert_allclose(got, unfused, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("pack", [False, True])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_fused_bitserial_4bit_matches_dense(pack, impl):
+    """bits=4 (the act_mode='int4' serving point) against the dense
+    oracle: 16-level codes, exact PCU shifts, one weight stream."""
+    m, k, n = 5, 130, 48
+    rng = np.random.default_rng(9)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    x = jnp.asarray(np.abs(rng.normal(size=(m, k))).astype(np.float32))
+    qa, step = quantize_act_unsigned(x, 4)
+    assert int(qa.max()) > 3, "4-bit codes should exceed the 2-bit range"
+    tw = ternarize_weight(w, "asymmetric", per_channel=True, pack=pack)
+    want = (qa.astype(jnp.float32) * step) @ tw.dequantize()
+    got = ops.tim_matmul_bitserial(qa, step, tw, bits=4, impl=impl,
+                                   fused=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    unfused = ops.tim_matmul_bitserial(qa, step, tw, bits=4, impl=impl,
                                        fused=False)
     np.testing.assert_allclose(got, unfused, rtol=1e-5, atol=1e-5)
 
@@ -175,6 +237,11 @@ def test_weight_stream_reduction():
     bs_fused = ops.weight_stream_stats(64, tw, None, bits=2, fused=True)
     assert bs_two["weight_bytes_streamed"] \
         == 4 * bs_fused["weight_bytes_streamed"]
+    # the win grows linearly with bits: int4 -> 2 phases x 4 planes
+    bs4_two = ops.weight_stream_stats(64, tw, None, bits=4, fused=False)
+    bs4_fused = ops.weight_stream_stats(64, tw, None, bits=4, fused=True)
+    assert bs4_two["weight_bytes_streamed"] \
+        == 8 * bs4_fused["weight_bytes_streamed"]
     # symmetric weights + symmetric inputs never needed a second stream
     tws = ternarize_weight(w, "symmetric", per_channel=True)
     assert ops.weight_stream_stats(64, tws, None, fused=False)["launches"] == 1
@@ -205,6 +272,27 @@ def test_serve_weight_stream_report():
     rep_wo = weight_stream_report(params, cfg_wo, decode_batch=8)
     assert rep_wo["weight_bytes_streamed_unfused"] \
         == rep_wo["weight_bytes_streamed_fused"]
+    # int4 bit-serial on asymmetric weights: 2 phases x 4 planes -> 8x
+    cfg_i4 = dataclasses.replace(cfg, ternary=cfg.ternary.replace(
+        act_mode="int4"))
+    rep_i4 = weight_stream_report(params, cfg_i4, decode_batch=8)
+    assert rep_i4["weight_bytes_streamed_unfused"] \
+        == 8 * rep_i4["weight_bytes_streamed_fused"]
+
+
+def test_policy_act_bits_parsing():
+    from repro.nn.linear import TernaryPolicy
+
+    assert TernaryPolicy(act_mode="none").act_bits is None
+    assert TernaryPolicy(act_mode="ternary").act_bits is None
+    assert TernaryPolicy(act_mode="int2").act_bits == 2
+    assert TernaryPolicy(act_mode="int4").act_bits == 4
+    with pytest.raises(ValueError):
+        TernaryPolicy(act_mode="int1")      # 1-bit: use ternary instead
+    with pytest.raises(ValueError):
+        TernaryPolicy(act_mode="int8")      # codes would overflow int8
+    with pytest.raises(ValueError):
+        TernaryPolicy(act_mode="fp8")
 
 
 @pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])

@@ -53,10 +53,11 @@ def test_ttq_learned_scales_train_and_serve():
     assert err < 0.05, err
 
 
-@pytest.mark.parametrize("act_mode", ["ternary", "int2"])
+@pytest.mark.parametrize("act_mode", ["ternary", "int2", "int4"])
 def test_paper_faithful_activation_modes(act_mode):
-    """[T,T] (HitNet-style) and [2,T] (WRPN-style) through the full LM:
-    QAT trains finite, serving runs the TiM S/T (or bit-serial) path."""
+    """[T,T] (HitNet-style), [2,T] (WRPN-style) and the 4-bit serving
+    point through the full LM: QAT trains finite, serving runs the TiM
+    S/T (or arbitrary-bits bit-serial) path."""
     cfg = get_config("chatglm3-6b", smoke=True)
     cfg = cfg.replace(ternary=cfg.ternary.replace(act_mode=act_mode))
     params = tfm.init(cfg, KEY)
