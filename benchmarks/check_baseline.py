@@ -18,6 +18,17 @@ through the interpreter) but only the analytic columns are compared.
 
 ``--update`` regenerates the CSV after an intentional change (new rows
 are an error until recorded here, so additions stay deliberate).
+
+Wall-clock gate (opt-in, ROADMAP "regression-gate the us/call" item):
+with ``BENCH_WALLCLOCK=1`` the timed ``*_us`` columns are additionally
+compared against benchmarks/baselines/kernel_bench_wallclock.csv and
+the check fails when any timing regresses beyond the tolerance band
+(``BENCH_WALLCLOCK_TOL``, default 0.5 = +50%; timings getting *faster*
+never fail).  Wall-clock is machine-dependent: the tracked CSV is only
+meaningful for a FIXED runner class — regenerate it with
+``BENCH_WALLCLOCK=1 ... --update`` on the runner class that will
+enforce it, and leave the variable unset everywhere else (CI's shared
+runners keep it off; see docs/serving.md §benchmark gates).
 """
 from __future__ import annotations
 
@@ -29,6 +40,36 @@ from typing import Dict, List
 
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "baselines", "kernel_bench_baseline.csv")
+WALLCLOCK_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "baselines", "kernel_bench_wallclock.csv")
+
+
+def wallclock_enabled() -> bool:
+    return os.environ.get("BENCH_WALLCLOCK", "") == "1"
+
+
+def wallclock_tolerance() -> float:
+    return float(os.environ.get("BENCH_WALLCLOCK_TOL", "0.5"))
+
+
+def wallclock_reps() -> int:
+    return int(os.environ.get("BENCH_WALLCLOCK_REPS", "3"))
+
+
+def merge_timed_min(reps: List[List[Dict]]) -> List[Dict]:
+    """Column-wise min of the ``*_us`` timings across bench repetitions
+    (min is the robust wall-clock estimator: scheduler noise only ever
+    inflates a timing).  Non-timed columns come from the first rep."""
+    merged = [dict(r) for r in reps[0]]
+    by_case = [{r["case"]: r for r in rep} for rep in reps[1:]]
+    for row in merged:
+        for col, val in row.items():
+            if not col.endswith("_us"):
+                continue
+            vals = [val] + [rep[row["case"]].get(col) for rep in by_case]
+            row[col] = min(v for v in vals if v is not None)
+    return merged
 
 
 def _rows_to_csv(rows: List[Dict], path: str) -> None:
@@ -78,6 +119,64 @@ def compare_against_baseline(rows: List[Dict],
     return problems
 
 
+def wallclock_view(rows: List[Dict]) -> List[Dict]:
+    """Keep only case + the machine-dependent ``*_us`` columns."""
+    out = []
+    for r in rows:
+        us = {k: v for k, v in r.items() if k.endswith("_us")}
+        if us:
+            out.append({"case": r["case"], **us})
+    return out
+
+
+def compare_wallclock(rows: List[Dict],
+                      baseline_path: str = WALLCLOCK_BASELINE,
+                      tol: float = 0.5) -> List[str]:
+    """Tolerance-band check of the timed columns (empty = pass).
+
+    A column regresses when current > baseline * (1 + tol); faster
+    is never a failure.  Only meaningful on the fixed runner class the
+    baseline CSV was recorded on.
+    """
+    if not os.path.exists(baseline_path):
+        return [f"wall-clock baseline missing: {baseline_path} "
+                f"(run with BENCH_WALLCLOCK=1 --update to create it)"]
+    base = _load_csv(baseline_path)
+    got = {r["case"]: r for r in wallclock_view(rows)}
+    problems = []
+    for case, brow in base.items():
+        if case not in got:
+            problems.append(f"wall-clock: missing timed row {case}")
+            continue
+        for col, bval in brow.items():
+            if col == "case" or bval in ("", None):
+                continue
+            gval = got[case].get(col)
+            if gval in ("", None):
+                problems.append(f"wall-clock: {case}.{col} not timed "
+                                f"(baseline {bval}us)")
+                continue
+            b, g = float(bval), float(gval)
+            if g > b * (1.0 + tol):
+                problems.append(
+                    f"wall-clock regression {case}.{col}: "
+                    f"{g:.1f}us > {b:.1f}us * (1 + {tol:g})")
+    # the analytic gate's discipline applies here too: new timed rows /
+    # columns are an error until recorded, so additions stay deliberate
+    for case, grow in got.items():
+        if case not in base:
+            problems.append(f"wall-clock: unrecorded timed row {case} "
+                            f"(run BENCH_WALLCLOCK=1 --update)")
+            continue
+        for col, gval in grow.items():
+            if col != "case" and gval not in ("", None) \
+                    and base[case].get(col) in ("", None):
+                problems.append(
+                    f"wall-clock: unrecorded timed column {case}.{col} "
+                    f"(run BENCH_WALLCLOCK=1 --update)")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--update", action="store_true",
@@ -88,9 +187,16 @@ def main(argv=None) -> int:
                          "printed, never compared")
     args = ap.parse_args(argv)
 
+    wallclock = wallclock_enabled()
     from benchmarks.kernel_bench import bench, deterministic_view
-    full = bench(timed=args.exercise, quick=True)
-    if args.exercise:
+    full = bench(timed=args.exercise or wallclock, quick=True)
+    if wallclock:
+        # min over repetitions stabilizes the quick-mode timings enough
+        # to gate on (single-shot quick timings vary several x)
+        full = merge_timed_min(
+            [full] + [bench(timed=True, quick=True)
+                      for _ in range(wallclock_reps() - 1)])
+    if args.exercise or wallclock:
         for r in full:
             us = {k: v for k, v in r.items() if k.endswith("_us")}
             if us:
@@ -100,14 +206,23 @@ def main(argv=None) -> int:
     if args.update:
         _rows_to_csv(rows, BASELINE)
         print(f"[check_baseline] wrote {BASELINE} ({len(rows)} rows)")
+        if wallclock:
+            wrows = wallclock_view(full)
+            _rows_to_csv(wrows, WALLCLOCK_BASELINE)
+            print(f"[check_baseline] wrote {WALLCLOCK_BASELINE} "
+                  f"({len(wrows)} timed rows)")
         return 0
 
     problems = compare_against_baseline(rows)
+    if wallclock:
+        problems += compare_wallclock(full, tol=wallclock_tolerance())
     if problems:
         for p in problems:
             print(f"[check_baseline] FAIL: {p}", file=sys.stderr)
         return 1
-    print(f"[check_baseline] OK: {len(rows)} rows match the baseline")
+    gate = " + wall-clock band" if wallclock else ""
+    print(f"[check_baseline] OK: {len(rows)} rows match the baseline"
+          + gate)
     return 0
 
 

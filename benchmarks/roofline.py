@@ -74,6 +74,13 @@ def model_flops(arch: str, shape: Dict[str, Any], kind: str) -> float:
     if sc.kind == "prefill":
         tokens = sc.seq_len * sc.global_batch
         return 2.0 * n_act * tokens
+    if sc.kind == "mixed":
+        # canonical unified-step fill: every slot decodes one token
+        # except one streaming a full prefill chunk.  The (slots, chunk)
+        # grid lowers more FLOPs than this — MODEL/HLO exposes the
+        # padding overhead the token-budget scheduler amortizes against
+        # the shared weight stream.
+        return 2.0 * n_act * (sc.global_batch - 1 + sc.chunk)
     # decode: one token per sequence
     return 2.0 * n_act * sc.global_batch
 

@@ -101,12 +101,18 @@ class ArchConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ShapeConfig:
-    """One assigned (seq_len, global_batch) input-shape cell."""
+    """One assigned (seq_len, global_batch) input-shape cell.
+
+    ``chunk`` (mixed cells only) is the per-slot token-grid width of
+    the serving engine's unified chunked-prefill/decode step: the cell
+    lowers a (global_batch, chunk) token grid against a seq_len cache.
+    """
 
     name: str
     seq_len: int
     global_batch: int
-    kind: str            # train | prefill | decode | long_decode
+    kind: str            # train | prefill | decode | long_decode | mixed
+    chunk: int = 0
 
 
 SHAPES = {
@@ -114,12 +120,16 @@ SHAPES = {
     "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
     "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
     "long_500k": ShapeConfig("long_500k", 524288, 1, "long_decode"),
+    # continuous batching's steady state: 128 decode slots, one of which
+    # streams a 64-token prefill chunk through the shared cache
+    "mixed_32k": ShapeConfig("mixed_32k", 32768, 128, "mixed", chunk=64),
 }
 
 
 def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
     """Dry-run skip logic per the assignment rules."""
-    if shape.kind in ("decode", "long_decode") and not cfg.supports_decode:
+    if shape.kind in ("decode", "long_decode", "mixed") \
+            and not cfg.supports_decode:
         return False, "encoder-only arch has no decode step"
     if shape.kind == "long_decode" and not cfg.sub_quadratic:
         return False, ("pure full-attention arch: 500k context is "

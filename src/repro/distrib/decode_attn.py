@@ -1,4 +1,5 @@
-"""Sequence-parallel decode attention (the long_500k enabler).
+"""Sequence-parallel decode / mixed-chunk attention (the long_500k
+enabler).
 
 For long-context decode the KV cache is sharded along its *sequence*
 dim (batch=1 leaves no other axis).  Plain GSPMD would all-gather the
@@ -10,7 +11,15 @@ flash-attention log-sum-exp identity using three tiny psums:
     l   = sum_i l_i * exp(m_i - m)
     out = sum_i o_i * l_i * exp(m_i - m) / l
 
-Per-step communication is O(B * H * D) — independent of context length.
+Per-step communication is O(B * Sq * H * D) — independent of context
+length.
+
+``sharded_mixed_attention`` is the chunked-prefill generalization the
+serving engine's unified step needs: Sq >= 1 new tokens per slot at
+per-slot write offsets (``q_offset``), causally masked against global
+cache positions, so a prefill chunk can stream into a sequence-sharded
+cache without gathering it.  ``sharded_decode_attention`` is its
+Sq == 1 wrapper (kept for the long_500k decode cells).
 """
 from __future__ import annotations
 
@@ -24,21 +33,27 @@ from jax.experimental.shard_map import shard_map
 NEG_INF = -1e30
 
 
-def _local_partial(q, k, v, kv_base, cache_len):
+def _local_partial(q, k, v, kv_base, cache_len, q_offset=None):
     """Local attention stats over this device's cache shard.
 
-    q: (B, 1, H, D); k/v: (B, S_loc, Hk, D); kv_base: global index of
-    local position 0; cache_len: (B,) valid global length.
-    Returns m, l: (B, Hk, G, 1), o: (B, Hk, G, 1, D) partials.
+    q: (B, Sq, H, D); k/v: (B, S_loc, Hk, D); kv_base: global index of
+    local position 0; cache_len: (B,) valid global length; q_offset:
+    (B,) global position of each slot's query 0 (None: no causal mask —
+    classic last-token decode, validity alone is the mask).
+    Returns m, l: (B, Hk, G, Sq), o: (B, Hk, G, Sq, D) partials.
     """
-    b, _, h, d = q.shape
+    b, sq, h, d = q.shape
     s_loc, hk = k.shape[1], k.shape[2]
     g = h // hk
-    qg = q.reshape(b, 1, hk, g, d).astype(jnp.float32) * (d ** -0.5)
+    qg = q.reshape(b, sq, hk, g, d).astype(jnp.float32) * (d ** -0.5)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
     kpos = kv_base + jnp.arange(s_loc)
     valid = kpos[None] < cache_len[:, None]                  # (B, S_loc)
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    if q_offset is not None:
+        qpos = q_offset[:, None] + jnp.arange(sq)[None, :]   # (B, Sq)
+        causal = qpos[:, :, None] >= kpos[None, None, :]     # (B, Sq, S_loc)
+        s = jnp.where(causal[:, None, None, :, :], s, NEG_INF)
     m = jnp.max(s, axis=-1)
     m_safe = jnp.maximum(m, -1e29)
     p = jnp.exp(s - m_safe[..., None])
@@ -47,37 +62,60 @@ def _local_partial(q, k, v, kv_base, cache_len):
     return m, l, o
 
 
-def sharded_decode_attention(q, k_cache, v_cache, cache_len,
-                             mesh: Mesh, seq_axis: str = "data"):
-    """q: (B,1,H,D) replicated over seq_axis; caches (B,S,Hk,D) sharded
-    on dim 1 over seq_axis; cache_len (B,) replicated."""
+def sharded_mixed_attention(q, k_cache, v_cache, cache_len,
+                            mesh: Mesh, seq_axis: str = "data",
+                            q_offset: Optional[jax.Array] = None):
+    """q: (B,Sq,H,D) replicated over seq_axis; caches (B,S,Hk,D) sharded
+    on dim 1 over seq_axis; cache_len / q_offset (B,) replicated.
+
+    cache_len is the post-append valid length (the Sq new tokens' K/V
+    must already be written at [q_offset, q_offset + n_new)); q_offset
+    enables causal masking at the per-slot nonzero offset."""
     n = mesh.shape[seq_axis]
     s_global = k_cache.shape[1]
     s_loc = s_global // n
 
-    def body(qs, ks, vs, cl):
+    def body(qs, ks, vs, cl, qo):
         idx = jax.lax.axis_index(seq_axis)
-        m, l, o = _local_partial(qs, ks, vs, idx * s_loc, cl)
+        m, l, o = _local_partial(qs, ks, vs, idx * s_loc, cl, qo)
         m_g = jax.lax.pmax(m, seq_axis)
-        corr = jnp.exp(jnp.maximum(m - m_g, -1e29) * (m > NEG_INF / 2))
-        # simpler & safe: corr = exp(m - m_g) with m clamped
+        # lse merge: corr = exp(m - m_g) with both clamped finite so
+        # fully-masked shards contribute exactly zero
         corr = jnp.exp(jnp.maximum(m, -1e29) - jnp.maximum(m_g, -1e29))
         l_g = jax.lax.psum(l * corr, seq_axis)
         o_g = jax.lax.psum(o * corr[..., None], seq_axis)
         out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
-        b, hk, g, one, d = out.shape
-        return jnp.moveaxis(out, 3, 1).reshape(b, 1, hk * g, d).astype(
+        b, hk, g, sq, d = out.shape
+        return jnp.moveaxis(out, 3, 1).reshape(b, sq, hk * g, d).astype(
             qs.dtype)
 
-    b, _, h, d = q.shape
-    return shard_map(
-        body, mesh=mesh,
-        in_specs=(P(), P(None, seq_axis), P(None, seq_axis), P()),
-        out_specs=P(),
-    )(q, k_cache, v_cache, cache_len)
+    in_specs = [P(), P(None, seq_axis), P(None, seq_axis), P(), P()]
+    args = [q, k_cache, v_cache, cache_len,
+            jnp.zeros_like(cache_len) if q_offset is None else q_offset]
+    if q_offset is None:
+        # preserve the decode contract: no causal term, validity only
+        fn = lambda qs, ks, vs, cl, qo: body(qs, ks, vs, cl, None)
+    else:
+        fn = body
+    return shard_map(fn, mesh=mesh, in_specs=tuple(in_specs),
+                     out_specs=P())(*args)
+
+
+def sharded_decode_attention(q, k_cache, v_cache, cache_len,
+                             mesh: Mesh, seq_axis: str = "data"):
+    """One-token decode (Sq == 1) against a sequence-sharded cache."""
+    return sharded_mixed_attention(q, k_cache, v_cache, cache_len, mesh,
+                                   seq_axis)
 
 
 def reference_decode_attention(q, k_cache, v_cache, cache_len):
     """Unsharded oracle for tests."""
     from repro.nn.attention import decode_attention
     return decode_attention(q, k_cache, v_cache, cache_len)
+
+
+def reference_mixed_attention(q, k_cache, v_cache, cache_len, q_offset):
+    """Unsharded oracle for the mixed-chunk case."""
+    from repro.nn.attention import mixed_attention
+    return mixed_attention(q, k_cache, v_cache, cache_len, q_offset,
+                           chunk_kv=k_cache.shape[1])

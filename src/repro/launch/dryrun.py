@@ -21,7 +21,11 @@ For each supported cell this driver:
 
 Shapes:   train_4k lowers the full train_step (fwd+bwd+AdamW);
           prefill_32k lowers prefill (logits + cache build);
-          decode_32k / long_500k lower serve_step (1 token vs KV cache).
+          decode_32k / long_500k lower serve_step (1 token vs KV cache);
+          mixed_32k lowers the serving engine's unified chunked-prefill
+          step (a (slots, chunk) token grid mixing decode tokens and
+          prefill chunks against the shared cache — the continuous-
+          batching steady state).
 
 Variants (--variant, '+'-composable) are the §Perf levers:
   baseline      paper-faithful: int8 ternary codes, weight-only matmul
@@ -60,7 +64,7 @@ from repro.launch.mesh import dp_axis_names, make_production_mesh
 from repro.models import transformer as tfm
 from repro.models.losses import lm_loss
 from repro.serve.engine import make_decode_step, make_prefill_step, \
-    ternarize_model
+    make_unified_step, ternarize_model
 from repro.train.optimizer import OptConfig, adamw_init, adamw_update
 
 SDS = jax.ShapeDtypeStruct
@@ -95,6 +99,8 @@ def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
         return train_batch_specs(cfg, shape.global_batch, shape.seq_len)
     if shape.kind == "prefill":
         return batch_specs(cfg, shape.global_batch, shape.seq_len)
+    if shape.kind == "mixed":
+        return batch_specs(cfg, shape.global_batch, shape.chunk)
     return batch_specs(cfg, shape.global_batch, 1)  # decode
 
 
@@ -323,8 +329,9 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh,
         # row count (kernels/ops.weight_stream_stats per ternary leaf)
         from repro.launch.hlo_analysis import weight_stream_summary
         from repro.serve.engine import weight_stream_report
-        mm_rows = shape.global_batch * (shape.seq_len
-                                        if shape.kind == "prefill" else 1)
+        mm_rows = shape.global_batch * (
+            shape.seq_len if shape.kind == "prefill"
+            else shape.chunk if shape.kind == "mixed" else 1)
         result["weight_stream"] = weight_stream_summary(
             weight_stream_report(params_sds, cfg, decode_batch=mm_rows),
             n_dev)
@@ -340,6 +347,26 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh,
                 in_shardings=shd.as_shardings((p_ps, batch_ps, c_ps), mesh),
                 out_shardings=shd.as_shardings((bspec, c_ps), mesh))
             args = (params_sds, batch_sds, caches)
+        elif shape.kind == "mixed":
+            # the serving engine's unified step: a (slots, chunk) token
+            # grid against the shared seq_len cache, per-slot offsets +
+            # valid counts.  Canonical fill: every slot decodes 1 token
+            # except one streaming a full prefill chunk.
+            batch_sds = batch_specs(cfg, shape.global_batch, shape.chunk)
+            caches = cache_sds(cfg, shape.global_batch, shape.seq_len)
+            c_ps = shd.tree_pspecs(tfm.cache_specs(cfg, shard_cache), rules)
+            clen = SDS((shape.global_batch,), jnp.int32)
+            nnew = SDS((shape.global_batch,), jnp.int32)
+            batch_ps = jax.tree_util.tree_map(lambda _: bspec, batch_sds)
+            result["grid_tokens"] = shape.global_batch * shape.chunk
+            result["scheduled_tokens"] = shape.global_batch - 1 + shape.chunk
+            step = make_unified_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=shd.as_shardings(
+                    (p_ps, batch_ps, c_ps, bspec, bspec), mesh),
+                out_shardings=shd.as_shardings((bspec, c_ps), mesh))
+            args = (params_sds, batch_sds, caches, clen, nnew)
         else:
             batch_sds = batch_specs(cfg, shape.global_batch, 1)
             caches = cache_sds(cfg, shape.global_batch, shape.seq_len)

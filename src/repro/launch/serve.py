@@ -24,6 +24,11 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk width of the unified step")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="max real tokens scheduled per engine "
+                         "iteration (default: slots + chunk)")
     ap.add_argument("--pack", action="store_true",
                     help="2-bit packed weights (TPC density)")
     ap.add_argument("--ckpt", default=None)
@@ -49,17 +54,20 @@ def main():
     sparams = ternarize_model(params, cfg)
 
     engine = ServeEngine(sparams, cfg, batch_slots=args.slots,
-                         max_len=args.max_len)
+                         max_len=args.max_len, chunk=args.chunk,
+                         token_budget=args.token_budget)
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
         media = None
         if cfg.n_media_tokens:
             media = rng.normal(size=(cfg.n_media_tokens, cfg.media_dim)
                                ).astype(np.float32)
+        # chunked prefill admits anything up to max_len — mix in long
+        # prompts that the pre-chunking engine had to reject
+        plen = int(rng.integers(4, 24)) if uid % 4 else args.max_len
         engine.submit(Request(
             uid=uid,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                int(rng.integers(4, 24))).astype(np.int32),
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
             max_new_tokens=args.max_new, media=media))
     t0 = time.perf_counter()
     done = engine.run_until_done()

@@ -9,7 +9,9 @@ One code path covers all 10 assigned architectures:
   * every matmul is a TernaryDense (the paper's technique is first-class:
     QAT in training, TiM codes at serving);
   * modes: 'train' (no cache), 'prefill' (build caches), 'decode'
-    (one token against caches).
+    (one token against caches), 'mixed' (chunked-prefill serving: S
+    tokens per slot appended at per-slot cache offsets, ragged via
+    ``n_new``).
 
 Caches are a pytree stacked over periods mirroring the layout:
 attention blocks hold {k, v}; mamba blocks hold {conv, ssm}; cross-attn
@@ -115,7 +117,8 @@ def _kv_dequantize(codes: jax.Array, scale: jax.Array, dtype):
 
 
 def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
-                      cache, cache_len, media, cross: bool):
+                      cache, cache_len, media, cross: bool,
+                      n_new=None):
     b, s, _ = x.shape
     hd, h, hk = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     pol = cfg.ternary
@@ -167,28 +170,42 @@ def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
                 vc = jax.lax.dynamic_update_slice(
                     cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
                 new_cache = {"k": kc, "v": vc}
-        else:  # decode: s == 1
-            bidx = jnp.arange(b)
+        else:  # decode / mixed: s new tokens per slot at cache_len offset
+            smax = cache["k"].shape[1]
+            col = jnp.arange(s)[None, :]
+            nn_ = jnp.full((b,), s, jnp.int32) if n_new is None else n_new
+            # K/V of the s new tokens land at [cache_len, cache_len +
+            # n_new); padding columns are pointed out of bounds and
+            # dropped, so shorter chunks never corrupt the shared cache
+            widx = jnp.where(col < nn_[:, None],
+                             cache_len[:, None] + col, smax)
+            bidx = jnp.arange(b)[:, None]
             if quant:
-                kq, ks = _kv_quantize(k[:, 0])
-                vq, vs = _kv_quantize(v[:, 0])
+                kq, ks = _kv_quantize(k)
+                vq, vs = _kv_quantize(v)
                 new_cache = {
-                    "k": cache["k"].at[bidx, cache_len].set(kq),
-                    "v": cache["v"].at[bidx, cache_len].set(vq),
-                    "k_scale": cache["k_scale"].at[bidx, cache_len].set(ks),
-                    "v_scale": cache["v_scale"].at[bidx, cache_len].set(vs),
+                    "k": cache["k"].at[bidx, widx].set(kq, mode="drop"),
+                    "v": cache["v"].at[bidx, widx].set(vq, mode="drop"),
+                    "k_scale": cache["k_scale"].at[bidx, widx].set(
+                        ks, mode="drop"),
+                    "v_scale": cache["v_scale"].at[bidx, widx].set(
+                        vs, mode="drop"),
                 }
                 kd = _kv_dequantize(new_cache["k"], new_cache["k_scale"],
                                     cd)
                 vd = _kv_dequantize(new_cache["v"], new_cache["v_scale"],
                                     cd)
-                o = attn.decode_attention(q, kd, vd, cache_len + 1)
+                o = attn.mixed_attention(q, kd, vd, cache_len + nn_,
+                                         cache_len,
+                                         chunk_kv=cfg.attn_chunk_kv)
             else:
-                kc = cache["k"].at[bidx, cache_len].set(
-                    k[:, 0].astype(cache["k"].dtype))
-                vc = cache["v"].at[bidx, cache_len].set(
-                    v[:, 0].astype(cache["v"].dtype))
-                o = attn.decode_attention(q, kc, vc, cache_len + 1)
+                kc = cache["k"].at[bidx, widx].set(
+                    k.astype(cache["k"].dtype), mode="drop")
+                vc = cache["v"].at[bidx, widx].set(
+                    v.astype(cache["v"].dtype), mode="drop")
+                o = attn.mixed_attention(q, kc, vc, cache_len + nn_,
+                                         cache_len,
+                                         chunk_kv=cfg.attn_chunk_kv)
                 new_cache = {"k": kc, "v": vc}
 
     o = o.reshape(b, s, h * hd)
@@ -239,17 +256,17 @@ def _block_specs(cfg: ArchConfig, spec: BlockSpec):
 
 
 def _block_apply(p, x, cfg: ArchConfig, spec: BlockSpec, positions,
-                 mode, cache, cache_len, media):
+                 mode, cache, cache_len, media, n_new=None):
     aux = jnp.zeros((), jnp.float32)
     if spec.mixer in ("attn", "cross_attn"):
         x, new_cache = _attn_block_apply(
             p, x, cfg, positions, mode, cache, cache_len, media,
-            spec.mixer == "cross_attn")
+            spec.mixer == "cross_attn", n_new)
     else:
         h_in = _norm_apply(cfg, p["ln1"], x)
         mcache = cache if (cache and "ssm" in cache) else None
         y, new_mcache = mamba_apply(p["mamba"], h_in, cfg.mamba, cfg.ternary,
-                                    cfg.cdtype, mcache)
+                                    cfg.cdtype, mcache, n_new=n_new)
         x = x + y.astype(x.dtype)
         new_cache = new_mcache if new_mcache is not None else cache
 
@@ -259,10 +276,11 @@ def _block_apply(p, x, cfg: ArchConfig, spec: BlockSpec, positions,
             y = mlp_apply(p["ffn"], h_in, cfg.ternary, cfg.mlp_kind,
                           cfg.cdtype)
         else:
-            # decode is dropless (capacity == tokens*k): per-token results
-            # must not depend on what else is in the batch
+            # decode/mixed serving is dropless (capacity == tokens*k):
+            # per-token results must not depend on what else is in the
+            # batch (or on the padding columns of a mixed step)
             cap = (x.shape[0] * x.shape[1] * cfg.moe.top_k
-                   if mode == "decode" else None)
+                   if mode in ("decode", "mixed") else None)
             y, aux = moe_apply(p["ffn"], h_in, cfg.moe, cfg.ternary,
                                cfg.cdtype, capacity_override=cap)
         if spec.mixer == "cross_attn":
@@ -337,15 +355,25 @@ def embed_inputs(params: Params, cfg: ArchConfig, batch: Dict[str, Any]):
 def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
             mode: str = "train",
             caches: Optional[Params] = None,
-            cache_len: Optional[jax.Array] = None
+            cache_len: Optional[jax.Array] = None,
+            n_new: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
-    """Returns (hidden (B,S,d), new_caches (or None), moe_aux_loss)."""
+    """Returns (hidden (B,S,d), new_caches (or None), moe_aux_loss).
+
+    Modes: 'train' (no cache), 'prefill' (build caches from position 0),
+    'decode' (one token per slot against the caches), and 'mixed' — the
+    serving engine's unified step: S tokens per slot appended at the
+    per-slot ``cache_len`` write offset, of which only the first
+    ``n_new[b]`` are real (n_new == None means all S).  'decode' is the
+    S == 1 special case of 'mixed'; both share the same cache-append +
+    offset-causal attention path.
+    """
     from repro.distrib.sharding import hint_constrain
 
     x, media = embed_inputs(params, cfg, batch)
     b, s = x.shape[0], x.shape[1]
-    if mode == "decode":
-        positions = cache_len[:, None]  # (B, 1)
+    if mode in ("decode", "mixed"):
+        positions = cache_len[:, None] + jnp.arange(s)[None, :]  # (B, S)
     else:
         positions = jnp.arange(s)[None, :]
     # sequence-parallel residual stream (Megatron-SP) when hinted:
@@ -362,7 +390,7 @@ def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
                 f"b{j}"]
             x, nc, aux = _block_apply(
                 period_params[f"b{j}"], x, cfg, spec, positions, mode,
-                blk_cache, cache_len, media)
+                blk_cache, cache_len, media, n_new)
             x = hint_constrain(x, ("batch", "seq", None))
             new_caches[f"b{j}"] = nc if nc is not None else {}
             aux_total = aux_total + aux

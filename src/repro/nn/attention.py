@@ -1,4 +1,4 @@
-"""Attention ops: GQA, flash-style chunked attention, decode, cross.
+"""Attention ops: GQA, flash-style chunked attention, decode, mixed, cross.
 
 All functions take (batch, seq, heads, head_dim) tensors.  GQA never
 materializes repeated KV heads — queries are grouped (B, S, Hk, G, D)
@@ -8,10 +8,18 @@ and contracted against the shared KV head directly.
 training and long prefill: an online-softmax scan over KV chunks (the
 flash-attention recurrence expressed in XLA; scores never exceed
 (B, Hk, G, Sq, chunk_kv)).
+
+``q_offset`` may be a scalar (every sequence starts at the same
+position — plain chunked prefill) or a (B,) array of per-sequence
+offsets — the chunked-prefill serving case, where each batch slot's
+chunk resumes at that slot's ``cache_len``.  ``mixed_attention`` wraps
+this for the serving engine's unified prefill/decode step: S new tokens
+per slot written at per-slot offsets into a shared (B, S_max) cache,
+causally masked at the (nonzero) offset.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +33,17 @@ def _group_queries(q: jax.Array, n_kv: int) -> jax.Array:
     return q.reshape(b, s, n_kv, h // n_kv, d)
 
 
+def _query_positions(q_offset, sq: int) -> jax.Array:
+    """(1, Sq) positions for a scalar offset, (B, Sq) for per-batch."""
+    off = jnp.asarray(q_offset)
+    if off.ndim == 0:
+        return (jnp.arange(sq) + off)[None, :]
+    return off[:, None] + jnp.arange(sq)[None, :]
+
+
 def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                    causal: bool = True,
-                   q_offset: int = 0,
+                   q_offset: Union[int, jax.Array] = 0,
                    kv_valid_len: Optional[jax.Array] = None,
                    compute_dtype=jnp.float32) -> jax.Array:
     """Reference attention (materializes all scores).  Small seqs/tests."""
@@ -37,10 +53,10 @@ def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     scale = d ** -0.5
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(compute_dtype)) * scale
     if causal:
-        qpos = jnp.arange(sq) + q_offset
+        qpos = _query_positions(q_offset, sq)          # (1 or B, sq)
         kpos = jnp.arange(sk)
-        mask = qpos[:, None] >= kpos[None, :]
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mask = qpos[:, :, None] >= kpos[None, None, :]  # (1 or B, sq, sk)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
     if kv_valid_len is not None:
         kmask = jnp.arange(sk)[None] < kv_valid_len[:, None]  # (b, sk)
         s = jnp.where(kmask[:, None, None, None], s, NEG_INF)
@@ -52,12 +68,13 @@ def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                       causal: bool = True,
                       chunk_kv: int = 1024,
-                      q_offset: int = 0,
+                      q_offset: Union[int, jax.Array] = 0,
                       kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
     """Online-softmax attention, O(Sq * chunk_kv) score memory.
 
-    Supports GQA, causality across an arbitrary q_offset (for chunked
-    prefill), and ragged KV validity (for batched serving).
+    Supports GQA, causality across an arbitrary (scalar or per-batch)
+    q_offset (for chunked prefill), and ragged KV validity (for batched
+    serving).
     """
     b, sq, h, d = q.shape
     sk, hk = k.shape[1], k.shape[2]
@@ -77,7 +94,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     qg = _group_queries(q, hk).astype(jnp.float32) * (d ** -0.5)
     kc = k.reshape(b, nc, chunk_kv, hk, d)
     vc = v.reshape(b, nc, chunk_kv, hk, d)
-    qpos = jnp.arange(sq) + q_offset
+    qpos = _query_positions(q_offset, sq)              # (1 or B, sq)
 
     def body(carry, inp):
         m, l, acc = carry
@@ -85,8 +102,8 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         kvpos = c * chunk_kv + jnp.arange(chunk_kv)
         s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kj.astype(jnp.float32))
         if causal:
-            mask = qpos[:, None] >= kvpos[None, :]
-            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mask = qpos[:, :, None] >= kvpos[None, None, :]
+            s = jnp.where(mask[:, None, None], s, NEG_INF)
         if kv_valid_len is not None:
             kmask = kvpos[None] < kv_valid_len[:, None]
             s = jnp.where(kmask[:, None, None, None, :], s, NEG_INF)
@@ -120,6 +137,25 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     """
     return full_attention(q, k_cache, v_cache, causal=False,
                           kv_valid_len=cache_len)
+
+
+def mixed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                    kv_valid_len: jax.Array, q_offset: jax.Array,
+                    chunk_kv: int = 1024) -> jax.Array:
+    """S-token chunk per slot against a (B, S_max, Hk, D) KV cache.
+
+    The serving engine's unified prefill/decode step: slot b's S queries
+    sit at absolute positions ``q_offset[b] + [0, S)`` (its K/V must
+    already be written there), attend causally over ``[0,
+    kv_valid_len[b])``, and slots whose chunk is shorter than S carry
+    ``kv_valid_len < q_offset + S`` so their padding queries see only
+    valid keys.  S == 1 with ``kv_valid_len == cache_len + 1`` is
+    exactly classic decode; large caches stream through the
+    online-softmax scan instead of materializing (B, S_max) scores.
+    """
+    return chunked_attention(q, k_cache, v_cache, causal=True,
+                             chunk_kv=chunk_kv, q_offset=q_offset,
+                             kv_valid_len=kv_valid_len)
 
 
 def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -206,10 +206,19 @@ def ssd_decode_step(x1: jax.Array, dt1: jax.Array, a: jax.Array,
 
 def mamba_apply(p, x, cfg: MambaConfig, policy: TernaryPolicy,
                 compute_dtype=jnp.bfloat16,
-                cache: Optional[dict] = None
+                cache: Optional[dict] = None,
+                n_new: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Optional[dict]]:
     """Full mamba2 block.  cache (decode): {'conv': (B,W-1,C), 'ssm':
-    (B,H,P,N)}; pass None for training/prefill-from-scratch."""
+    (B,H,P,N)}; pass None for training/prefill-from-scratch.
+
+    ``n_new`` ((B,) int32, serving's mixed prefill/decode step): only
+    the first n_new[b] of the S tokens are real for slot b.  Padding
+    tokens must leave the recurrent state untouched, so their dt is
+    zeroed (decay exp(a*0)=1, update dt*Bx=0 — an identity SSD step)
+    and the conv state is re-gathered at the ragged per-slot boundary
+    instead of taken from the padded tail.
+    """
     bsz, s, _ = x.shape
     di, n, nh, hp = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
 
@@ -219,23 +228,34 @@ def mamba_apply(p, x, cfg: MambaConfig, policy: TernaryPolicy,
     dt = ternary_dense_apply(p["dt_proj"], x, policy, compute_dtype)
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    if n_new is not None:
+        valid = jnp.arange(s)[None, :] < n_new[:, None]        # (B,S)
+        dt = dt * valid[..., None]
 
     conv_in = jnp.concatenate([xi, bc], axis=-1)
     conv_state = cache["conv"] if cache is not None else None
     conv_out, new_conv = _causal_conv(conv_in, p["conv_w"].astype(
         compute_dtype), p["conv_b"].astype(compute_dtype), conv_state)
+    if n_new is not None and cache is not None:
+        # trailing (W-1) *valid* inputs per slot: rows [n_new, n_new+W-1)
+        # of [old_state | new_inputs] (n_new == 0 keeps the old state)
+        catx = jnp.concatenate([conv_state.astype(conv_in.dtype), conv_in],
+                               axis=1)
+        take = n_new[:, None] + jnp.arange(cfg.conv_width - 1)[None, :]
+        new_conv = jnp.take_along_axis(catx, take[..., None], axis=1)
     xi, bc = conv_out[..., :di], conv_out[..., di:]
     b_, c_ = bc[..., :n], bc[..., n:]
     xh = xi.reshape(bsz, s, nh, hp)
     a = -jnp.exp(p["A_log"].astype(jnp.float32))
 
-    if cache is not None and s == 1:
+    if cache is not None and s == 1 and n_new is None:
         y1, h_new = ssd_decode_step(xh[:, 0], dt[:, 0], a, b_[:, 0],
                                     c_[:, 0], cache["ssm"])
         y = y1[:, None]
     else:
         h0 = cache["ssm"] if cache is not None else None
-        y, h_new = ssd_scan(xh, dt, a, b_, c_, cfg.chunk, h0)
+        chunk = min(cfg.chunk, s) if cache is not None else cfg.chunk
+        y, h_new = ssd_scan(xh, dt, a, b_, c_, chunk, h0)
 
     y = y + xh.astype(y.dtype) * p["D"].astype(y.dtype)[:, None]
     y = y.reshape(bsz, s, di)

@@ -1,4 +1,4 @@
-"""Serving engine: ternarized weights, batched prefill/decode, scheduler.
+"""Serving engine: ternarized weights, token-budget continuous batching.
 
 ``ternarize_model`` converts trained (or random) master weights into
 TiM serving form — every TernaryDense weight becomes int8 codes (+
@@ -7,20 +7,40 @@ matmuls dispatch through kernels/ops with ``policy.fused=True`` by
 default, so asymmetric (two-phase) and bit-serial layers execute as a
 *single* kernel launch per matmul — one HBM weight stream instead of
 2–4 (``weight_stream_report`` quantifies the saving for a converted
-model).  The engine then runs:
+model).
 
-  prefill_step : (tokens, caches) -> (next_token_logits, caches)
-  decode_step  : one token/seq against the caches (this is what the
-                 decode_32k / long_500k dry-run shapes lower)
+The engine itself is a chunked-prefill continuous-batching scheduler
+(the Sarathi / vLLM discipline, single-host version) built around ONE
+jitted step function of fixed shape:
 
-The BatchScheduler implements slot-based continuous batching: requests
-occupy cache slots, finished slots are refilled without stalling the
-running batch (the standard serving discipline, single-host version).
+  unified_step : tokens (slots, chunk), per-slot cache_len write
+                 offsets, per-slot n_new valid counts
+              -> next-token logits (slots, vocab), updated caches
+
+Every engine iteration fills that fixed token grid with a mix of work:
+each actively *decoding* slot contributes its 1 next token, and slots
+still *prefilling* stream their prompt through the shared batch cache
+in up-to-``chunk``-token slices.  A ``token_budget`` caps the real
+(non-padding) tokens scheduled per iteration — decodes are always
+scheduled first (admission and prefill never stall a running decode),
+the leftover budget goes to prefill chunks.  Because prefill is
+incremental, arbitrarily long prompts (up to ``max_len``) are
+admissible, there is no per-bucket jit cache, no per-request mini
+cache, and no prefill-sized latency spike for running decodes.
+
+All scheduler state (slot occupancy, lengths, prompt cursors) lives
+host-side in numpy: a step issues NO device->host sync beyond the one
+explicit fetch of the sampled tokens (see ``d2h_fetches``).
+
+This is what the paper's throughput-per-watt story needs above the
+fused Pallas kernels: decode steps are weight-stream-bound, so the
+extra grid columns that carry prefill chunks ride the same single
+weight stream the decode batch already pays for.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +48,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as tfm
-from repro.nn.linear import TernaryPolicy, ternarize_dense_params
-from repro.nn.module import subkey
+from repro.nn.linear import TernaryPolicy
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +192,7 @@ def weight_stream_report(params: Dict[str, Any], cfg: ArchConfig,
 # ---------------------------------------------------------------------------
 
 def make_prefill_step(cfg: ArchConfig):
+    """Whole-prompt batch prefill (dry-run prefill cells / references)."""
     def prefill_step(params, batch, caches):
         b = next(iter(batch.values())).shape[0]
         hidden, caches, _ = tfm.forward(
@@ -184,6 +204,8 @@ def make_prefill_step(cfg: ArchConfig):
 
 
 def make_decode_step(cfg: ArchConfig):
+    """One-token decode (the unified step's chunk == 1 special case;
+    kept for the dry-run decode cells)."""
     def decode_step(params, batch, caches, cache_len):
         hidden, caches, _ = tfm.forward(
             params, cfg, batch, mode="decode", caches=caches,
@@ -191,6 +213,23 @@ def make_decode_step(cfg: ArchConfig):
         lg = tfm.logits(params, cfg, hidden[:, -1:])
         return lg[:, 0], caches
     return decode_step
+
+
+def make_unified_step(cfg: ArchConfig):
+    """THE engine step: a fixed (slots, chunk) token grid mixing decode
+    tokens (n_new == 1) and prefill chunks (n_new in [0, chunk]), each
+    slot appending at its own ``cache_len`` offset into the shared
+    batch cache.  Returns per-slot logits at each slot's last valid
+    token (n_new[b] - 1)."""
+    def unified_step(params, batch, caches, cache_len, n_new):
+        hidden, caches, _ = tfm.forward(
+            params, cfg, batch, mode="mixed", caches=caches,
+            cache_len=cache_len, n_new=n_new)
+        last = jnp.take_along_axis(
+            hidden, jnp.maximum(n_new - 1, 0)[:, None, None], axis=1)
+        lg = tfm.logits(params, cfg, last)
+        return lg[:, 0], caches
+    return unified_step
 
 
 def greedy_token(logits: jax.Array) -> jax.Array:
@@ -207,7 +246,7 @@ def sample_token(logits: jax.Array, key, temperature: float = 1.0
 
 
 # ---------------------------------------------------------------------------
-# continuous batching scheduler
+# token-budget continuous-batching scheduler
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -221,106 +260,83 @@ class Request:
 
 
 class ServeEngine:
-    """Slot-based continuous batching over a fixed-size decode batch.
+    """Chunked-prefill continuous batching over a fixed-size slot batch.
 
-    ``oversize`` controls prompts longer than ``max_len - 1`` (the cache
-    must keep at least one slot free for the first decoded token):
-    ``'error'`` rejects them at ``submit`` with a ValueError,
-    ``'truncate'`` keeps the most recent ``max_len - 1`` tokens.
+    One jitted step of fixed shape (``batch_slots``, ``chunk``) serves
+    both prefill and decode: the scheduler fills the grid each
+    iteration with 1 token per decoding slot plus up-to-``chunk``-token
+    prompt slices for slots still prefilling, bounded by
+    ``token_budget`` real tokens per iteration (decodes first — they
+    never stall; leftover budget streams prefills).
+
+    ``oversize`` controls prompts longer than ``max_len`` (chunked
+    prefill admits anything that fits the cache; a prompt of exactly
+    ``max_len`` yields exactly one token): ``'error'`` rejects them at
+    ``submit`` with a ValueError, ``'truncate'`` keeps the most recent
+    ``max_len`` tokens.
+
+    Scheduler state is host-side numpy; the only device->host transfer
+    per step is the explicit fetch of the sampled tokens
+    (``d2h_fetches`` counts them, tests pin it to one per step).
     """
 
     def __init__(self, params, cfg: ArchConfig, batch_slots: int,
                  max_len: int, greedy: bool = True, seed: int = 0,
-                 oversize: str = "error"):
+                 oversize: str = "error", chunk: int = 16,
+                 token_budget: Optional[int] = None):
         assert oversize in ("error", "truncate"), oversize
+        assert chunk >= 1, chunk
         self.params = params
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
         self.greedy = greedy
         self.oversize = oversize
+        self.chunk = min(chunk, max_len)
+        self.token_budget = (batch_slots + self.chunk
+                             if token_budget is None else token_budget)
+        assert self.token_budget >= 1, token_budget
         self.key = jax.random.PRNGKey(seed)
 
         self.caches = tfm.init_caches(cfg, batch_slots, max_len)
-        self.cache_len = jnp.zeros((batch_slots,), jnp.int32)
+        # host-side scheduler state: no device sync ever needed to
+        # schedule, admit, or detect completion
+        self.cache_len = np.zeros((batch_slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_prompt: List[Optional[np.ndarray]] = [None] * batch_slots
+        self.slot_fill = np.zeros((batch_slots,), np.int64)  # prompt cursor
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        self.d2h_fetches = 0
+        self.n_step_compiles = 0
+        # per-slot media is constant for a request's lifetime: keep one
+        # device-resident batch, re-uploaded only when admission changes
+        # a slot (never in decode steady state)
+        self._media_dev = None
+        self._media_dirty = cfg.n_media_tokens > 0
+        if cfg.n_media_tokens:
+            self._media_host = np.zeros(
+                (batch_slots, cfg.n_media_tokens, cfg.media_dim),
+                np.float32)
 
-        self._decode = jax.jit(make_decode_step(cfg),
-                               donate_argnums=(2,))
-        # per-slot prefill (batch=1) keeps arbitrary prompt lengths jit-
-        # friendly via bucketing to powers of two
-        self._prefill_cache = {}
+        def _counted(params, batch, caches, cache_len, n_new):
+            self.n_step_compiles += 1          # trace-time: counts shapes
+            return make_unified_step(cfg)(params, batch, caches,
+                                          cache_len, n_new)
+
+        self._step = jax.jit(_counted, donate_argnums=(2,))
 
     def submit(self, req: Request):
-        limit = self.max_len - 1   # >= 1 cache slot for the first token
         plen = len(req.prompt)
-        if plen > limit and self.oversize != "truncate":
+        if plen < 1:
+            raise ValueError("empty prompt")
+        if plen > self.max_len and self.oversize != "truncate":
             raise ValueError(
-                f"prompt of {plen} tokens exceeds the engine's "
-                f"max_len - 1 = {limit} (max_len={self.max_len}); "
-                f"resubmit a shorter prompt or construct the engine "
-                f"with oversize='truncate'")
+                f"prompt of {plen} tokens exceeds the engine's cache "
+                f"capacity max_len={self.max_len}; resubmit a shorter "
+                f"prompt or construct the engine with "
+                f"oversize='truncate'")
         self.queue.append(req)
-
-    def _prefill_fn(self, bucket: int):
-        if bucket not in self._prefill_cache:
-            cfg = self.cfg
-
-            def fn(params, batch, caches, last_pos):
-                hidden, new_caches, _ = tfm.forward(
-                    params, cfg, batch, mode="prefill", caches=caches,
-                    cache_len=jnp.zeros((1,), jnp.int32))
-                # the prompt is right-padded to the bucket length: the
-                # last *valid* position is plen - 1, not bucket - 1
-                last = jax.lax.dynamic_slice_in_dim(hidden, last_pos, 1,
-                                                    axis=1)
-                lg = tfm.logits(params, cfg, last)
-                return lg[:, 0], new_caches
-
-            self._prefill_cache[bucket] = jax.jit(fn)
-        return self._prefill_cache[bucket]
-
-    def _bucket(self, n: int) -> int:
-        b = 16
-        while b < n:
-            b *= 2
-        return min(b, self.max_len)
-
-    def _admit(self):
-        for slot in range(self.slots):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            tokens_in = req.prompt
-            limit = self.max_len - 1
-            if len(tokens_in) > limit:
-                # oversize == 'truncate' (submit rejected it otherwise):
-                # keep the most recent context, WITHOUT mutating the
-                # caller's Request — req.prompt stays intact
-                tokens_in = tokens_in[len(tokens_in) - limit:]
-            plen = len(tokens_in)
-            bucket = self._bucket(plen)
-            prompt = np.zeros((1, bucket), np.int32)
-            prompt[0, :plen] = tokens_in
-            batch = {"tokens": jnp.asarray(prompt)}
-            if req.media is not None:
-                batch["media"] = jnp.asarray(req.media[None])
-            # prefill into a fresh single-slot cache then splice into the
-            # batch cache at this slot
-            mini = tfm.init_caches(self.cfg, 1, self.max_len)
-            lg, mini = self._prefill_fn(bucket)(
-                self.params, batch, mini, jnp.asarray(plen - 1, jnp.int32))
-            # account for bucket padding: valid length is plen
-            self.caches = jax.tree_util.tree_map(
-                lambda big, small: big.at[:, slot].set(small[:, 0]),
-                self.caches, mini)
-            self.cache_len = self.cache_len.at[slot].set(plen)
-            tok = int(greedy_token(lg[0, None])[0]) if self.greedy else \
-                int(sample_token(lg[0, None], self._next_key())[0])
-            req.out_tokens.append(tok)
-            self.slot_req[slot] = req
 
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
@@ -329,39 +345,120 @@ class ServeEngine:
     def _active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
+    def _reset_slot_state(self, slot: int):
+        """Zero the slot's *recurrent* cache state (mamba conv/ssm).
+
+        KV entries need no reset — attention masks everything past the
+        slot's valid length and prefill overwrites from position 0 —
+        but SSM blocks read their state unconditionally as h0, so a
+        recycled slot would otherwise inherit the previous occupant's
+        recurrence."""
+        def walk(tree):
+            if isinstance(tree, dict):
+                return {k: (v.at[:, slot].set(0)
+                            if k in ("conv", "ssm") and hasattr(v, "at")
+                            else walk(v))
+                        for k, v in tree.items()}
+            return tree
+        self.caches = walk(self.caches)
+
+    def _admit(self):
+        """Assign queued requests to free slots.  Nearly free — no
+        forward pass happens here (the prompt streams through
+        subsequent unified steps chunk by chunk), only the slot's
+        recurrent state is zeroed."""
+        for slot in range(self.slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            tokens_in = req.prompt
+            if len(tokens_in) > self.max_len:
+                # oversize == 'truncate' (submit rejected it otherwise):
+                # keep the most recent context, WITHOUT mutating the
+                # caller's Request — req.prompt stays intact
+                tokens_in = tokens_in[len(tokens_in) - self.max_len:]
+            self.slot_req[slot] = req
+            self.slot_prompt[slot] = np.asarray(tokens_in, np.int32)
+            self.slot_fill[slot] = 0
+            self.cache_len[slot] = 0
+            self._reset_slot_state(slot)
+            if self.cfg.n_media_tokens:
+                self._media_host[slot] = \
+                    req.media if req.media is not None else 0.0
+                self._media_dirty = True
+
+    def _schedule(self) -> Tuple[np.ndarray, np.ndarray, List[int],
+                                 List[int]]:
+        """Fill the (slots, chunk) grid: decodes first (always), then
+        prompt slices under the remaining token budget."""
+        tokens = np.zeros((self.slots, self.chunk), np.int32)
+        n_new = np.zeros((self.slots,), np.int32)
+        decode_slots: List[int] = []
+        finishing_prefill: List[int] = []
+        budget = self.token_budget
+        for i in self._active_slots():
+            if self.slot_fill[i] >= len(self.slot_prompt[i]):
+                tokens[i, 0] = self.slot_req[i].out_tokens[-1]
+                n_new[i] = 1
+                decode_slots.append(i)
+                budget -= 1   # decode is never stalled, even if < 0
+        for i in self._active_slots():
+            plen = len(self.slot_prompt[i])
+            fill = int(self.slot_fill[i])
+            if fill >= plen or budget <= 0:
+                continue
+            take = min(self.chunk, plen - fill, budget)
+            tokens[i, :take] = self.slot_prompt[i][fill:fill + take]
+            n_new[i] = take
+            budget -= take
+            if fill + take >= plen:
+                finishing_prefill.append(i)
+        return tokens, n_new, decode_slots, finishing_prefill
+
+    def _finish_check(self, i: int):
+        req = self.slot_req[i]
+        # the next decode writes its input token at cache_len: room for
+        # it exists iff cache_len < max_len
+        if len(req.out_tokens) >= req.max_new_tokens or \
+                int(self.cache_len[i]) >= self.max_len:
+            req.done = True
+            self.finished.append(req)
+            self.slot_req[i] = None
+            self.slot_prompt[i] = None
+
     def step(self):
-        """One engine iteration: admit -> decode all active slots."""
+        """One engine iteration: admit -> one unified mixed step."""
         self._admit()
-        active = self._active_slots()
-        if not active:
+        tokens, n_new, decode_slots, finishing = self._schedule()
+        if not n_new.any():
             return
-        tokens = np.zeros((self.slots, 1), np.int32)
-        for i in active:
-            tokens[i, 0] = self.slot_req[i].out_tokens[-1]
         batch = {"tokens": jnp.asarray(tokens)}
         if self.cfg.n_media_tokens:
-            media = np.zeros((self.slots, self.cfg.n_media_tokens,
-                              self.cfg.media_dim), np.float32)
-            for i in active:
-                if self.slot_req[i].media is not None:
-                    media[i] = self.slot_req[i].media
-            batch["media"] = jnp.asarray(media)
-        lg, self.caches = self._decode(self.params, batch, self.caches,
-                                       self.cache_len)
-        self.cache_len = self.cache_len + jnp.asarray(
-            [1 if self.slot_req[i] is not None else 0
-             for i in range(self.slots)], jnp.int32)
-        toks = (greedy_token(lg) if self.greedy
-                else sample_token(lg, self._next_key()))
-        toks = np.asarray(toks)
-        for i in active:
+            if self._media_dirty:
+                self._media_dev = jnp.asarray(self._media_host)
+                self._media_dirty = False
+            batch["media"] = self._media_dev
+        lg, self.caches = self._step(self.params, batch, self.caches,
+                                     jnp.asarray(self.cache_len),
+                                     jnp.asarray(n_new))
+        # host-side bookkeeping: lengths advance by exactly what was
+        # scheduled — no device round-trip
+        self.cache_len += n_new
+        for i in range(self.slots):
+            if n_new[i] and i not in decode_slots:
+                self.slot_fill[i] += int(n_new[i])   # prompt cursor
+        toks_dev = (greedy_token(lg) if self.greedy
+                    else sample_token(lg, self._next_key()))
+        toks = np.asarray(jax.device_get(toks_dev))   # the ONE d2h fetch
+        self.d2h_fetches += 1
+        for i in decode_slots:
             req = self.slot_req[i]
             req.out_tokens.append(int(toks[i]))
-            if len(req.out_tokens) >= req.max_new_tokens or \
-                    int(self.cache_len[i]) >= self.max_len - 1:
-                req.done = True
-                self.finished.append(req)
-                self.slot_req[i] = None
+            self._finish_check(i)
+        for i in finishing:
+            req = self.slot_req[i]
+            req.out_tokens.append(int(toks[i]))   # first generated token
+            self._finish_check(i)
 
     def run_until_done(self, max_iters: int = 10000):
         it = 0

@@ -1,0 +1,25 @@
+"""Shared serving-test oracle: greedy continuation with an UNPADDED
+whole-prompt prefill + one-token decode loop — what the chunked engine
+must match token-for-token."""
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.serve.engine import greedy_token
+
+
+def reference_rollout(params, cfg, prompt, steps, max_len):
+    caches = tfm.init_caches(cfg, 1, max_len)
+    hidden, caches, _ = tfm.forward(
+        params, cfg, {"tokens": jnp.asarray(prompt[None])}, mode="prefill",
+        caches=caches, cache_len=jnp.zeros((1,), jnp.int32))
+    lg = tfm.logits(params, cfg, hidden[:, -1:])
+    toks = [int(greedy_token(lg[:, 0])[0])]
+    clen = jnp.asarray([len(prompt)], jnp.int32)
+    for _ in range(steps - 1):
+        batch = {"tokens": jnp.asarray([[toks[-1]]], jnp.int32)}
+        hidden, caches, _ = tfm.forward(params, cfg, batch, mode="decode",
+                                        caches=caches, cache_len=clen)
+        lg = tfm.logits(params, cfg, hidden[:, :1])
+        toks.append(int(greedy_token(lg[:, 0])[0]))
+        clen = clen + 1
+    return toks

@@ -1,11 +1,13 @@
-"""Attention substrate: chunked-vs-full equivalence, GQA, RoPE, decode."""
+"""Attention substrate: chunked-vs-full equivalence, GQA, RoPE, decode,
+mixed chunked-prefill (per-slot offsets)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.nn.attention import (chunked_attention, cross_attention,
-                                decode_attention, full_attention)
+                                decode_attention, full_attention,
+                                mixed_attention)
 from repro.nn.basic import apply_rope
 
 RNG = np.random.default_rng(3)
@@ -48,6 +50,49 @@ def test_decode_matches_full_last_position():
     np.testing.assert_allclose(np.asarray(got[:, 0]),
                                np.asarray(full[:, -1]),
                                rtol=2e-5, atol=2e-5)
+
+
+def test_per_batch_q_offset_matches_scalar():
+    # a (B,) offset array with equal entries must equal the scalar path
+    q, k, v = _qkv(2, 8, 40, 4, 2, 16)
+    vlen = jnp.asarray([17, 33], jnp.int32)
+    want = full_attention(q, k, v, causal=True, q_offset=12,
+                          kv_valid_len=vlen)
+    off = jnp.full((2,), 12, jnp.int32)
+    got_full = full_attention(q, k, v, causal=True, q_offset=off,
+                              kv_valid_len=vlen)
+    got_chunk = chunked_attention(q, k, v, causal=True, chunk_kv=16,
+                                  q_offset=off, kv_valid_len=vlen)
+    np.testing.assert_array_equal(np.asarray(got_full), np.asarray(want))
+    np.testing.assert_allclose(np.asarray(got_chunk), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mixed_attention_per_slot_offsets_match_per_slot_decode():
+    """Each slot's chunk at its own cache offset must equal running that
+    slot alone through full attention at its offset."""
+    b, smax, sq, h, hk, d = 3, 40, 4, 4, 2, 16
+    q, k, v = _qkv(b, sq, smax, h, hk, d)
+    offs = jnp.asarray([0, 7, 29], jnp.int32)       # per-slot cache_len
+    n_new = jnp.asarray([4, 4, 3], jnp.int32)       # slot 2: short chunk
+    got = mixed_attention(q, k, v, offs + n_new, offs, chunk_kv=16)
+    for i in range(b):
+        want_i = full_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                causal=True, q_offset=int(offs[i]),
+                                kv_valid_len=(offs + n_new)[i:i + 1])
+        nv = int(n_new[i])
+        np.testing.assert_allclose(np.asarray(got[i, :nv]),
+                                   np.asarray(want_i[0, :nv]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_mixed_attention_single_token_equals_decode():
+    b, smax, h, hk, d = 2, 24, 4, 2, 16
+    q, k, v = _qkv(b, 1, smax, h, hk, d)
+    clen = jnp.asarray([9, 17], jnp.int32)          # post-append lengths
+    want = decode_attention(q, k, v, clen)
+    got = mixed_attention(q, k, v, clen, clen - 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_cross_attention_ignores_causality():

@@ -22,7 +22,9 @@ _SCRIPT = textwrap.dedent("""
 
     # --- sharded decode attention vs oracle -----------------------------
     from repro.distrib.decode_attn import (reference_decode_attention,
-                                           sharded_decode_attention)
+                                           reference_mixed_attention,
+                                           sharded_decode_attention,
+                                           sharded_mixed_attention)
     B, S, H, HK, D = 2, 32, 8, 4, 16
     q = jnp.asarray(rng.normal(size=(B, 1, H, D)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(B, S, HK, D)).astype(np.float32))
@@ -33,6 +35,22 @@ _SCRIPT = textwrap.dedent("""
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
     print("sharded_decode_attention ok")
+
+    # --- sharded MIXED attention (chunked prefill at per-slot offsets,
+    # cache still sequence-sharded) vs oracle -----------------------------
+    SQ = 4
+    qm = jnp.asarray(rng.normal(size=(B, SQ, H, D)).astype(np.float32))
+    offs = jnp.asarray([5, 23], jnp.int32)      # per-slot write offsets
+    nnew = jnp.asarray([4, 3], jnp.int32)       # slot 1: ragged chunk
+    want_m = reference_mixed_attention(qm, k, v, offs + nnew, offs)
+    got_m = sharded_mixed_attention(qm, k, v, offs + nnew, mesh,
+                                    seq_axis="model", q_offset=offs)
+    for i in range(B):
+        nv = int(nnew[i])
+        np.testing.assert_allclose(np.asarray(got_m[i, :nv]),
+                                   np.asarray(want_m[i, :nv]),
+                                   rtol=2e-5, atol=2e-5)
+    print("sharded_mixed_attention ok")
 
     # --- row-parallel matmul ---------------------------------------------
     from repro.distrib.collectives import (allgather_matmul_overlapped,
@@ -99,6 +117,7 @@ def test_multidevice_distribution():
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
     assert "sharded_decode_attention ok" in proc.stdout
+    assert "sharded_mixed_attention ok" in proc.stdout
     assert "rowparallel_matmul ok" in proc.stdout
     assert "allgather_matmul_overlapped ok" in proc.stdout
     assert "pipeline_apply ok" in proc.stdout

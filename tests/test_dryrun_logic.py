@@ -21,6 +21,9 @@ def test_input_specs_shapes():
     assert s["labels"].shape == (256, 4096)
     s = input_specs(cfg, SHAPES["decode_32k"])
     assert s["tokens"].shape == (128, 1)
+    # mixed: the unified chunked-prefill step's (slots, chunk) grid
+    s = input_specs(cfg, SHAPES["mixed_32k"])
+    assert s["tokens"].shape == (128, 64)
     vlm = get_config("llama-3.2-vision-11b")
     s = input_specs(vlm, SHAPES["prefill_32k"])
     assert s["media"].shape == (32, 1601, 1280)
@@ -74,6 +77,24 @@ def test_xla_flags_preserved_on_import():
     flags = proc.stdout.strip().splitlines()[-1]
     assert "--xla_cpu_enable_fast_math=false" in flags, flags
     assert "--xla_force_host_platform_device_count=512" in flags, flags
+
+
+def test_mixed_shape_registered_and_modeled():
+    """The mixed cell exists, gates on decode support, and the roofline
+    yardstick counts its scheduled (not grid) tokens."""
+    from repro.configs.base import cell_supported
+    from benchmarks.roofline import model_flops
+    sc = SHAPES["mixed_32k"]
+    assert sc.kind == "mixed" and sc.chunk == 64
+    ok, _ = cell_supported(get_config("granite-34b"), sc)
+    assert ok
+    ok, reason = cell_supported(get_config("hubert-xlarge"), sc)
+    assert not ok and "decode" in reason
+    # canonical fill = (slots - 1) decode tokens + one chunk
+    dec = model_flops("granite-34b", "decode_32k", "decode")
+    mix = model_flops("granite-34b", "mixed_32k", "mixed")
+    per_tok = dec / SHAPES["decode_32k"].global_batch
+    assert abs(mix - per_tok * (128 - 1 + 64)) / mix < 1e-9
 
 
 def test_weight_stream_summary_math():
@@ -133,3 +154,31 @@ def test_one_cell_compiles_in_subprocess():
         assert ws["weight_bytes_streamed_fused"] > 0
         assert ws["weight_bytes_streamed_unfused"] \
             >= ws["weight_bytes_streamed_fused"]
+
+
+@pytest.mark.slow
+def test_mixed_cell_compiles_with_roofline_numbers():
+    """The unified chunked-prefill/decode step lowers + compiles as a
+    dry-run cell and produces a roofline row (ISSUE-3 acceptance)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "report.json")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(repo, "src")
+        env.pop("XLA_FLAGS", None)
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "mamba2-1.3b", "--shape", "mixed_32k",
+             "--mesh", "single", "--out", out],
+            env=env, capture_output=True, text=True, timeout=580)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        cell = json.load(open(out))[0]
+        assert cell["status"] == "ok", cell
+        assert cell["grid_tokens"] == 128 * 64
+        assert cell["scheduled_tokens"] == 128 - 1 + 64
+        assert cell["hlo"]["dot_flops"] > 0
+        from benchmarks.roofline import roofline_row
+        row = roofline_row(cell)
+        assert row is not None and row["t_compute_s"] > 0
+        assert row["t_memory_s"] > 0
+        assert row["model_over_hlo"] > 0

@@ -91,6 +91,42 @@ _SCRIPT = textwrap.dedent("""
     assert f"s8[{k},{n // 4}]" in hlo, "expected model-sharded W tile"
     print("no W replication ok")
 
+    # --- 2-D (fsdp x tp) sharded serving layout --------------------------
+    # FSDP serving shards the weight codes over BOTH mesh axes (K over
+    # data, N over model) so no single TP shard must hold a full K
+    # column block.  The fused single-stream route must (a) stay bit-
+    # identical to two-launch and to the single-device result, (b)
+    # never materialize the full int8 W, and (c) keep its analytic
+    # weight-stream win — weight_stream_report is layout-independent.
+    tw_2d = TernaryWeight(
+        jax.device_put(tw.data, NamedSharding(mesh, P("data", "model"))),
+        TernaryScales(
+            jax.device_put(tw.scales.pos, NamedSharding(mesh, P("model"))),
+            jax.device_put(tw.scales.neg, NamedSharding(mesh, P("model"))),
+            False),
+        False, tw.k_dim)
+    with shd.use_mesh(mesh), shd.sharding_hints({"batch": "data"}):
+        fused_2d = fused_fn.lower(qx_sh, tw_2d).compile()
+        two_2d = two_fn.lower(qx_sh, tw_2d).compile()
+    got_f2 = np.asarray(fused_2d(qx_sh, tw_2d))
+    got_t2 = np.asarray(two_2d(qx_sh, tw_2d))
+    np.testing.assert_array_equal(got_f2, got_t2)
+    np.testing.assert_array_equal(got_f2, want_fused)
+    hlo2 = fused_2d.as_text()
+    assert f"s8[{k},{n}]" not in hlo2, "2-D fused path replicated W"
+
+    from repro.configs import get_config
+    from repro.serve.engine import weight_stream_report
+    cfg_ws = get_config("granite-34b", smoke=True)
+    cfg_ws = cfg_ws.replace(ternary=cfg_ws.ternary.replace(
+        encoding="asymmetric", act_mode="ternary"))
+    rep = weight_stream_report({"layer": {"q": {"w": tw_2d}}}, cfg_ws,
+                               decode_batch=m)
+    assert rep["weight_bytes_streamed_fused"] > 0
+    assert rep["weight_bytes_streamed_unfused"] \\
+        == 2 * rep["weight_bytes_streamed_fused"], rep
+    print("2-D fsdp x tp fused parity ok")
+
     # bit-serial (int2 and int4 policy points): planes stack bits x M
     for bits in (2, 4):
         qa, step = quantize_act_unsigned(jnp.abs(x), bits=bits)
@@ -123,5 +159,6 @@ def test_multidev_fused_parity():
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
     assert "two-phase fused parity ok" in proc.stdout
     assert "no W replication ok" in proc.stdout
+    assert "2-D fsdp x tp fused parity ok" in proc.stdout
     assert "bit-serial bits=2 fused parity ok" in proc.stdout
     assert "bit-serial bits=4 fused parity ok" in proc.stdout

@@ -1,22 +1,22 @@
-"""ServeEngine correctness regressions (ISSUE-2 satellites).
+"""ServeEngine correctness regressions.
 
-1. Bucket-padding token bug: ``_admit`` right-pads the prompt to a
-   power-of-two bucket before the jitted prefill; the first sampled
-   token must come from the logits at the last *valid* position
-   (plen - 1), not the PAD slot at bucket - 1.
-2. Oversize prompts: prompts longer than ``max_len - 1`` are rejected
-   with a clear error (default) or left-truncated (oversize='truncate'),
-   never a shape-mismatch crash.
+1. Grid-padding token bug (nee bucket-padding, ISSUE-2): the unified
+   step right-pads each slot's chunk to the fixed ``chunk`` width; the
+   first sampled token must come from the logits at the last *valid*
+   position (n_new - 1), not a PAD column.
+2. Oversize prompts: chunked prefill admits anything up to ``max_len``
+   (ISSUE-3); longer prompts are rejected with a clear error (default)
+   or left-truncated to the most recent ``max_len`` tokens
+   (oversize='truncate'), never a shape-mismatch crash.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _serve_ref import reference_rollout
 from repro.configs import get_config
 from repro.models import transformer as tfm
-from repro.serve.engine import Request, ServeEngine, greedy_token, \
-    ternarize_model
+from repro.serve.engine import Request, ServeEngine, ternarize_model
 
 
 def _engine_setup(max_len=64, **kw):
@@ -26,45 +26,25 @@ def _engine_setup(max_len=64, **kw):
                                     max_len=max_len, **kw)
 
 
-def _reference_rollout(params, cfg, prompt: np.ndarray, steps: int,
-                       max_len: int):
-    """Greedy continuation with an UNPADDED prefill — the oracle the
-    bucketed engine must match token-for-token."""
-    caches = tfm.init_caches(cfg, 1, max_len)
-    hidden, caches, _ = tfm.forward(
-        params, cfg, {"tokens": jnp.asarray(prompt[None])}, mode="prefill",
-        caches=caches, cache_len=jnp.zeros((1,), jnp.int32))
-    lg = tfm.logits(params, cfg, hidden[:, -1:])
-    toks = [int(greedy_token(lg[:, 0])[0])]
-    clen = jnp.asarray([len(prompt)], jnp.int32)
-    for _ in range(steps - 1):
-        batch = {"tokens": jnp.asarray([[toks[-1]]], jnp.int32)}
-        hidden, caches, _ = tfm.forward(params, cfg, batch, mode="decode",
-                                        caches=caches, cache_len=clen)
-        lg = tfm.logits(params, cfg, hidden[:, :1])
-        toks.append(int(greedy_token(lg[:, 0])[0]))
-        clen = clen + 1
-    return toks
-
-
-def test_prefill_token_ignores_bucket_padding():
+def test_prefill_token_ignores_grid_padding():
     cfg, params, eng = _engine_setup()
     rng = np.random.default_rng(3)
-    # plen=5 buckets to 16: the old code sampled from hidden[:, 15] (PAD)
+    # plen=5 pads to the 16-wide chunk grid: the token must come from
+    # column n_new - 1 = 4, not a PAD column
     prompt = rng.integers(1, cfg.vocab_size, 5).astype(np.int32)
-    want = _reference_rollout(params, cfg, prompt, steps=4, max_len=64)
+    want = reference_rollout(params, cfg, prompt, steps=4, max_len=64)
     eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
     done = eng.run_until_done()
     assert len(done) == 1
     assert done[0].out_tokens == want, (done[0].out_tokens, want)
 
 
-def test_prefill_exact_bucket_length_still_matches():
-    # plen == bucket (16): no padding — guards the gather offset itself
+def test_prefill_exact_chunk_length_still_matches():
+    # plen == chunk (16): no padding — guards the gather offset itself
     cfg, params, eng = _engine_setup()
     rng = np.random.default_rng(4)
     prompt = rng.integers(1, cfg.vocab_size, 16).astype(np.int32)
-    want = _reference_rollout(params, cfg, prompt, steps=3, max_len=64)
+    want = reference_rollout(params, cfg, prompt, steps=3, max_len=64)
     eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=3))
     done = eng.run_until_done()
     assert done[0].out_tokens == want
@@ -85,22 +65,30 @@ def test_oversize_prompt_truncated_keeps_recent_context():
     long_prompt = rng.integers(1, cfg.vocab_size, 40).astype(np.int32)
     eng.submit(Request(uid=0, prompt=long_prompt, max_new_tokens=2))
     # left-truncation: the engine behaves exactly as if the caller had
-    # submitted the last max_len - 1 tokens
+    # submitted the last max_len tokens (chunked prefill admits a full
+    # max_len prompt; only > max_len needs the truncate crutch)
     done = eng.run_until_done()
-    assert len(done) == 1 and len(done[0].out_tokens) == 2
+    assert len(done) == 1 and len(done[0].out_tokens) >= 1
 
     cfg2, params2, eng2 = _engine_setup(max_len=32)
-    eng2.submit(Request(uid=0, prompt=long_prompt[-31:].copy(),
+    eng2.submit(Request(uid=0, prompt=long_prompt[-32:].copy(),
                         max_new_tokens=2))
     done2 = eng2.run_until_done()
     assert done[0].out_tokens == done2[0].out_tokens
 
 
-def test_boundary_prompt_accepted():
-    # plen == max_len - 1 is the largest legal prompt
+def test_boundary_prompts_accepted():
+    # plen == max_len - 1 leaves one decode step; plen == max_len fills
+    # the cache and still yields exactly its first token
     cfg, params, eng = _engine_setup(max_len=32)
     rng = np.random.default_rng(7)
-    prompt = rng.integers(1, cfg.vocab_size, 31).astype(np.int32)
-    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=1))
-    done = eng.run_until_done()
-    assert len(done) == 1 and len(done[0].out_tokens) >= 1
+    eng.submit(Request(uid=0, prompt=rng.integers(
+        1, cfg.vocab_size, 31).astype(np.int32), max_new_tokens=8))
+    eng.submit(Request(uid=1, prompt=rng.integers(
+        1, cfg.vocab_size, 32).astype(np.int32), max_new_tokens=8))
+    done = {r.uid: r for r in eng.run_until_done()}
+    assert len(done) == 2
+    # uid0: first token from prefill + one decode before the cache fills
+    assert len(done[0].out_tokens) == 2
+    # uid1: cache completely full after prefill -> exactly one token
+    assert len(done[1].out_tokens) == 1
