@@ -85,7 +85,39 @@ def bench(timed: bool = True, quick: bool = False) -> List[Dict[str, Any]]:
             rows.append(_bench_bitserial(name, m, k, n, w, x, bits,
                                          time_this and m <= 256, iters,
                                          warmup))
+    rows.append(_paged_mixed_row())
     return rows
+
+
+def _paged_mixed_row() -> Dict[str, Any]:
+    """Analytic accounting of the block-paged unified serving step (the
+    mixed_32k_shared dry-run cell), so prefix-reuse token accounting is
+    gated in CI like the weight-stream columns: the (slots, chunk) grid
+    is fixed, scheduled tokens are the canonical fill (slots - 1
+    decodes + one chunk), and the prefix-cache hit rate removes
+    ``chunk * hit_rate`` prefill tokens from the useful-work count.
+    All columns are deterministic functions of the shape registry —
+    a scheduler or cost-model regression changes them and trips
+    check_baseline.
+    """
+    from repro.configs.base import SHAPES
+    from repro.serve.block_pool import default_num_blocks
+    sc = SHAPES["mixed_32k_shared"]
+    slots, chunk, bs = sc.global_batch, sc.chunk, sc.block_size
+    blocks_per_seq = sc.seq_len // bs
+    return {
+        "case": f"paged_mixed_s{slots}_c{chunk}_bs{bs}",
+        "block_size": bs,
+        "blocks_per_seq": blocks_per_seq,
+        # ServeEngine's default sizing (matches the dry-run cell)
+        "num_blocks": default_num_blocks(slots, sc.seq_len, bs),
+        "grid_tokens": slots * chunk,
+        "scheduled_tokens_cold": slots - 1 + chunk,
+        "prefix_hit_tokens": sc.prefix_hit_tokens,
+        "scheduled_tokens_shared": sc.scheduled_mixed_tokens,
+        "block_table_bytes": slots * blocks_per_seq * 4,
+        "slot_map_bytes": slots * chunk * 4,
+    }
 
 
 def _bench_sym(name, m, k, n, w, x, timed, iters, warmup) -> Dict[str, Any]:

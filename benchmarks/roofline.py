@@ -79,10 +79,28 @@ def model_flops(arch: str, shape: Dict[str, Any], kind: str) -> float:
         # except one streaming a full prefill chunk.  The (slots, chunk)
         # grid lowers more FLOPs than this — MODEL/HLO exposes the
         # padding overhead the token-budget scheduler amortizes against
-        # the shared weight stream.
-        return 2.0 * n_act * (sc.global_batch - 1 + sc.chunk)
+        # the shared weight stream.  Paged cells with a prefix-cache
+        # hit_rate shrink the useful chunk further: hit tokens are
+        # served from shared KV blocks, not recomputed.
+        return 2.0 * n_act * sc.scheduled_mixed_tokens
     # decode: one token per sequence
     return 2.0 * n_act * sc.global_batch
+
+
+def _kv_write_bytes(arch: str, tokens: int) -> float:
+    """HBM bytes of the per-layer K+V cache writes for ``tokens``
+    tokens — what a prefix-cache hit skips (global, pre-sharding)."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    n_attn = cfg.n_periods * sum(1 for s in cfg.layout
+                                 if s.mixer == "attn")
+    if cfg.kv_cache_dtype == "int8":
+        # int8 codes + the bf16 per-(token, head) k/v scales that ride
+        # alongside them (init_paged_caches layout)
+        per_head = 2 * (cfg.hd * 1 + 2)
+    else:
+        per_head = 2 * cfg.hd * 2
+    return float(tokens) * n_attn * cfg.n_kv_heads * per_head
 
 
 def roofline_row(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
@@ -123,6 +141,18 @@ def roofline_row(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
         "temp_gb_per_dev": mem.get("temp_size_in_bytes", 0) / 2**30,
         "wire_mb_per_dev": wire / 2**20,
     }
+    if "prefix_hit_rate" in cell:
+        # paged mixed cell: the grid (and so every lowered term) is
+        # identical to the unpaged one — the win is useful work (the
+        # reduced model_flops above).  The hit tokens also skip their
+        # per-layer KV pool writes: price that HBM saving explicitly.
+        row["prefix_hit_rate"] = cell["prefix_hit_rate"]
+        row["prefix_hit_tokens"] = cell.get("prefix_hit_tokens", 0)
+        row["sched_tokens"] = cell.get("scheduled_tokens", 0)
+        saved = _kv_write_bytes(cell["arch"],
+                                row["prefix_hit_tokens"]) / n_dev
+        row["kv_write_bytes_saved_per_dev"] = saved
+        row["t_memory_shared_s"] = max(t_memory - saved / HBM_BW, 0.0)
     ws = cell.get("weight_stream")
     if ws:
         # fused-kernel weight-stream terms (serve cells): the memory

@@ -106,6 +106,14 @@ class ShapeConfig:
     ``chunk`` (mixed cells only) is the per-slot token-grid width of
     the serving engine's unified chunked-prefill/decode step: the cell
     lowers a (global_batch, chunk) token grid against a seq_len cache.
+
+    ``block_size`` > 0 makes a mixed cell *block-paged*: the KV cache
+    is a global (global_batch * seq_len / block_size)-block pool
+    addressed through per-slot block tables, and ``hit_rate`` is the
+    assumed cross-request prefix-cache hit fraction of the prefill
+    chunk — hit tokens are served from shared blocks instead of
+    recomputed, so the cell's scheduled (useful) tokens shrink by
+    ``chunk * hit_rate`` while the lowered grid stays fixed.
     """
 
     name: str
@@ -113,6 +121,21 @@ class ShapeConfig:
     global_batch: int
     kind: str            # train | prefill | decode | long_decode | mixed
     chunk: int = 0
+    block_size: int = 0  # mixed cells: > 0 => block-paged KV pool
+    hit_rate: float = 0.0
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        """Prefill-chunk tokens served from shared blocks (mixed cells).
+        THE definition — dryrun, roofline, and kernel_bench all import
+        it so the CI-gated accounting cannot drift apart."""
+        return int(round(self.chunk * self.hit_rate))
+
+    @property
+    def scheduled_mixed_tokens(self) -> int:
+        """Canonical unified-step fill: every slot decodes one token
+        except one streaming a prefill chunk, minus prefix hits."""
+        return self.global_batch - 1 + self.chunk - self.prefix_hit_tokens
 
 
 SHAPES = {
@@ -123,6 +146,12 @@ SHAPES = {
     # continuous batching's steady state: 128 decode slots, one of which
     # streams a 64-token prefill chunk through the shared cache
     "mixed_32k": ShapeConfig("mixed_32k", 32768, 128, "mixed", chunk=64),
+    # the same steady state on the block-paged pool with cross-request
+    # prefix reuse (shared-system-prompt workload): 3/4 of the prefill
+    # chunk hits blocks an earlier request already pushed through
+    "mixed_32k_shared": ShapeConfig("mixed_32k_shared", 32768, 128,
+                                    "mixed", chunk=64, block_size=16,
+                                    hit_rate=0.75),
 }
 
 

@@ -20,6 +20,14 @@ per-slot write offsets (``q_offset``), causally masked against global
 cache positions, so a prefill chunk can stream into a sequence-sharded
 cache without gathering it.  ``sharded_decode_attention`` is its
 Sq == 1 wrapper (kept for the long_500k decode cells).
+
+``sharded_paged_mixed_attention`` is the block-paged variant: the KV
+pool (num_blocks, block_size, Hk, D) is sharded along its *block* axis
+(each device owns a contiguous physical block range), block tables are
+replicated, and every device attends only the logical positions whose
+physical block is local — the same three-psum lse merge stitches the
+partials, so per-step wire bytes stay O(B * Sq * H * D) while shared
+prefix blocks live on exactly one device shard.
 """
 from __future__ import annotations
 
@@ -33,13 +41,18 @@ from jax.experimental.shard_map import shard_map
 NEG_INF = -1e30
 
 
-def _local_partial(q, k, v, kv_base, cache_len, q_offset=None):
+def _local_partial(q, k, v, kv_base, cache_len, q_offset=None,
+                   kpos=None, extra_valid=None):
     """Local attention stats over this device's cache shard.
 
     q: (B, Sq, H, D); k/v: (B, S_loc, Hk, D); kv_base: global index of
     local position 0; cache_len: (B,) valid global length; q_offset:
     (B,) global position of each slot's query 0 (None: no causal mask —
-    classic last-token decode, validity alone is the mask).
+    classic last-token decode, validity alone is the mask).  ``kpos``
+    ((S_loc,) or per-slot (B, S_loc)) overrides the global positions of
+    the local keys (the paged path gathers compacted blocks at per-slot
+    logical positions) and ``extra_valid`` ((B, S_loc) bool) ANDs into
+    the validity mask (the paged path's is-local-block test).
     Returns m, l: (B, Hk, G, Sq), o: (B, Hk, G, Sq, D) partials.
     """
     b, sq, h, d = q.shape
@@ -47,12 +60,16 @@ def _local_partial(q, k, v, kv_base, cache_len, q_offset=None):
     g = h // hk
     qg = q.reshape(b, sq, hk, g, d).astype(jnp.float32) * (d ** -0.5)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
-    kpos = kv_base + jnp.arange(s_loc)
-    valid = kpos[None] < cache_len[:, None]                  # (B, S_loc)
+    if kpos is None:
+        kpos = kv_base + jnp.arange(s_loc)
+    kpos_b = kpos[None] if kpos.ndim == 1 else kpos      # (1 or B, S_loc)
+    valid = kpos_b < cache_len[:, None]                  # (B, S_loc)
+    if extra_valid is not None:
+        valid = valid & extra_valid
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     if q_offset is not None:
         qpos = q_offset[:, None] + jnp.arange(sq)[None, :]   # (B, Sq)
-        causal = qpos[:, :, None] >= kpos[None, None, :]     # (B, Sq, S_loc)
+        causal = qpos[:, :, None] >= kpos_b[:, None, :]      # (B, Sq, S_loc)
         s = jnp.where(causal[:, None, None, :, :], s, NEG_INF)
     m = jnp.max(s, axis=-1)
     m_safe = jnp.maximum(m, -1e29)
@@ -60,6 +77,20 @@ def _local_partial(q, k, v, kv_base, cache_len, q_offset=None):
     l = jnp.sum(p, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
     return m, l, o
+
+
+def _lse_merge(m, l, o, axis_name: str, out_dtype):
+    """Stitch per-shard (m, l, o) partials with the log-sum-exp
+    identity (three tiny psums; both clamped finite so fully-masked
+    shards contribute exactly zero)."""
+    m_g = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(jnp.maximum(m, -1e29) - jnp.maximum(m_g, -1e29))
+    l_g = jax.lax.psum(l * corr, axis_name)
+    o_g = jax.lax.psum(o * corr[..., None], axis_name)
+    out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+    b, hk, g, sq, d = out.shape
+    return jnp.moveaxis(out, 3, 1).reshape(b, sq, hk * g, d).astype(
+        out_dtype)
 
 
 def sharded_mixed_attention(q, k_cache, v_cache, cache_len,
@@ -78,16 +109,7 @@ def sharded_mixed_attention(q, k_cache, v_cache, cache_len,
     def body(qs, ks, vs, cl, qo):
         idx = jax.lax.axis_index(seq_axis)
         m, l, o = _local_partial(qs, ks, vs, idx * s_loc, cl, qo)
-        m_g = jax.lax.pmax(m, seq_axis)
-        # lse merge: corr = exp(m - m_g) with both clamped finite so
-        # fully-masked shards contribute exactly zero
-        corr = jnp.exp(jnp.maximum(m, -1e29) - jnp.maximum(m_g, -1e29))
-        l_g = jax.lax.psum(l * corr, seq_axis)
-        o_g = jax.lax.psum(o * corr[..., None], seq_axis)
-        out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
-        b, hk, g, sq, d = out.shape
-        return jnp.moveaxis(out, 3, 1).reshape(b, sq, hk * g, d).astype(
-            qs.dtype)
+        return _lse_merge(m, l, o, seq_axis, qs.dtype)
 
     in_specs = [P(), P(None, seq_axis), P(None, seq_axis), P(), P()]
     args = [q, k_cache, v_cache, cache_len,
@@ -98,6 +120,74 @@ def sharded_mixed_attention(q, k_cache, v_cache, cache_len,
     else:
         fn = body
     return shard_map(fn, mesh=mesh, in_specs=tuple(in_specs),
+                     out_specs=P())(*args)
+
+
+def sharded_paged_mixed_attention(q, k_pool, v_pool, block_tables,
+                                  cache_len, mesh: Mesh,
+                                  block_axis: str = "data",
+                                  q_offset: Optional[jax.Array] = None):
+    """Mixed-chunk attention against a block-paged KV pool sharded on
+    its block axis.
+
+    q: (B, Sq, H, D) replicated; k_pool/v_pool: (num_blocks, block_size,
+    Hk, D) sharded on dim 0 over ``block_axis``; block_tables: (B,
+    nblk) int32 replicated (physical pool block of logical block j, or
+    any out-of-range value for unassigned entries); cache_len: (B,)
+    post-append valid logical lengths; q_offset: (B,) global position
+    of each slot's query 0 (None: validity-only masking — the decode
+    contract).
+
+    Each device COMPACTS its slice of the table first — a stable
+    local-first argsort keeps at most ``min(nblk, nb_loc)`` entries per
+    slot (a device cannot own more distinct blocks than its shard
+    holds; table rows must not repeat a physical block, which the
+    engine guarantees) — then gathers those blocks and contributes lse
+    partials at their *logical* positions, merged exactly like
+    ``sharded_mixed_attention``.  Per-device score compute is therefore
+    O(min(nblk, nb_loc) * block_size), i.e. 1/n of the logical length
+    in the long-context regime where the pool outgrows one device,
+    not a replicated full-length pass.
+    """
+    n = mesh.shape[block_axis]
+    nb_global = k_pool.shape[0]
+    assert nb_global % n == 0, (nb_global, n)
+    nb_loc = nb_global // n
+    bs_blk = k_pool.shape[1]
+    l_loc = min(block_tables.shape[1], nb_loc)
+
+    def body(qs, ks, vs, tbl, cl, qo):
+        idx = jax.lax.axis_index(block_axis)
+        base = idx * nb_loc
+        is_local = (tbl >= base) & (tbl < base + nb_loc)  # (B, nblk)
+        # local entries first (stable: logical order preserved), then
+        # keep the static per-device bound
+        order = jnp.argsort(jnp.where(is_local, 0, 1), axis=1)
+        keep = order[:, :l_loc]                           # (B, l_loc)
+        sel_local = jnp.take_along_axis(is_local, keep, axis=1)
+        g_ids = jnp.clip(jnp.take_along_axis(tbl, keep, axis=1) - base,
+                         0, nb_loc - 1)
+        b_ = tbl.shape[0]
+        hk, d = ks.shape[2], ks.shape[3]
+        kg = ks[g_ids].reshape(b_, l_loc * bs_blk, hk, d)
+        vg = vs[g_ids].reshape(b_, l_loc * bs_blk, hk, d)
+        kpos = (keep[:, :, None] * bs_blk
+                + jnp.arange(bs_blk)[None, None, :]
+                ).reshape(b_, l_loc * bs_blk)             # per-slot logical
+        m, l, o = _local_partial(
+            qs, kg, vg, 0, cl, qo, kpos=kpos,
+            extra_valid=jnp.repeat(sel_local, bs_blk, axis=1))
+        return _lse_merge(m, l, o, block_axis, qs.dtype)
+
+    in_specs = (P(), P(block_axis), P(block_axis), P(), P(), P())
+    args = [q, k_pool, v_pool, block_tables, cache_len,
+            jnp.zeros_like(cache_len) if q_offset is None else q_offset]
+    if q_offset is None:
+        fn = lambda qs, ks, vs, tbl, cl, qo: body(qs, ks, vs, tbl, cl,
+                                                  None)
+    else:
+        fn = body
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
                      out_specs=P())(*args)
 
 
@@ -119,3 +209,13 @@ def reference_mixed_attention(q, k_cache, v_cache, cache_len, q_offset):
     from repro.nn.attention import mixed_attention
     return mixed_attention(q, k_cache, v_cache, cache_len, q_offset,
                            chunk_kv=k_cache.shape[1])
+
+
+def reference_paged_mixed_attention(q, k_pool, v_pool, block_tables,
+                                    cache_len, q_offset):
+    """Unsharded paged oracle for tests."""
+    from repro.nn.attention import mixed_attention
+    nblk = block_tables.shape[1]
+    return mixed_attention(q, k_pool, v_pool, cache_len, q_offset,
+                           chunk_kv=nblk * k_pool.shape[1],
+                           block_tables=block_tables)

@@ -63,8 +63,8 @@ from repro.distrib import sharding as shd
 from repro.launch.mesh import dp_axis_names, make_production_mesh
 from repro.models import transformer as tfm
 from repro.models.losses import lm_loss
-from repro.serve.engine import make_decode_step, make_prefill_step, \
-    make_unified_step, ternarize_model
+from repro.serve.engine import make_decode_step, make_paged_unified_step, \
+    make_prefill_step, make_unified_step, ternarize_model
 from repro.train.optimizer import OptConfig, adamw_init, adamw_update
 
 SDS = jax.ShapeDtypeStruct
@@ -115,6 +115,12 @@ def param_specs(cfg: ArchConfig, serve: bool, key=None):
 
 def cache_sds(cfg: ArchConfig, batch: int, max_len: int):
     return jax.eval_shape(lambda: tfm.init_caches(cfg, batch, max_len))
+
+
+def paged_cache_sds(cfg: ArchConfig, batch: int, num_blocks: int,
+                    block_size: int):
+    return jax.eval_shape(lambda: tfm.init_paged_caches(
+        cfg, batch, num_blocks, block_size))
 
 
 # ---------------------------------------------------------------------------
@@ -351,22 +357,57 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh,
             # the serving engine's unified step: a (slots, chunk) token
             # grid against the shared seq_len cache, per-slot offsets +
             # valid counts.  Canonical fill: every slot decodes 1 token
-            # except one streaming a full prefill chunk.
+            # except one streaming a full prefill chunk.  block_size > 0
+            # lowers the block-PAGED step (global KV pool + per-slot
+            # block tables) and prices cross-request prefix reuse: the
+            # cell's hit_rate fraction of the prefill chunk is served
+            # from shared blocks, so those tokens never enter the grid's
+            # useful-work count (scheduled_tokens) or the model-FLOPs
+            # yardstick — the paged roofline row exposes the saving.
             batch_sds = batch_specs(cfg, shape.global_batch, shape.chunk)
-            caches = cache_sds(cfg, shape.global_batch, shape.seq_len)
-            c_ps = shd.tree_pspecs(tfm.cache_specs(cfg, shard_cache), rules)
             clen = SDS((shape.global_batch,), jnp.int32)
             nnew = SDS((shape.global_batch,), jnp.int32)
             batch_ps = jax.tree_util.tree_map(lambda _: bspec, batch_sds)
             result["grid_tokens"] = shape.global_batch * shape.chunk
-            result["scheduled_tokens"] = shape.global_batch - 1 + shape.chunk
-            step = make_unified_step(cfg)
-            jitted = jax.jit(
-                step,
-                in_shardings=shd.as_shardings(
-                    (p_ps, batch_ps, c_ps, bspec, bspec), mesh),
-                out_shardings=shd.as_shardings((bspec, c_ps), mesh))
-            args = (params_sds, batch_sds, caches, clen, nnew)
+            hit = shape.prefix_hit_tokens
+            result["scheduled_tokens"] = shape.scheduled_mixed_tokens
+            if shape.block_size:
+                from repro.serve.block_pool import default_num_blocks
+                nblk_seq = shape.seq_len // shape.block_size
+                # ServeEngine's default sizing: the engine rejects
+                # anything below a full batch + 1 transient CoW block
+                num_blocks = default_num_blocks(
+                    shape.global_batch, shape.seq_len, shape.block_size)
+                result["block_size"] = shape.block_size
+                result["num_blocks"] = num_blocks
+                result["prefix_hit_rate"] = shape.hit_rate
+                result["prefix_hit_tokens"] = hit
+                caches = paged_cache_sds(cfg, shape.global_batch,
+                                         num_blocks, shape.block_size)
+                c_ps = shd.tree_pspecs(
+                    tfm.paged_cache_specs(cfg, bool(shard_cache)), rules)
+                tbl = SDS((shape.global_batch, nblk_seq), jnp.int32)
+                smap = SDS((shape.global_batch, shape.chunk), jnp.int32)
+                step = make_paged_unified_step(cfg)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=shd.as_shardings(
+                        (p_ps, batch_ps, c_ps, bspec, bspec, bspec,
+                         bspec), mesh),
+                    out_shardings=shd.as_shardings((bspec, c_ps), mesh))
+                args = (params_sds, batch_sds, caches, clen, nnew, tbl,
+                        smap)
+            else:
+                caches = cache_sds(cfg, shape.global_batch, shape.seq_len)
+                c_ps = shd.tree_pspecs(tfm.cache_specs(cfg, shard_cache),
+                                       rules)
+                step = make_unified_step(cfg)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=shd.as_shardings(
+                        (p_ps, batch_ps, c_ps, bspec, bspec), mesh),
+                    out_shardings=shd.as_shardings((bspec, c_ps), mesh))
+                args = (params_sds, batch_sds, caches, clen, nnew)
         else:
             batch_sds = batch_specs(cfg, shape.global_batch, 1)
             caches = cache_sds(cfg, shape.global_batch, shape.seq_len)

@@ -118,7 +118,7 @@ def _kv_dequantize(codes: jax.Array, scale: jax.Array, dtype):
 
 def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
                       cache, cache_len, media, cross: bool,
-                      n_new=None):
+                      n_new=None, block_tables=None, slot_map=None):
     b, s, _ = x.shape
     hd, h, hk = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     pol = cfg.ternary
@@ -170,43 +170,58 @@ def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
                 vc = jax.lax.dynamic_update_slice(
                     cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
                 new_cache = {"k": kc, "v": vc}
-        else:  # decode / mixed: s new tokens per slot at cache_len offset
-            smax = cache["k"].shape[1]
+        else:  # decode / mixed: s new tokens per slot at per-slot offsets
+            # ONE scatter/attend path for both cache layouts; only the
+            # flat write position differs.  Paged (slot_map given): the
+            # cache is a global (num_blocks, block_size, Hk, D) pool
+            # and slot b's tokens land at the physical flat positions
+            # slot_map[b, :n_new[b]] (block * block_size + offset,
+            # computed host-side by the scheduler).  Contiguous: slot
+            # b's row offset cache_len[b] + col, flattened.  Padding
+            # columns (and any out-of-capacity position) point at the
+            # sentinel and drop, so shorter chunks never corrupt the
+            # shared cache.
             col = jnp.arange(s)[None, :]
             nn_ = jnp.full((b,), s, jnp.int32) if n_new is None else n_new
-            # K/V of the s new tokens land at [cache_len, cache_len +
-            # n_new); padding columns are pointed out of bounds and
-            # dropped, so shorter chunks never corrupt the shared cache
-            widx = jnp.where(col < nn_[:, None],
-                             cache_len[:, None] + col, smax)
-            bidx = jnp.arange(b)[:, None]
+            if slot_map is not None:
+                cap = cache["k"].shape[0] * cache["k"].shape[1]
+                pos = slot_map
+            else:
+                smax = cache["k"].shape[1]
+                cap = b * smax
+                row = cache_len[:, None] + col
+                pos = jnp.where(row < smax,
+                                jnp.arange(b)[:, None] * smax + row, cap)
+            widx = jnp.where(col < nn_[:, None], pos, cap).reshape(-1)
+
+            def scatter(pool, vals):
+                flat = pool.reshape((cap,) + pool.shape[2:])
+                flat = flat.at[widx].set(
+                    vals.reshape((b * s,) + vals.shape[2:]).astype(
+                        pool.dtype), mode="drop")
+                return flat.reshape(pool.shape)
+
             if quant:
                 kq, ks = _kv_quantize(k)
                 vq, vs = _kv_quantize(v)
                 new_cache = {
-                    "k": cache["k"].at[bidx, widx].set(kq, mode="drop"),
-                    "v": cache["v"].at[bidx, widx].set(vq, mode="drop"),
-                    "k_scale": cache["k_scale"].at[bidx, widx].set(
-                        ks, mode="drop"),
-                    "v_scale": cache["v_scale"].at[bidx, widx].set(
-                        vs, mode="drop"),
+                    "k": scatter(cache["k"], kq),
+                    "v": scatter(cache["v"], vq),
+                    "k_scale": scatter(cache["k_scale"], ks),
+                    "v_scale": scatter(cache["v_scale"], vs),
                 }
                 kd = _kv_dequantize(new_cache["k"], new_cache["k_scale"],
                                     cd)
                 vd = _kv_dequantize(new_cache["v"], new_cache["v_scale"],
                                     cd)
-                o = attn.mixed_attention(q, kd, vd, cache_len + nn_,
-                                         cache_len,
-                                         chunk_kv=cfg.attn_chunk_kv)
             else:
-                kc = cache["k"].at[bidx, widx].set(
-                    k.astype(cache["k"].dtype), mode="drop")
-                vc = cache["v"].at[bidx, widx].set(
-                    v.astype(cache["v"].dtype), mode="drop")
-                o = attn.mixed_attention(q, kc, vc, cache_len + nn_,
-                                         cache_len,
-                                         chunk_kv=cfg.attn_chunk_kv)
-                new_cache = {"k": kc, "v": vc}
+                new_cache = {"k": scatter(cache["k"], k),
+                             "v": scatter(cache["v"], v)}
+                kd, vd = new_cache["k"], new_cache["v"]
+            o = attn.mixed_attention(q, kd, vd, cache_len + nn_,
+                                     cache_len,
+                                     chunk_kv=cfg.attn_chunk_kv,
+                                     block_tables=block_tables)
 
     o = o.reshape(b, s, h * hd)
     o = ternary_dense_apply(p["o"], o, pol, cd)
@@ -256,12 +271,13 @@ def _block_specs(cfg: ArchConfig, spec: BlockSpec):
 
 
 def _block_apply(p, x, cfg: ArchConfig, spec: BlockSpec, positions,
-                 mode, cache, cache_len, media, n_new=None):
+                 mode, cache, cache_len, media, n_new=None,
+                 block_tables=None, slot_map=None):
     aux = jnp.zeros((), jnp.float32)
     if spec.mixer in ("attn", "cross_attn"):
         x, new_cache = _attn_block_apply(
             p, x, cfg, positions, mode, cache, cache_len, media,
-            spec.mixer == "cross_attn", n_new)
+            spec.mixer == "cross_attn", n_new, block_tables, slot_map)
     else:
         h_in = _norm_apply(cfg, p["ln1"], x)
         mcache = cache if (cache and "ssm" in cache) else None
@@ -356,7 +372,9 @@ def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
             mode: str = "train",
             caches: Optional[Params] = None,
             cache_len: Optional[jax.Array] = None,
-            n_new: Optional[jax.Array] = None
+            n_new: Optional[jax.Array] = None,
+            block_tables: Optional[jax.Array] = None,
+            slot_map: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (hidden (B,S,d), new_caches (or None), moe_aux_loss).
 
@@ -367,6 +385,15 @@ def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
     ``n_new[b]`` are real (n_new == None means all S).  'decode' is the
     S == 1 special case of 'mixed'; both share the same cache-append +
     offset-causal attention path.
+
+    Paged serving ('mixed' + ``block_tables``/``slot_map``): attention
+    KV caches are a global block pool (``init_paged_caches``) shared
+    across requests; ``slot_map`` ((B, S) int32) gives each new token's
+    physical flat position ``block * block_size + offset`` and
+    ``block_tables`` ((B, max_blocks) int32) resolves logical reads.
+    Logical semantics (positions, causality, validity) are unchanged —
+    paged and contiguous mixed steps are bit-identical.  Mamba conv/ssm
+    recurrent state stays per-slot (it is O(1) per slot, not per-token).
     """
     from repro.distrib.sharding import hint_constrain
 
@@ -390,7 +417,8 @@ def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
                 f"b{j}"]
             x, nc, aux = _block_apply(
                 period_params[f"b{j}"], x, cfg, spec, positions, mode,
-                blk_cache, cache_len, media, n_new)
+                blk_cache, cache_len, media, n_new, block_tables,
+                slot_map)
             x = hint_constrain(x, ("batch", "seq", None))
             new_caches[f"b{j}"] = nc if nc is not None else {}
             aux_total = aux_total + aux
@@ -464,6 +492,69 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int) -> Params:
     return jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy()
         if hasattr(a, "shape") else a, period)
+
+
+def init_paged_caches(cfg: ArchConfig, batch: int, num_blocks: int,
+                      block_size: int) -> Params:
+    """Block-paged cache pytree: attention KV lives in ONE global
+    (num_blocks, block_size, ...) pool per period shared by every slot
+    (serve/block_pool owns the host-side allocation); mamba conv/ssm
+    recurrent state stays per-slot ((batch, ...) — it is constant-size
+    per slot, there is nothing to page)."""
+    hd, hk = cfg.hd, cfg.n_kv_heads
+
+    def one_block(spec: BlockSpec):
+        if spec.mixer == "attn":
+            if cfg.kv_cache_dtype == "int8":
+                return {
+                    "k": jnp.zeros((num_blocks, block_size, hk, hd),
+                                   jnp.int8),
+                    "v": jnp.zeros((num_blocks, block_size, hk, hd),
+                                   jnp.int8),
+                    "k_scale": jnp.zeros((num_blocks, block_size, hk),
+                                         jnp.bfloat16),
+                    "v_scale": jnp.zeros((num_blocks, block_size, hk),
+                                         jnp.bfloat16),
+                }
+            return {
+                "k": jnp.zeros((num_blocks, block_size, hk, hd),
+                               jnp.bfloat16),
+                "v": jnp.zeros((num_blocks, block_size, hk, hd),
+                               jnp.bfloat16),
+            }
+        if spec.mixer == "mamba":
+            return mamba_init_cache(cfg.mamba, batch)
+        return {}  # cross_attn: recomputed from media
+
+    period = {f"b{j}": one_block(spec) for j, spec in enumerate(cfg.layout)}
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy()
+        if hasattr(a, "shape") else a, period)
+
+
+def paged_cache_specs(cfg: ArchConfig, shard_blocks: bool = False) -> Params:
+    """Logical axes for the paged cache pytree (mirrors
+    init_paged_caches).  ``shard_blocks`` shards the pool's block axis
+    (the paged analogue of sequence-sharding a contiguous cache)."""
+    blk_ax = "cache_seq" if shard_blocks else None
+
+    def one_block(spec: BlockSpec):
+        if spec.mixer == "attn":
+            kv = ("layers", blk_ax, None, "kv_heads_cache", None)
+            out = {"k": kv, "v": kv}
+            if cfg.kv_cache_dtype == "int8":
+                sc = ("layers", blk_ax, None, "kv_heads_cache")
+                out["k_scale"] = sc
+                out["v_scale"] = sc
+            return out
+        if spec.mixer == "mamba":
+            return {
+                "conv": ("layers", "batch", None, "ssm_inner"),
+                "ssm": ("layers", "batch", "ssm_heads", None, None),
+            }
+        return {}
+
+    return {f"b{j}": one_block(spec) for j, spec in enumerate(cfg.layout)}
 
 
 def cache_specs(cfg: ArchConfig, shard_seq: bool = False) -> Params:

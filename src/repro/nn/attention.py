@@ -16,6 +16,17 @@ chunk resumes at that slot's ``cache_len``.  ``mixed_attention`` wraps
 this for the serving engine's unified prefill/decode step: S new tokens
 per slot written at per-slot offsets into a shared (B, S_max) cache,
 causally masked at the (nonzero) offset.
+
+Paged KV (``block_tables``): when the cache is a global block pool
+``(num_blocks, block_size, Hk, D)`` shared across requests (serve/
+block_pool), ``chunked_attention`` / ``mixed_attention`` take a per-slot
+``(B, max_blocks)`` int32 block table mapping logical block j of slot b
+to a physical pool block.  The online-softmax scan then gathers
+``chunk_kv // block_size`` physical blocks per KV chunk — logical
+positions, causality, and validity are exactly the contiguous path's
+(same chunk boundaries => bit-identical f32 reductions), so paged and
+contiguous attention agree bit-for-bit when ``chunk_kv`` is a multiple
+of ``block_size``.
 """
 from __future__ import annotations
 
@@ -39,6 +50,20 @@ def _query_positions(q_offset, sq: int) -> jax.Array:
     if off.ndim == 0:
         return (jnp.arange(sq) + off)[None, :]
     return off[:, None] + jnp.arange(sq)[None, :]
+
+
+def paged_view(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Gather a per-slot logical cache view from a global block pool.
+
+    pool: (num_blocks, block_size, ...); block_tables: (B, nblk) int32.
+    Returns (B, nblk * block_size, ...).  Unassigned table entries (any
+    value outside [0, num_blocks)) are clamped — their positions carry
+    garbage and MUST be masked by the caller via ``kv_valid_len``.
+    """
+    nb = pool.shape[0]
+    g = pool[jnp.clip(block_tables, 0, nb - 1)]
+    b, nblk, bs = g.shape[:3]
+    return g.reshape((b, nblk * bs) + g.shape[3:])
 
 
 def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -69,13 +94,19 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                       causal: bool = True,
                       chunk_kv: int = 1024,
                       q_offset: Union[int, jax.Array] = 0,
-                      kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
+                      kv_valid_len: Optional[jax.Array] = None,
+                      block_tables: Optional[jax.Array] = None) -> jax.Array:
     """Online-softmax attention, O(Sq * chunk_kv) score memory.
 
     Supports GQA, causality across an arbitrary (scalar or per-batch)
     q_offset (for chunked prefill), and ragged KV validity (for batched
-    serving).
+    serving).  With ``block_tables``, k/v are a global block pool
+    (num_blocks, block_size, Hk, D) and each slot's logical KV sequence
+    is gathered block-by-block inside the scan (see module docstring).
     """
+    if block_tables is not None:
+        return _paged_chunked_attention(q, k, v, block_tables, causal,
+                                        chunk_kv, q_offset, kv_valid_len)
     b, sq, h, d = q.shape
     sk, hk = k.shape[1], k.shape[2]
     if sk <= chunk_kv:
@@ -90,16 +121,33 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     skp = k.shape[1]
     nc = skp // chunk_kv
 
-    g = h // hk
     qg = _group_queries(q, hk).astype(jnp.float32) * (d ** -0.5)
     kc = k.reshape(b, nc, chunk_kv, hk, d)
     vc = v.reshape(b, nc, chunk_kv, hk, d)
     qpos = _query_positions(q_offset, sq)              # (1 or B, sq)
 
-    def body(carry, inp):
+    def load_chunk(c):
+        return (jax.lax.dynamic_index_in_dim(kc, c, 1, keepdims=False),
+                jax.lax.dynamic_index_in_dim(vc, c, 1, keepdims=False))
+
+    return _online_softmax_scan(qg, qpos, causal, kv_valid_len, nc,
+                                chunk_kv, load_chunk, q.dtype)
+
+
+def _online_softmax_scan(qg, qpos, causal, kv_valid_len, nc, ck,
+                         load_chunk, out_dtype):
+    """The flash-attention recurrence over ``nc`` logical KV chunks of
+    ``ck`` positions each.  ``load_chunk(c) -> (kj, vj)`` supplies chunk
+    c's KV (contiguous slice or block-table gather) at logical
+    positions [c*ck, (c+1)*ck) — ONE shared numerically sensitive body,
+    so the paged and contiguous paths are bit-identical by
+    construction.  qg: (B, Sq, Hk, G, D) pre-scaled f32 queries."""
+    b, sq, hk, g, d = qg.shape
+
+    def body(carry, c):
         m, l, acc = carry
-        kj, vj, c = inp
-        kvpos = c * chunk_kv + jnp.arange(chunk_kv)
+        kj, vj = load_chunk(c)
+        kvpos = c * ck + jnp.arange(ck)
         s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kj.astype(jnp.float32))
         if causal:
             mask = qpos[:, :, None] >= kvpos[None, None, :]
@@ -120,12 +168,61 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     m0 = jnp.full((b, hk, g, sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, hk, g, sq), jnp.float32)
     a0 = jnp.zeros((b, hk, g, sq, d), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
-        body, (m0, l0, a0),
-        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nc)))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nc))
     out = acc / jnp.maximum(l, 1e-30)[..., None]          # (b,hk,g,sq,d)
-    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, d)
-    return out.astype(q.dtype)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hk * g, d)
+    return out.astype(out_dtype)
+
+
+def _paged_chunked_attention(q: jax.Array, k_pool: jax.Array,
+                             v_pool: jax.Array, block_tables: jax.Array,
+                             causal: bool, chunk_kv: int,
+                             q_offset: Union[int, jax.Array],
+                             kv_valid_len: Optional[jax.Array]
+                             ) -> jax.Array:
+    """Online-softmax scan over a block-paged KV pool.
+
+    Chunk c gathers physical blocks ``block_tables[:, c*cb:(c+1)*cb]``
+    (cb = chunk_kv // block_size) and attends them at their *logical*
+    positions — identical masks and reduction order to the contiguous
+    scan, so the two paths match bit-for-bit.
+    """
+    b, sq, h, d = q.shape
+    nb, bs_blk, hk = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    nblk = block_tables.shape[1]
+    # unlike the contiguous path (where every key position holds real
+    # data), unassigned table entries gather garbage from a clamped
+    # physical block — validity is load-bearing, not optional
+    assert kv_valid_len is not None, \
+        "paged attention requires kv_valid_len"
+    if nblk * bs_blk <= chunk_kv:
+        return full_attention(q, paged_view(k_pool, block_tables),
+                              paged_view(v_pool, block_tables),
+                              causal, q_offset, kv_valid_len)
+
+    # bit-exact parity with the contiguous scan requires identical
+    # chunk boundaries: the scan chunk must hold a whole number of
+    # blocks (pick a block_size dividing attn_chunk_kv)
+    assert chunk_kv % bs_blk == 0, (chunk_kv, bs_blk)
+    cb = chunk_kv // bs_blk
+    ck = cb * bs_blk
+    pad_blk = (-nblk) % cb
+    if pad_blk:  # clamped in-gather; masked by kv_valid_len
+        block_tables = jnp.pad(block_tables, ((0, 0), (0, pad_blk)))
+    nc = block_tables.shape[1] // cb
+    tc = block_tables.reshape(b, nc, cb)
+
+    qg = _group_queries(q, hk).astype(jnp.float32) * (d ** -0.5)
+    qpos = _query_positions(q_offset, sq)              # (1 or B, sq)
+
+    def load_chunk(c):
+        ids = jax.lax.dynamic_index_in_dim(tc, c, 1, keepdims=False)
+        ids = jnp.clip(ids, 0, nb - 1)                 # ids: (b, cb)
+        return (k_pool[ids].reshape(b, ck, hk, d),
+                v_pool[ids].reshape(b, ck, hk, d))
+
+    return _online_softmax_scan(qg, qpos, causal, kv_valid_len, nc, ck,
+                                load_chunk, q.dtype)
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
@@ -141,7 +238,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 def mixed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                     kv_valid_len: jax.Array, q_offset: jax.Array,
-                    chunk_kv: int = 1024) -> jax.Array:
+                    chunk_kv: int = 1024,
+                    block_tables: Optional[jax.Array] = None) -> jax.Array:
     """S-token chunk per slot against a (B, S_max, Hk, D) KV cache.
 
     The serving engine's unified prefill/decode step: slot b's S queries
@@ -152,10 +250,15 @@ def mixed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     valid keys.  S == 1 with ``kv_valid_len == cache_len + 1`` is
     exactly classic decode; large caches stream through the
     online-softmax scan instead of materializing (B, S_max) scores.
+
+    With ``block_tables`` the cache is a global (num_blocks, block_size,
+    Hk, D) pool and slot b's logical positions resolve through its table
+    row — the block-paged serving path (cross-request prefix sharing).
     """
     return chunked_attention(q, k_cache, v_cache, causal=True,
                              chunk_kv=chunk_kv, q_offset=q_offset,
-                             kv_valid_len=kv_valid_len)
+                             kv_valid_len=kv_valid_len,
+                             block_tables=block_tables)
 
 
 def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -14,13 +14,14 @@ The engine itself is a chunked-prefill continuous-batching scheduler
 jitted step function of fixed shape:
 
   unified_step : tokens (slots, chunk), per-slot cache_len write
-                 offsets, per-slot n_new valid counts
+                 offsets, per-slot n_new valid counts, per-slot block
+                 tables (slots, max_blocks), slot_map (slots, chunk)
               -> next-token logits (slots, vocab), updated caches
 
 Every engine iteration fills that fixed token grid with a mix of work:
 each actively *decoding* slot contributes its 1 next token, and slots
-still *prefilling* stream their prompt through the shared batch cache
-in up-to-``chunk``-token slices.  A ``token_budget`` caps the real
+still *prefilling* stream their prompt through the shared cache in
+up-to-``chunk``-token slices.  A ``token_budget`` caps the real
 (non-padding) tokens scheduled per iteration — decodes are always
 scheduled first (admission and prefill never stall a running decode),
 the leftover budget goes to prefill chunks.  Because prefill is
@@ -28,14 +29,32 @@ incremental, arbitrarily long prompts (up to ``max_len``) are
 admissible, there is no per-bucket jit cache, no per-request mini
 cache, and no prefill-sized latency spike for running decodes.
 
-All scheduler state (slot occupancy, lengths, prompt cursors) lives
-host-side in numpy: a step issues NO device->host sync beyond the one
-explicit fetch of the sampled tokens (see ``d2h_fetches``).
+The KV cache is **block-paged** (serve/block_pool): one global
+(num_blocks, block_size, ...) pool per layer-period instead of a
+per-slot (slots, max_len, ...) slab.  Each slot's logical positions
+resolve through a host-side block table; writes target physical
+``block * block_size + offset`` positions via a per-step ``slot_map``.
+Paging buys **cross-request prefix reuse**: at admission the new
+prompt's full blocks are chain-hashed and any block an earlier request
+already pushed through the cache is re-referenced instead of
+recomputed — the prompt cursor jumps to the first non-shared token
+(capped at plen - 1 so the last token always produces logits), and a
+partially-filled tail block match is deep-copied (copy-on-write)
+before the newcomer writes into it.  This is the paper's in-memory
+amortization discipline applied to activations: one KV write serves
+every request that shares the prefix, exactly as one TiM weight load
+serves the whole ternary VMM.
+
+All scheduler state (slot occupancy, lengths, prompt cursors, block
+tables, refcounts, hashes) lives host-side in numpy: a step issues NO
+device->host sync beyond the one explicit fetch of the sampled tokens
+(see ``d2h_fetches``).
 
 This is what the paper's throughput-per-watt story needs above the
 fused Pallas kernels: decode steps are weight-stream-bound, so the
 extra grid columns that carry prefill chunks ride the same single
-weight stream the decode batch already pays for.
+weight stream the decode batch already pays for — and shared-prefix
+admission skips the prefill FLOPs entirely.
 """
 from __future__ import annotations
 
@@ -49,6 +68,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import transformer as tfm
 from repro.nn.linear import TernaryPolicy
+from repro.serve.block_pool import (ROOT_HASH, BlockPool, chain_hash,
+                                    default_num_blocks)
 
 
 # ---------------------------------------------------------------------------
@@ -216,11 +237,13 @@ def make_decode_step(cfg: ArchConfig):
 
 
 def make_unified_step(cfg: ArchConfig):
-    """THE engine step: a fixed (slots, chunk) token grid mixing decode
-    tokens (n_new == 1) and prefill chunks (n_new in [0, chunk]), each
-    slot appending at its own ``cache_len`` offset into the shared
-    batch cache.  Returns per-slot logits at each slot's last valid
-    token (n_new[b] - 1)."""
+    """The contiguous-cache unified step: a fixed (slots, chunk) token
+    grid mixing decode tokens (n_new == 1) and prefill chunks (n_new in
+    [0, chunk]), each slot appending at its own ``cache_len`` offset
+    into the shared batch cache.  Returns per-slot logits at each
+    slot's last valid token (n_new[b] - 1).  (Kept as the unpaged
+    reference / dry-run shape; the engine itself runs the paged step.)
+    """
     def unified_step(params, batch, caches, cache_len, n_new):
         hidden, caches, _ = tfm.forward(
             params, cfg, batch, mode="mixed", caches=caches,
@@ -230,6 +253,49 @@ def make_unified_step(cfg: ArchConfig):
         lg = tfm.logits(params, cfg, last)
         return lg[:, 0], caches
     return unified_step
+
+
+def make_paged_unified_step(cfg: ArchConfig):
+    """THE engine step: the unified mixed prefill/decode step against a
+    block-paged KV pool.  ``block_tables`` (slots, max_blocks) resolves
+    logical reads; ``slot_map`` (slots, chunk) gives each new token's
+    physical write position (block * block_size + offset)."""
+    def paged_step(params, batch, caches, cache_len, n_new,
+                   block_tables, slot_map):
+        hidden, caches, _ = tfm.forward(
+            params, cfg, batch, mode="mixed", caches=caches,
+            cache_len=cache_len, n_new=n_new,
+            block_tables=block_tables, slot_map=slot_map)
+        last = jnp.take_along_axis(
+            hidden, jnp.maximum(n_new - 1, 0)[:, None, None], axis=1)
+        lg = tfm.logits(params, cfg, last)
+        return lg[:, 0], caches
+    return paged_step
+
+
+def copy_kv_block(caches, src, dst):
+    """Copy one physical KV block (every layer-period, K and V and any
+    scales) — the copy-on-write primitive behind partial-tail prefix
+    sharing.  Pure function of the cache pytree; jitted at module scope
+    (``_copy_kv_block_jit``) with donation so it is an in-place
+    dynamic-update on device and the compile is shared by every engine
+    in the process."""
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: (v.at[:, dst].set(v[:, src])
+                        if k in ("k", "v", "k_scale", "v_scale")
+                        and hasattr(v, "at") else walk(v))
+                    for k, v in tree.items()}
+        return tree
+    return walk(caches)
+
+
+_copy_kv_block_jit = jax.jit(copy_kv_block, donate_argnums=(0,))
+
+# row-wise update of the device-resident block-table mirror (module
+# scope: one compile per table shape, shared across engines)
+_set_table_row_jit = jax.jit(lambda t, i, r: t.at[i].set(r),
+                             donate_argnums=(0,))
 
 
 def greedy_token(logits: jax.Array) -> jax.Array:
@@ -257,10 +323,11 @@ class Request:
     media: Optional[np.ndarray] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    prefix_hit_tokens: int = 0   # prompt tokens served from shared blocks
 
 
 class ServeEngine:
-    """Chunked-prefill continuous batching over a fixed-size slot batch.
+    """Chunked-prefill continuous batching over a block-paged KV pool.
 
     One jitted step of fixed shape (``batch_slots``, ``chunk``) serves
     both prefill and decode: the scheduler fills the grid each
@@ -268,6 +335,22 @@ class ServeEngine:
     prompt slices for slots still prefilling, bounded by
     ``token_budget`` real tokens per iteration (decodes first — they
     never stall; leftover budget streams prefills).
+
+    The KV cache is a global pool of ``num_blocks`` x ``block_size``
+    token blocks (serve/block_pool) addressed through per-slot block
+    tables.  With ``prefix_reuse`` (default 'auto': on for pure
+    attention stacks without media — recurrent SSM state and
+    media-conditioned hidden states make token-hash sharing unsound),
+    admission chain-hashes the prompt's full blocks and re-references
+    any block already resident; the prompt cursor jumps to the first
+    non-shared token.  A partial tail-block match (including the
+    degenerate whole-prompt hit, which must still compute its last
+    token for logits) is served copy-on-write: the shared block is
+    deep-copied into a freshly owned block before this slot's first
+    write.  ``prefix_hit_tokens`` / ``scheduled_prefill_tokens`` /
+    ``stats()`` expose the accounting; ``validate()`` asserts the
+    pool/table invariants (used by the property suite after every
+    step).
 
     ``oversize`` controls prompts longer than ``max_len`` (chunked
     prefill admits anything that fits the cache; a prompt of exactly
@@ -283,7 +366,9 @@ class ServeEngine:
     def __init__(self, params, cfg: ArchConfig, batch_slots: int,
                  max_len: int, greedy: bool = True, seed: int = 0,
                  oversize: str = "error", chunk: int = 16,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefix_reuse: Any = "auto"):
         assert oversize in ("error", "truncate"), oversize
         assert chunk >= 1, chunk
         self.params = params
@@ -298,17 +383,73 @@ class ServeEngine:
         assert self.token_budget >= 1, token_budget
         self.key = jax.random.PRNGKey(seed)
 
-        self.caches = tfm.init_caches(cfg, batch_slots, max_len)
+        # NOT clamped to max_len: a block larger than the cache just
+        # leaves its tail unused, whereas silently shrinking block_size
+        # could break the attn_chunk_kv divisibility the caller chose
+        self.block_size = max(1, block_size)
+        self.max_blocks = -(-max_len // self.block_size)
+        if num_blocks is None:
+            # every slot can hold a full max_len sequence, plus one
+            # spare block per slot so prefix-cached blocks survive a
+            # little churn before eviction
+            num_blocks = default_num_blocks(batch_slots, max_len,
+                                            self.block_size)
+        # + 1: a whole-prompt prefix hit transiently holds all of its
+        # hit blocks PLUS the copy-on-write allocation before releasing
+        # the re-owned source, so exact capacity can raise mid-admission
+        assert num_blocks >= batch_slots * self.max_blocks + 1, (
+            "pool must exceed slots * ceil(max_len / block_size): a "
+            "full batch plus one transient copy-on-write block")
+        assert cfg.attn_chunk_kv % self.block_size == 0, (
+            "block_size must divide attn_chunk_kv — paged attention "
+            "chunks the scan in whole blocks, and bit-exact parity "
+            "with the contiguous path needs identical chunk boundaries",
+            cfg.attn_chunk_kv, self.block_size)
+        reuse_sound = (all(s.mixer == "attn" for s in cfg.layout)
+                       and not cfg.n_media_tokens)
+        if prefix_reuse == "auto":
+            prefix_reuse = reuse_sound
+        elif prefix_reuse and not reuse_sound:
+            raise ValueError(
+                "prefix_reuse requires a pure-attention stack without "
+                "media: recurrent SSM/conv state cannot jump over "
+                "skipped tokens, and media-conditioned hidden states "
+                "make token-only chain hashes unsound — construct with "
+                "prefix_reuse='auto' (or False) for this architecture")
+        self.prefix_reuse = bool(prefix_reuse)
+        self.pool = BlockPool(num_blocks, self.block_size)
+
+        self.caches = tfm.init_paged_caches(cfg, batch_slots, num_blocks,
+                                            self.block_size)
         # host-side scheduler state: no device sync ever needed to
         # schedule, admit, or detect completion
         self.cache_len = np.zeros((batch_slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_prompt: List[Optional[np.ndarray]] = [None] * batch_slots
         self.slot_fill = np.zeros((batch_slots,), np.int64)  # prompt cursor
+        self.block_tables = np.full((batch_slots, self.max_blocks), -1,
+                                    np.int32)
+        self.slot_nblocks = np.zeros((batch_slots,), np.int64)
+        # full token history per slot (== what the cache holds, position
+        # by position) and the chain digest per completed block — what
+        # admission matches against and registration extends
+        self.slot_hist: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.slot_chain: List[List[bytes]] = [[] for _ in range(batch_slots)]
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.d2h_fetches = 0
         self.n_step_compiles = 0
+        self.prefix_hit_tokens = 0
+        self.scheduled_prefill_tokens = 0
+        self.scheduled_tokens = 0
+        self._last_slot_map: Optional[np.ndarray] = None
+        # device mirror of the block tables, updated ROW-wise when a
+        # slot's table changes (admission / block allocation / release)
+        # — decode steady state ships the small slot_map plus at most a
+        # few (max_blocks,) rows, never the whole (slots, max_blocks)
+        # table
+        self._tables_dev = None
+        self._dirty_slots: set = set(range(batch_slots))
         # per-slot media is constant for a request's lifetime: keep one
         # device-resident batch, re-uploaded only when admission changes
         # a slot (never in decode steady state)
@@ -319,12 +460,16 @@ class ServeEngine:
                 (batch_slots, cfg.n_media_tokens, cfg.media_dim),
                 np.float32)
 
-        def _counted(params, batch, caches, cache_len, n_new):
+        def _counted(params, batch, caches, cache_len, n_new,
+                     block_tables, slot_map):
             self.n_step_compiles += 1          # trace-time: counts shapes
-            return make_unified_step(cfg)(params, batch, caches,
-                                          cache_len, n_new)
+            return make_paged_unified_step(cfg)(
+                params, batch, caches, cache_len, n_new, block_tables,
+                slot_map)
 
         self._step = jax.jit(_counted, donate_argnums=(2,))
+        self._copy_step = _copy_kv_block_jit
+        self._set_table_row = _set_table_row_jit
 
     def submit(self, req: Request):
         plen = len(req.prompt)
@@ -362,11 +507,78 @@ class ServeEngine:
             return tree
         self.caches = walk(self.caches)
 
+    # -- prefix matching ----------------------------------------------------
+
+    def _match_full_blocks(self, tokens: np.ndarray):
+        """Chain-hash the prompt's full blocks against the pool.
+        Returns (matched_tokens, hit_bids, chain) with every hit block's
+        refcount already bumped."""
+        bs = self.block_size
+        hits: List[int] = []
+        chain: List[bytes] = []
+        prev = ROOT_HASH
+        matched = 0
+        for jb in range(len(tokens) // bs):
+            h = chain_hash(prev, tokens[jb * bs:(jb + 1) * bs])
+            bid = self.pool.lookup(h)
+            if bid is None:
+                break
+            hits.append(bid)
+            chain.append(h)
+            prev = h
+            matched += bs
+        return matched, hits, chain
+
+    def _match_partial_tail(self, chain: List[bytes], tokens: np.ndarray,
+                            matched: int):
+        """Extend a full-block match into a live slot's partially
+        filled tail block.  Returns (src_bid, n_tokens): the physical
+        block to copy-on-write from and how many of its leading tokens
+        match (0 = no match)."""
+        bs = self.block_size
+        jb = matched // bs
+        limit = len(tokens) - 1 - matched   # last token must be computed
+        if limit <= 0:
+            return -1, 0
+        best_bid, best_l = -1, 0
+        for s in self._active_slots():
+            f = len(self.slot_hist[s])
+            if f // bs != jb or f % bs == 0:
+                continue                     # no partial tail at block jb
+            if self.slot_chain[s] != chain:
+                continue                     # different history below jb
+            tail = self.slot_hist[s][jb * bs:f]
+            l = 0
+            for a, b in zip(tokens[matched:matched + limit], tail):
+                if int(a) != int(b):
+                    break
+                l += 1
+            if l > best_l:
+                best_bid, best_l = int(self.block_tables[s, jb]), l
+        return best_bid, best_l
+
+    def _cow_block(self, slot: int, jb: int, src: int) -> int:
+        """Copy-on-write: deep-copy physical block ``src`` into a
+        freshly owned block installed at this slot's table entry ``jb``.
+        The copy happens BEFORE this slot's first write — sharing the
+        block in place would let the newcomer's writes corrupt the
+        donor's later reads (the regression test in
+        tests/test_prefix_reuse.py)."""
+        dst = self.pool.allocate()
+        self.caches = self._copy_step(self.caches, np.int32(src),
+                                      np.int32(dst))
+        self.block_tables[slot, jb] = dst
+        self.slot_nblocks[slot] = jb + 1
+        self._dirty_slots.add(slot)
+        return dst
+
     def _admit(self):
         """Assign queued requests to free slots.  Nearly free — no
         forward pass happens here (the prompt streams through
-        subsequent unified steps chunk by chunk), only the slot's
-        recurrent state is zeroed."""
+        subsequent unified steps chunk by chunk); prefix matching jumps
+        the prompt cursor over blocks the pool already holds, a
+        partial-tail hit costs one block copy, and the slot's recurrent
+        state is zeroed."""
         for slot in range(self.slots):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
@@ -377,22 +589,73 @@ class ServeEngine:
                 # keep the most recent context, WITHOUT mutating the
                 # caller's Request — req.prompt stays intact
                 tokens_in = tokens_in[len(tokens_in) - self.max_len:]
+            tokens_in = np.asarray(tokens_in, np.int32)
+            plen = len(tokens_in)
+
+            matched, hits, chain = (
+                self._match_full_blocks(tokens_in) if self.prefix_reuse
+                else (0, [], []))
+            cow_src, cow_take, cow_release = -1, 0, -1
+            if matched >= plen:
+                # whole-prompt hit: the last block must be re-owned so
+                # its final position can be recomputed for logits —
+                # drop the full-block credit, CoW all but the last
+                # token.  The lookup's reference on the source keeps it
+                # safe from eviction until the copy lands.
+                cow_src = hits.pop()
+                chain.pop()
+                matched -= self.block_size
+                cow_take, cow_release = self.block_size - 1, cow_src
+            elif self.prefix_reuse:
+                # the donor slot's own reference protects the source
+                cow_src, cow_take = self._match_partial_tail(
+                    chain, tokens_in, matched)
+
             self.slot_req[slot] = req
-            self.slot_prompt[slot] = np.asarray(tokens_in, np.int32)
-            self.slot_fill[slot] = 0
-            self.cache_len[slot] = 0
+            self.slot_prompt[slot] = tokens_in
+            self.block_tables[slot].fill(-1)
+            for jb, bid in enumerate(hits):
+                self.block_tables[slot, jb] = bid
+            self.slot_nblocks[slot] = len(hits)
+            self._dirty_slots.add(slot)
+            self.slot_chain[slot] = list(chain)
+            if cow_src >= 0 and cow_take > 0:
+                self._cow_block(slot, len(hits), cow_src)
+                matched += cow_take
+            if cow_release >= 0:
+                self.pool.decref(cow_release)
+
+            self.slot_hist[slot] = [int(t) for t in tokens_in[:matched]]
+            self.slot_fill[slot] = matched
+            self.cache_len[slot] = matched
+            req.prefix_hit_tokens = matched
+            self.prefix_hit_tokens += matched
             self._reset_slot_state(slot)
             if self.cfg.n_media_tokens:
                 self._media_host[slot] = \
                     req.media if req.media is not None else 0.0
                 self._media_dirty = True
 
-    def _schedule(self) -> Tuple[np.ndarray, np.ndarray, List[int],
-                                 List[int]]:
+    def _ensure_blocks(self, i: int, upto_len: int):
+        """Allocate physical blocks so slot i can hold ``upto_len``
+        cache positions."""
+        need = -(-upto_len // self.block_size)
+        while self.slot_nblocks[i] < need:
+            self.block_tables[i, self.slot_nblocks[i]] = \
+                self.pool.allocate()
+            self.slot_nblocks[i] += 1
+            self._dirty_slots.add(i)
+
+    def _schedule(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 List[int], List[int]]:
         """Fill the (slots, chunk) grid: decodes first (always), then
-        prompt slices under the remaining token budget."""
+        prompt slices under the remaining token budget.  Also builds
+        the physical write map (slot_map) and allocates the blocks the
+        scheduled tokens land in."""
         tokens = np.zeros((self.slots, self.chunk), np.int32)
         n_new = np.zeros((self.slots,), np.int32)
+        oob = self.pool.num_blocks * self.block_size
+        slot_map = np.full((self.slots, self.chunk), oob, np.int32)
         decode_slots: List[int] = []
         finishing_prefill: List[int] = []
         budget = self.token_budget
@@ -413,7 +676,28 @@ class ServeEngine:
             budget -= take
             if fill + take >= plen:
                 finishing_prefill.append(i)
-        return tokens, n_new, decode_slots, finishing_prefill
+        for i in range(self.slots):
+            t = int(n_new[i])
+            if not t:
+                continue
+            cl = int(self.cache_len[i])
+            self._ensure_blocks(i, cl + t)
+            pos = cl + np.arange(t)
+            blk = self.block_tables[i, pos // self.block_size]
+            slot_map[i, :t] = blk * self.block_size + pos % self.block_size
+        return tokens, n_new, slot_map, decode_slots, finishing_prefill
+
+    def _release_slot(self, i: int):
+        """Return every block the slot references to the pool (shared
+        blocks decref; completed hashed blocks stay matchable until
+        evicted)."""
+        for jb in range(int(self.slot_nblocks[i])):
+            self.pool.decref(int(self.block_tables[i, jb]))
+        self.block_tables[i].fill(-1)
+        self.slot_nblocks[i] = 0
+        self.slot_hist[i] = []
+        self.slot_chain[i] = []
+        self._dirty_slots.add(i)
 
     def _finish_check(self, i: int):
         req = self.slot_req[i]
@@ -425,11 +709,23 @@ class ServeEngine:
             self.finished.append(req)
             self.slot_req[i] = None
             self.slot_prompt[i] = None
+            self._release_slot(i)
+
+    def _register_completed(self, i: int, old_len: int, new_len: int):
+        """Publish the chain hash of every block slot i completed this
+        step, making it matchable by future admissions."""
+        bs = self.block_size
+        for jb in range(old_len // bs, new_len // bs):
+            prev = self.slot_chain[i][-1] if self.slot_chain[i] \
+                else ROOT_HASH
+            h = chain_hash(prev, self.slot_hist[i][jb * bs:(jb + 1) * bs])
+            self.slot_chain[i].append(h)
+            self.pool.register(int(self.block_tables[i, jb]), h)
 
     def step(self):
         """One engine iteration: admit -> one unified mixed step."""
         self._admit()
-        tokens, n_new, decode_slots, finishing = self._schedule()
+        tokens, n_new, slot_map, decode_slots, finishing = self._schedule()
         if not n_new.any():
             return
         batch = {"tokens": jnp.asarray(tokens)}
@@ -438,15 +734,39 @@ class ServeEngine:
                 self._media_dev = jnp.asarray(self._media_host)
                 self._media_dirty = False
             batch["media"] = self._media_dev
+        if self._dirty_slots:
+            if self._tables_dev is None or \
+                    len(self._dirty_slots) > self.slots // 2:
+                self._tables_dev = jnp.asarray(self.block_tables)
+            else:
+                for i in sorted(self._dirty_slots):
+                    self._tables_dev = self._set_table_row(
+                        self._tables_dev, np.int32(i),
+                        jnp.asarray(self.block_tables[i]))
+            self._dirty_slots.clear()
         lg, self.caches = self._step(self.params, batch, self.caches,
                                      jnp.asarray(self.cache_len),
-                                     jnp.asarray(n_new))
+                                     jnp.asarray(n_new),
+                                     self._tables_dev,
+                                     jnp.asarray(slot_map))
         # host-side bookkeeping: lengths advance by exactly what was
         # scheduled — no device round-trip
+        old_len = self.cache_len.copy()
         self.cache_len += n_new
+        self.scheduled_tokens += int(n_new.sum())
+        self._last_slot_map = np.where(
+            np.arange(self.chunk)[None, :] < n_new[:, None], slot_map, -1)
         for i in range(self.slots):
-            if n_new[i] and i not in decode_slots:
-                self.slot_fill[i] += int(n_new[i])   # prompt cursor
+            t = int(n_new[i])
+            if not t:
+                continue
+            if i not in decode_slots:
+                self.slot_fill[i] += t               # prompt cursor
+                self.scheduled_prefill_tokens += t
+            self.slot_hist[i].extend(int(x) for x in tokens[i, :t])
+            if self.prefix_reuse:
+                self._register_completed(i, int(old_len[i]),
+                                         int(old_len[i]) + t)
         toks_dev = (greedy_token(lg) if self.greedy
                     else sample_token(lg, self._next_key()))
         toks = np.asarray(jax.device_get(toks_dev))   # the ONE d2h fetch
@@ -466,3 +786,56 @@ class ServeEngine:
             self.step()
             it += 1
         return self.finished
+
+    # -- introspection / invariants ----------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        """Per-engine paging and reuse counters (cumulative except the
+        block-occupancy gauges)."""
+        return {
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "scheduled_tokens": self.scheduled_tokens,
+            "scheduled_prefill_tokens": self.scheduled_prefill_tokens,
+            "blocks_in_use": self.pool.blocks_in_use,
+            "blocks_cached": self.pool.blocks_cached,
+            "evictions": self.pool.evictions,
+        }
+
+    def validate(self):
+        """Assert the pool/table invariants (cheap, host-side only; the
+        property suite calls this after every step):
+
+          * pool hash maps are mutually consistent;
+          * every block's refcount equals its multiplicity across
+            active slots' tables (cached blocks: 0);
+          * table rows are dense prefixes sized exactly
+            ceil(cache_len / block_size);
+          * a slot's token history matches its cache length;
+          * a partially filled tail block is exclusively owned
+            (refcount 1) — shared blocks are never written;
+          * the last step's physical write targets were disjoint
+            across slots.
+        """
+        self.pool.check()
+        counts = np.zeros((self.pool.num_blocks,), np.int64)
+        for i in range(self.slots):
+            nb_i = int(self.slot_nblocks[i])
+            if self.slot_req[i] is None:
+                assert nb_i == 0 and (self.block_tables[i] == -1).all(), i
+                assert not self.slot_hist[i] and not self.slot_chain[i], i
+                continue
+            cl = int(self.cache_len[i])
+            bids = self.block_tables[i, :nb_i]
+            assert (bids >= 0).all(), (i, bids)
+            assert (self.block_tables[i, nb_i:] == -1).all(), i
+            assert nb_i == -(-cl // self.block_size), (i, nb_i, cl)
+            assert len(self.slot_hist[i]) == cl, (i, cl)
+            np.add.at(counts, bids, 1)
+            if cl % self.block_size:
+                tail = int(self.block_tables[i, cl // self.block_size])
+                assert self.pool.refcount[tail] == 1, (i, tail)
+        assert (self.pool.refcount == counts).all(), \
+            (self.pool.refcount, counts)
+        if self._last_slot_map is not None:
+            written = self._last_slot_map[self._last_slot_map >= 0]
+            assert len(np.unique(written)) == len(written), written

@@ -3,12 +3,15 @@
 When `hypothesis` is importable this module just re-exports the real
 ``given`` / ``settings`` / ``strategies``.  Otherwise it provides a
 minimal deterministic stand-in covering exactly the strategy surface
-this repo's tests use (``st.integers``, ``st.sampled_from``): ``@given``
-runs the test body over ``max_examples`` example tuples drawn from a
-per-test seeded numpy Generator, and ``@settings`` honours only
-``max_examples``.  No shrinking, no database — the point is that
-``pytest`` collects and exercises the properties with zero optional
-dependencies, per the ISSUE-1 satellite.
+this repo's tests use (``st.integers``, ``st.sampled_from``,
+``st.booleans``, ``st.tuples``, ``st.lists``): ``@given`` runs the
+test body over ``max_examples`` example tuples drawn from a per-test
+seeded numpy Generator, and ``@settings`` honours only
+``max_examples`` (the serve property suite passes ``derandomize``/
+``deadline`` too — the real library uses them for a fixed-seed CI
+profile, the shim is deterministic by construction).  No shrinking, no
+database — the point is that ``pytest`` collects and exercises the
+properties with zero optional dependencies, per the ISSUE-1 satellite.
 """
 from __future__ import annotations
 
@@ -38,8 +41,24 @@ except ImportError:
         seq = list(elements)
         return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
 
+    def _booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def _tuples(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+    def _lists(elem: _Strategy, min_size: int = 0,
+               max_size: int = 10, **_ignored) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size, endpoint=True))
+            return [elem.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
     strategies = types.SimpleNamespace(integers=_integers,
-                                       sampled_from=_sampled_from)
+                                       sampled_from=_sampled_from,
+                                       booleans=_booleans,
+                                       tuples=_tuples,
+                                       lists=_lists)
 
     class settings:  # noqa: N801 — mirrors the hypothesis API
         def __init__(self, max_examples: int = 10, **_ignored):

@@ -1,6 +1,10 @@
 """Shared serving-test oracle: greedy continuation with an UNPADDED
 whole-prompt prefill + one-token decode loop — what the chunked engine
-must match token-for-token."""
+must match token-for-token.  ``reference_rollout_jit`` is the same
+oracle with the prefill/decode steps jitted and cached (prefill
+retraces once per distinct prompt length) — the property suite runs
+hundreds of rollouts, eager tracing would dominate its runtime."""
+import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as tfm
@@ -21,5 +25,33 @@ def reference_rollout(params, cfg, prompt, steps, max_len):
                                         caches=caches, cache_len=clen)
         lg = tfm.logits(params, cfg, hidden[:, :1])
         toks.append(int(greedy_token(lg[:, 0])[0]))
+        clen = clen + 1
+    return toks
+
+
+_JIT_FNS = {}
+
+
+def reference_rollout_jit(params, cfg, prompt, steps, max_len):
+    """Jitted ``reference_rollout`` (identical tokens, cached steps)."""
+    from repro.serve.engine import make_decode_step, make_prefill_step
+    # ArchConfig is a frozen (hashable) dataclass: keying on the value
+    # (not id()) keeps the cache correct across derived configs
+    key = (cfg, max_len)
+    if key not in _JIT_FNS:
+        _JIT_FNS[key] = (jax.jit(make_prefill_step(cfg)),
+                         jax.jit(make_decode_step(cfg)))
+    prefill, decode = _JIT_FNS[key]
+    caches = tfm.init_caches(cfg, 1, max_len)
+    lg, caches = prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                         caches)
+    toks = [int(greedy_token(lg)[0])]
+    clen = jnp.asarray([len(prompt)], jnp.int32)
+    for _ in range(steps - 1):
+        lg, caches = decode(params,
+                            {"tokens": jnp.asarray([[toks[-1]]],
+                                                   jnp.int32)},
+                            caches, clen)
+        toks.append(int(greedy_token(lg)[0]))
         clen = clen + 1
     return toks

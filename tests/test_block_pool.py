@@ -1,0 +1,96 @@
+"""BlockPool lifecycle unit tests (allocation, sharing, eviction).
+
+The property suite exercises the pool only through the engine; these
+pin the allocator's own contract, including the edges that bit during
+review: plain-free-before-eviction preference, release-generation
+staleness after a lookup() revival, and first-writer-wins
+registration.
+"""
+import pytest
+
+from repro.serve.block_pool import ROOT_HASH, BlockPool, chain_hash
+
+
+def test_chain_hash_is_positional():
+    h1 = chain_hash(ROOT_HASH, [1, 2])
+    h2 = chain_hash(ROOT_HASH, [2, 1])
+    assert h1 != h2
+    assert chain_hash(h1, [3]) != chain_hash(h2, [3])
+    assert chain_hash(ROOT_HASH, [1, 2]) == h1      # deterministic
+
+
+def test_refcount_sharing_and_drain():
+    p = BlockPool(4, 2)
+    a = p.allocate()
+    h = chain_hash(ROOT_HASH, [5, 6])
+    p.register(a, h)
+    assert p.lookup(h) == a and p.refcount[a] == 2  # shared
+    p.decref(a)
+    assert p.blocks_in_use == 1                     # still one owner
+    p.decref(a)
+    assert p.blocks_in_use == 0 and p.blocks_cached == 1
+    p.check()
+
+
+def test_plain_free_preferred_over_eviction():
+    p = BlockPool(3, 2)
+    a, b, c = p.allocate(), p.allocate(), p.allocate()
+    p.register(a, chain_hash(ROOT_HASH, [1, 2]))
+    p.decref(a)                # cached released FIRST
+    p.decref(b)                # plain free released after
+    assert p.allocate() == b   # plain free wins despite younger release
+    assert p.evictions == 0 and p.blocks_cached == 1
+
+
+def test_eviction_is_oldest_release_first():
+    p = BlockPool(2, 2)
+    a, b = p.allocate(), p.allocate()
+    ha = chain_hash(ROOT_HASH, [1])
+    hb = chain_hash(ROOT_HASH, [2])
+    p.register(a, ha)
+    p.register(b, hb)
+    p.decref(a)
+    p.decref(b)
+    assert p.allocate() == a and p.evictions == 1   # oldest release
+    assert p.lookup(ha) is None and p.lookup(hb) == b
+
+
+def test_revival_stales_queued_release_entry():
+    """A block revived by lookup() must not be evicted off its OLD
+    (pre-revival) queue position once re-released — only the latest
+    release generation counts."""
+    p = BlockPool(4, 2)
+    a, b, c, d = (p.allocate() for _ in range(4))
+    ha = chain_hash(ROOT_HASH, [1])
+    hc = chain_hash(ROOT_HASH, [2])
+    p.register(a, ha)
+    p.register(c, hc)
+    p.decref(a)                       # old (stale-to-be) entry
+    assert p.lookup(ha) == a          # revived: hot again
+    p.decref(c)                       # c now the oldest release
+    p.decref(a)                       # a re-released, YOUNGER than c
+    p.decref(b)
+    p.decref(d)
+    assert {p.allocate(), p.allocate()} == {b, d}
+    assert p.allocate() == c          # c evicts before the hotter a
+    assert p.lookup(ha) == a
+    p.check()
+
+
+def test_register_first_writer_wins():
+    p = BlockPool(2, 2)
+    a, b = p.allocate(), p.allocate()
+    h = chain_hash(ROOT_HASH, [9])
+    p.register(a, h)
+    p.register(b, h)                  # concurrent identical prefill
+    assert p.hash_to_block[h] == a
+    assert p.block_hash[b] is None    # b stays private / plain
+    p.check()
+
+
+def test_exhaustion_raises_with_live_refs():
+    p = BlockPool(2, 2)
+    p.allocate()
+    p.allocate()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        p.allocate()

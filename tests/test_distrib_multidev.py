@@ -23,8 +23,10 @@ _SCRIPT = textwrap.dedent("""
     # --- sharded decode attention vs oracle -----------------------------
     from repro.distrib.decode_attn import (reference_decode_attention,
                                            reference_mixed_attention,
+                                           reference_paged_mixed_attention,
                                            sharded_decode_attention,
-                                           sharded_mixed_attention)
+                                           sharded_mixed_attention,
+                                           sharded_paged_mixed_attention)
     B, S, H, HK, D = 2, 32, 8, 4, 16
     q = jnp.asarray(rng.normal(size=(B, 1, H, D)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(B, S, HK, D)).astype(np.float32))
@@ -51,6 +53,48 @@ _SCRIPT = textwrap.dedent("""
                                    np.asarray(want_m[i, :nv]),
                                    rtol=2e-5, atol=2e-5)
     print("sharded_mixed_attention ok")
+
+    # --- block-PAGED sharded attention: pool sharded on its block axis,
+    # block tables replicated, lse merge over the device partials ---------
+    BS_BLK, NBLK = 8, 4          # 32 logical positions over 16 phys blocks
+    NB = 16                      # divisible by the 4-way model axis
+    pk = jnp.asarray(rng.normal(size=(NB, BS_BLK, HK, D)).astype(np.float32))
+    pv = jnp.asarray(rng.normal(size=(NB, BS_BLK, HK, D)).astype(np.float32))
+    tbl = jnp.asarray(rng.permutation(NB)[:B * NBLK].reshape(B, NBLK),
+                      jnp.int32)
+    want_p = reference_paged_mixed_attention(qm, pk, pv, tbl, offs + nnew,
+                                             offs)
+    got_p = sharded_paged_mixed_attention(qm, pk, pv, tbl, offs + nnew,
+                                          mesh, block_axis="model",
+                                          q_offset=offs)
+    for i in range(B):
+        nv = int(nnew[i])
+        np.testing.assert_allclose(np.asarray(got_p[i, :nv]),
+                                   np.asarray(want_p[i, :nv]),
+                                   rtol=2e-5, atol=2e-5)
+    # decode contract (q_offset None: validity-only masking)
+    clen_p = jnp.asarray([9, 27], jnp.int32)
+    want_p1 = reference_paged_mixed_attention(q, pk, pv, tbl, clen_p,
+                                              clen_p - 1)
+    got_p1 = sharded_paged_mixed_attention(q, pk, pv, tbl, clen_p, mesh,
+                                           block_axis="model")
+    np.testing.assert_allclose(np.asarray(got_p1), np.asarray(want_p1),
+                               rtol=2e-5, atol=2e-5)
+    # compaction bound binds: 8 logical blocks > nb_loc = 16/4 = 4, so
+    # each device keeps only its compacted local slice (1/n compute)
+    tbl_long = jnp.asarray(rng.permutation(NB)[:8].reshape(1, 8),
+                           jnp.int32)
+    q_long = jnp.asarray(rng.normal(size=(1, 2, H, D)).astype(np.float32))
+    off_l = jnp.asarray([50], jnp.int32)
+    want_l = reference_paged_mixed_attention(q_long, pk, pv, tbl_long,
+                                             off_l + 2, off_l)
+    got_l = sharded_paged_mixed_attention(q_long, pk, pv, tbl_long,
+                                          off_l + 2, mesh,
+                                          block_axis="model",
+                                          q_offset=off_l)
+    np.testing.assert_allclose(np.asarray(got_l), np.asarray(want_l),
+                               rtol=2e-5, atol=2e-5)
+    print("sharded_paged_mixed_attention ok")
 
     # --- row-parallel matmul ---------------------------------------------
     from repro.distrib.collectives import (allgather_matmul_overlapped,
@@ -118,6 +162,7 @@ def test_multidevice_distribution():
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
     assert "sharded_decode_attention ok" in proc.stdout
     assert "sharded_mixed_attention ok" in proc.stdout
+    assert "sharded_paged_mixed_attention ok" in proc.stdout
     assert "rowparallel_matmul ok" in proc.stdout
     assert "allgather_matmul_overlapped ok" in proc.stdout
     assert "pipeline_apply ok" in proc.stdout

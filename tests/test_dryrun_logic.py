@@ -97,6 +97,21 @@ def test_mixed_shape_registered_and_modeled():
     assert abs(mix - per_tok * (128 - 1 + 64)) / mix < 1e-9
 
 
+def test_paged_mixed_shared_shape_modeled():
+    """The paged prefix-reuse cell exists and its hit-rate discount
+    flows through the model-FLOPs yardstick: hit tokens are served from
+    shared blocks, not recomputed."""
+    from benchmarks.roofline import model_flops
+    sc = SHAPES["mixed_32k_shared"]
+    assert sc.kind == "mixed" and sc.block_size == 16
+    assert sc.hit_rate == 0.75
+    mix = model_flops("granite-34b", "mixed_32k", "mixed")
+    shared = model_flops("granite-34b", "mixed_32k_shared", "mixed")
+    per_tok = mix / (128 - 1 + 64)
+    hit = int(round(64 * 0.75))
+    assert abs(shared - per_tok * (128 - 1 + 64 - hit)) / shared < 1e-9
+
+
 def test_weight_stream_summary_math():
     from repro.launch.hlo_analysis import weight_stream_summary
     rep = {"weight_bytes_resident": 1000,

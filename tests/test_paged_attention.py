@@ -1,0 +1,162 @@
+"""Paged-attention parity matrix (ISSUE-4 satellite).
+
+``mixed_attention`` with a block table over a global pool must be
+BIT-EXACT against the contiguous PR-3 path: the paged scan gathers
+physical blocks but attends them at their logical positions with the
+same chunk boundaries, so every f32 reduction happens in the same
+order.  The matrix covers block_size {16, 64} x ragged n_new x
+q_offset at block boundaries +-1 x decode-as-S=1, on both the
+full-attention (cache <= chunk_kv) and online-softmax-scan routes.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.attention import mixed_attention, paged_view
+
+B, H, HK, D = 2, 4, 2, 8
+S_MAX = 128
+
+
+def _pool_from_contiguous(k, v, block_size, seed=0):
+    """Scatter a contiguous (B, S, Hk, D) cache into a block pool under
+    a random physical permutation; returns (pool_k, pool_v, tables)."""
+    rng = np.random.default_rng(seed)
+    b, s = k.shape[0], k.shape[1]
+    nblk = s // block_size
+    nb = b * nblk + 3                       # spare blocks stay garbage
+    perm = rng.permutation(nb)[:b * nblk].reshape(b, nblk)
+    pool_k = rng.normal(size=(nb, block_size) + k.shape[2:]) \
+        .astype(np.float32)                 # garbage outside the tables
+    pool_v = rng.normal(size=pool_k.shape).astype(np.float32)
+    for i in range(b):
+        for j in range(nblk):
+            pool_k[perm[i, j]] = np.asarray(
+                k[i, j * block_size:(j + 1) * block_size])
+            pool_v[perm[i, j]] = np.asarray(
+                v[i, j * block_size:(j + 1) * block_size])
+    return (jnp.asarray(pool_k), jnp.asarray(pool_v),
+            jnp.asarray(perm, jnp.int32))
+
+
+@pytest.fixture(scope="module")
+def kv():
+    rng = np.random.default_rng(7)
+    k = jnp.asarray(rng.normal(size=(B, S_MAX, HK, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S_MAX, HK, D)).astype(np.float32))
+    return k, v
+
+
+def _assert_paged_matches(kv, block_size, chunk_kv, q_offset, n_new,
+                          seed=1):
+    k, v = kv
+    rng = np.random.default_rng(seed)
+    sq = int(max(n_new))
+    q = jnp.asarray(rng.normal(size=(B, sq, H, D)).astype(np.float32))
+    offs = jnp.asarray(q_offset, jnp.int32)
+    nnew = jnp.asarray(n_new, jnp.int32)
+    want = mixed_attention(q, k, v, offs + nnew, offs, chunk_kv=chunk_kv)
+    pk, pv, tables = _pool_from_contiguous(k, v, block_size, seed)
+    got = mixed_attention(q, pk, pv, offs + nnew, offs, chunk_kv=chunk_kv,
+                          block_tables=tables)
+    for i in range(B):
+        nv = int(nnew[i])
+        np.testing.assert_array_equal(np.asarray(got[i, :nv]),
+                                      np.asarray(want[i, :nv]))
+
+
+# q_offset at block boundaries +-1 (bs=16 boundary at 16/32; bs=64 at 64)
+@pytest.mark.parametrize("block_size,chunk_kv", [(16, 32), (64, 64),
+                                                 (16, 1024)])
+@pytest.mark.parametrize("off_delta", [-1, 0, 1])
+def test_paged_matches_contiguous_at_block_boundaries(kv, block_size,
+                                                      chunk_kv, off_delta):
+    boundary = block_size
+    offs = [boundary + off_delta, 2 * boundary + off_delta]
+    _assert_paged_matches(kv, block_size, chunk_kv, offs, n_new=[4, 4])
+
+
+@pytest.mark.parametrize("block_size,chunk_kv", [(16, 32), (64, 64)])
+def test_paged_matches_contiguous_ragged_n_new(kv, block_size, chunk_kv):
+    _assert_paged_matches(kv, block_size, chunk_kv, q_offset=[5, 37],
+                          n_new=[7, 3])
+
+
+@pytest.mark.parametrize("block_size,chunk_kv", [(16, 32), (64, 64),
+                                                 (16, 1024)])
+def test_paged_decode_is_s1_special_case(kv, block_size, chunk_kv):
+    _assert_paged_matches(kv, block_size, chunk_kv,
+                          q_offset=[S_MAX - 1, 31], n_new=[1, 1])
+
+
+def test_paged_view_gathers_logical_order(kv):
+    k, _ = kv
+    pk, _, tables = _pool_from_contiguous(k, k, 16, seed=3)
+    view = paged_view(pk, tables)
+    np.testing.assert_array_equal(np.asarray(view), np.asarray(k))
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_paged_forward_matches_contiguous_mixed(kv_dtype):
+    """Model-level parity: two chunked mixed steps through a paged pool
+    (permuted physical blocks) produce bit-identical hidden states to
+    the contiguous PR-3 mixed path — including the int8-quantized KV
+    cache, whose per-token scales page alongside the codes."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+
+    cfg = get_config("chatglm3-6b", smoke=True)
+    if kv_dtype == "int8":
+        cfg = cfg.replace(kv_cache_dtype="int8")
+    params = tfm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    b, max_len, bs = 2, 32, 8
+    nblk = max_len // bs
+    nb = b * nblk + 2
+    tables = np.asarray(
+        rng.permutation(nb)[:b * nblk].reshape(b, nblk), np.int32)
+
+    caches_c = tfm.init_caches(cfg, b, max_len)
+    caches_p = tfm.init_paged_caches(cfg, b, nb, bs)
+    cl = np.zeros((b,), np.int32)
+    for n_new in ([4, 3], [2, 4]):
+        n_new = np.asarray(n_new, np.int32)
+        sq = int(n_new.max())
+        tokens = rng.integers(1, cfg.vocab_size, (b, sq)).astype(np.int32)
+        smap = np.full((b, sq), nb * bs, np.int32)
+        for i in range(b):
+            pos = cl[i] + np.arange(n_new[i])
+            smap[i, :n_new[i]] = tables[i, pos // bs] * bs + pos % bs
+        hc, caches_c, _ = tfm.forward(
+            params, cfg, {"tokens": jnp.asarray(tokens)}, mode="mixed",
+            caches=caches_c, cache_len=jnp.asarray(cl),
+            n_new=jnp.asarray(n_new))
+        hp, caches_p, _ = tfm.forward(
+            params, cfg, {"tokens": jnp.asarray(tokens)}, mode="mixed",
+            caches=caches_p, cache_len=jnp.asarray(cl),
+            n_new=jnp.asarray(n_new),
+            block_tables=jnp.asarray(tables),
+            slot_map=jnp.asarray(smap))
+        for i in range(b):
+            np.testing.assert_array_equal(
+                np.asarray(hc[i, :n_new[i]]).astype(np.float32),
+                np.asarray(hp[i, :n_new[i]]).astype(np.float32))
+        cl = cl + n_new
+
+
+def test_unassigned_table_entries_are_masked(kv):
+    """Entries beyond a slot's allocated blocks (e.g. -1) gather
+    garbage that kv_valid_len must hide."""
+    k, v = kv
+    rng = np.random.default_rng(9)
+    pk, pv, tables = _pool_from_contiguous(k, v, 16, seed=9)
+    tables = np.array(tables)
+    tables[:, 4:] = -1                       # only 64 positions assigned
+    q = jnp.asarray(rng.normal(size=(B, 2, H, D)).astype(np.float32))
+    offs = jnp.asarray([10, 60], jnp.int32)
+    nnew = jnp.asarray([2, 2], jnp.int32)
+    want = mixed_attention(q, k, v, offs + nnew, offs, chunk_kv=32)
+    got = mixed_attention(q, pk, pv, offs + nnew, offs, chunk_kv=32,
+                          block_tables=jnp.asarray(tables, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,180 @@
+"""Cross-request prefix reuse on the block-paged engine (ISSUE-4).
+
+Acceptance contract:
+
+  * two requests sharing a long system prompt produce token-identical
+    output to cold-start runs, with ``prefix_hit_tokens > 0`` and the
+    second prefill scheduling FEWER tokens than cold start (the prompt
+    cursor jumps the shared blocks);
+  * the whole-prompt hit degenerates gracefully (the last token is
+    always recomputed for logits);
+  * copy-on-write regression: a partially filled tail block matched at
+    admission must be DEEP-COPIED before the newcomer writes into it —
+    sharing it in place corrupts the donor's later decode reads (this
+    test fails on that implementation; see the BuggyShare subclass);
+  * everything is freed at drain and the block-pool invariants hold.
+"""
+import jax
+import numpy as np
+import pytest
+
+from _serve_ref import reference_rollout
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.serve.engine import Request, ServeEngine, ternarize_model
+
+MAX_LEN = 64
+BS = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("granite-34b", smoke=True)
+    params = ternarize_model(tfm.init(cfg, jax.random.PRNGKey(0)), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, slots=2, **kw):
+    kw.setdefault("chunk", 8)
+    kw.setdefault("block_size", BS)
+    return ServeEngine(params, cfg, batch_slots=slots, max_len=MAX_LEN,
+                       **kw)
+
+
+def _run(eng):
+    while eng.queue or eng._active_slots():
+        eng.step()
+        eng.validate()
+    return {r.uid: r for r in eng.finished}
+
+
+def test_shared_system_prompt_end_to_end(setup):
+    """The headline workload: many users behind one system prompt."""
+    cfg, params = setup
+    rng = np.random.default_rng(31)
+    system = rng.integers(1, cfg.vocab_size, 32).astype(np.int32)
+    p1 = np.concatenate([system,
+                         rng.integers(1, cfg.vocab_size, 5).astype(
+                             np.int32)])
+    p2 = np.concatenate([system,
+                         rng.integers(1, cfg.vocab_size, 7).astype(
+                             np.int32)])
+
+    eng = _engine(cfg, params)
+    eng.submit(Request(uid=0, prompt=p1, max_new_tokens=4))
+    _run(eng)                              # r1 alone: cold start
+    cold_prefill = eng.scheduled_prefill_tokens
+    assert cold_prefill == len(p1)
+    assert eng.prefix_hit_tokens == 0
+
+    eng.submit(Request(uid=1, prompt=p2, max_new_tokens=4))
+    done = _run(eng)
+
+    # token-identical to cold-start references
+    assert done[0].out_tokens == reference_rollout(params, cfg, p1, 4,
+                                                   MAX_LEN)
+    assert done[1].out_tokens == reference_rollout(params, cfg, p2, 4,
+                                                   MAX_LEN)
+    # the 32-token system prompt = 2 full blocks hit at admission
+    assert done[1].prefix_hit_tokens == 32
+    assert eng.prefix_hit_tokens == 32
+    # scheduling accounting: the second prefill skipped the shared
+    # blocks — it scheduled exactly plen - hit tokens, fewer than cold
+    second_prefill = eng.scheduled_prefill_tokens - cold_prefill
+    assert second_prefill == len(p2) - 32 < len(p2)
+    # drained: every block released (hashed ones stay cached, not live)
+    assert eng.stats()["blocks_in_use"] == 0
+    assert eng.stats()["blocks_cached"] > 0
+
+
+def test_whole_prompt_hit_still_computes_last_token(setup):
+    """An identical resubmitted prompt hits every full block; the last
+    block is re-owned copy-on-write so the final position's logits are
+    recomputed — output must stay identical."""
+    cfg, params = setup
+    rng = np.random.default_rng(32)
+    p = rng.integers(1, cfg.vocab_size, 2 * BS).astype(np.int32)
+    want = reference_rollout(params, cfg, p, 3, MAX_LEN)
+    eng = _engine(cfg, params)
+    for uid in range(2):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=3))
+        done = _run(eng)
+    assert done[0].out_tokens == want
+    assert done[1].out_tokens == want
+    assert done[1].prefix_hit_tokens == 2 * BS - 1   # all but the last
+    assert eng.stats()["blocks_in_use"] == 0
+
+
+def test_concurrent_partial_tail_match_uses_cow(setup):
+    """A newcomer matching a LIVE request's partially filled tail block
+    gets a deep copy; the donor's stream is never perturbed."""
+    cfg, params = setup
+    rng = np.random.default_rng(33)
+    shared = rng.integers(1, cfg.vocab_size, BS + 4).astype(np.int32)
+    pa = shared
+    pb = np.concatenate([shared,
+                         rng.integers(1, cfg.vocab_size, 6).astype(
+                             np.int32)])
+    want_a = reference_rollout(params, cfg, pa, 10, MAX_LEN)
+    want_b = reference_rollout(params, cfg, pb, 4, MAX_LEN)
+
+    eng = _engine(cfg, params, chunk=32)
+    eng.submit(Request(uid=0, prompt=pa, max_new_tokens=10))
+    eng.step()            # A prefilled: block0 full + 4-token tail
+    eng.validate()
+    eng.submit(Request(uid=1, prompt=pb, max_new_tokens=4))
+    done = _run(eng)
+    # B matched block0 (full) + 4 partial-tail tokens via CoW
+    assert done[1].prefix_hit_tokens == BS + 4
+    assert done[0].out_tokens == want_a    # donor never corrupted
+    assert done[1].out_tokens == want_b
+
+
+def test_forced_prefix_reuse_rejected_on_recurrent_stack():
+    """'auto' silently disables matching on SSM stacks (state cannot
+    jump skipped tokens); an explicit prefix_reuse=True must fail loud
+    instead of silently corrupting outputs."""
+    cfg = get_config("mamba2-1.3b", smoke=True)
+    params = ternarize_model(tfm.init(cfg, jax.random.PRNGKey(0)), cfg)
+    eng = ServeEngine(params, cfg, batch_slots=1, max_len=32)
+    assert eng.prefix_reuse is False           # auto-disabled
+    with pytest.raises(ValueError, match="pure-attention"):
+        ServeEngine(params, cfg, batch_slots=1, max_len=32,
+                    prefix_reuse=True)
+
+
+class BuggyShare(ServeEngine):
+    """The regression target: share the matched tail block IN PLACE
+    instead of deep-copying it."""
+
+    def _cow_block(self, slot, jb, src):
+        self.pool.incref(src)
+        self.block_tables[slot, jb] = src
+        self.slot_nblocks[slot] = jb + 1
+        return src
+
+
+def test_cow_regression_in_place_sharing_corrupts_donor(setup):
+    """Demonstrates the bug the CoW copy prevents: without the deep
+    copy, the newcomer's first chunk writes into the donor's tail block
+    and the donor's later decode reads corrupted KV.  If this test ever
+    starts passing with BuggyShare, the engine stopped writing through
+    the shared block (or stopped sharing) and the CoW test above lost
+    its teeth."""
+    cfg, params = setup
+    rng = np.random.default_rng(34)
+    shared = rng.integers(1, cfg.vocab_size, BS + 4).astype(np.int32)
+    pa = shared
+    pb = np.concatenate([shared,
+                         rng.integers(1, cfg.vocab_size, 6).astype(
+                             np.int32)])
+    want_a = reference_rollout(params, cfg, pa, 10, MAX_LEN)
+
+    eng = BuggyShare(params, cfg, batch_slots=2, max_len=MAX_LEN,
+                     chunk=32, block_size=BS)
+    eng.submit(Request(uid=0, prompt=pa, max_new_tokens=10))
+    eng.step()
+    eng.submit(Request(uid=1, prompt=pb, max_new_tokens=4))
+    done = {r.uid: r for r in eng.run_until_done()}
+    assert done[1].prefix_hit_tokens == BS + 4       # it did share
+    assert done[0].out_tokens != want_a              # ...and corrupted A

@@ -1,0 +1,143 @@
+"""Property-based serving invariants over random request streams
+(ISSUE-4 foregrounded satellite).
+
+A hypothesis strategy generates request streams — prompt lengths in
+[1, max_len - 2], shared (common system prompt) vs disjoint prefixes,
+interleaved submit times, greedy vs temperature sampling — and the
+engine is checked after EVERY step:
+
+  1. block refcounts are consistent with the active slots' tables, and
+     table rows are dense prefixes sized ceil(cache_len / block_size)
+     (``ServeEngine.validate``);
+  2. no block is owned twice for writing: partially filled tail blocks
+     have refcount 1 and the step's physical write targets are
+     disjoint across slots (``validate``);
+  3. decodes never stall: every slot that was decoding before a step
+     emits exactly one token during it, whatever admissions/prefills/
+     prefix hits happen alongside;
+  4. greedy emitted tokens are identical to the unpaged
+     ``tests/_serve_ref.py`` reference rollout;
+  5. at drain every block is released (``blocks_in_use == 0``) and the
+     pool hash maps are consistent;
+  6. token accounting closes: scheduled prefill tokens + prefix-hit
+     tokens == total admitted prompt tokens.
+
+Runs with a bounded deterministic profile (fixed seed via
+``derandomize``, ``max_examples`` = SERVE_PROPERTY_EXAMPLES, default
+50) so CI stays reproducible and fast; the in-repo hypothesis fallback
+shim (tests/_hypothesis_compat.py) keeps it runnable without the
+dependency.
+"""
+import os
+
+import jax
+import numpy as np
+
+from _hypothesis_compat import given, settings, strategies as st
+from _serve_ref import reference_rollout_jit
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.serve.engine import Request, ServeEngine, ternarize_model
+
+MAX_LEN = 32
+BLOCK_SIZE = 8
+CHUNK = 8
+SLOTS = 2
+MAX_EXAMPLES = int(os.environ.get("SERVE_PROPERTY_EXAMPLES", "50"))
+
+_STATE = {}
+
+
+def _setup():
+    if not _STATE:
+        cfg = get_config("granite-34b", smoke=True)
+        params = ternarize_model(tfm.init(cfg, jax.random.PRNGKey(0)),
+                                 cfg)
+        # the shared system prompt behind 'shared'-prefix requests —
+        # FIXED across examples so the prefix cache sees real reuse
+        base = np.random.default_rng(2024).integers(
+            1, cfg.vocab_size, MAX_LEN - 2).astype(np.int32)
+        _STATE.update(cfg=cfg, params=params, base=base, refs={},
+                      step=None, copy=None)
+    return _STATE
+
+
+def _fresh_engine(state, greedy):
+    eng = ServeEngine(state["params"], state["cfg"], batch_slots=SLOTS,
+                      max_len=MAX_LEN, chunk=CHUNK,
+                      block_size=BLOCK_SIZE, greedy=greedy)
+    # share ONE compiled step across examples (fixed shapes): per-engine
+    # jit closures would recompile identical HLO every example
+    if state["step"] is None:
+        state["step"], state["copy"] = eng._step, eng._copy_step
+    else:
+        eng._step, eng._copy_step = state["step"], state["copy"]
+    return eng
+
+
+def _reference(state, prompt, steps):
+    key = prompt.tobytes()
+    have = state["refs"].get(key)
+    if have is None or len(have) < steps:
+        have = reference_rollout_jit(state["params"], state["cfg"],
+                                     prompt, max(steps, 4), MAX_LEN)
+        state["refs"][key] = have
+    return have[:steps]
+
+
+def _step_checked(eng):
+    """One engine step bracketed by the per-step invariants."""
+    decoding = [(eng.slot_req[i], len(eng.slot_req[i].out_tokens))
+                for i in eng._active_slots()
+                if eng.slot_fill[i] >= len(eng.slot_prompt[i])]
+    eng.step()
+    eng.validate()          # invariants 1, 2, 5 (pool consistency)
+    for req, n0 in decoding:
+        assert len(req.out_tokens) == n0 + 1, \
+            f"decode stalled: uid={req.uid}"          # invariant 3
+
+
+# one request: (shared-prefix?, prompt len, max_new, submit-gap steps)
+_REQUEST = st.tuples(st.booleans(), st.integers(1, MAX_LEN - 2),
+                     st.integers(1, 3), st.integers(0, 2))
+
+
+@settings(max_examples=MAX_EXAMPLES, derandomize=True, deadline=None)
+@given(st.lists(_REQUEST, min_size=1, max_size=3),
+       st.integers(0, 2 ** 20), st.booleans())
+def test_engine_invariants_over_random_streams(stream, seed, greedy):
+    state = _setup()
+    cfg = state["cfg"]
+    rng = np.random.default_rng(seed)
+    eng = _fresh_engine(state, greedy)
+
+    reqs = []
+    for uid, (shared, plen, max_new, gap) in enumerate(stream):
+        prompt = (state["base"][:plen].copy() if shared else
+                  rng.integers(1, cfg.vocab_size, plen).astype(np.int32))
+        req = Request(uid=uid, prompt=prompt, max_new_tokens=max_new)
+        reqs.append(req)
+        eng.submit(req)
+        for _ in range(gap):                 # interleaved submit times
+            _step_checked(eng)
+    iters = 0
+    while eng.queue or eng._active_slots():
+        _step_checked(eng)
+        iters += 1
+        assert iters < 500
+
+    # invariant 5: drained — every block released, hash maps consistent
+    assert eng.stats()["blocks_in_use"] == 0
+    eng.validate()
+
+    # invariant 6: token accounting closes exactly
+    total_plen = sum(len(r.prompt) for r in reqs)
+    assert eng.scheduled_prefill_tokens + eng.prefix_hit_tokens \
+        == total_plen
+    assert all(r.done for r in reqs)
+
+    # invariant 4: greedy parity with the unpaged reference
+    if greedy:
+        for r in reqs:
+            assert r.out_tokens == _reference(state, r.prompt,
+                                              len(r.out_tokens)), r.uid

@@ -62,9 +62,10 @@ def test_spec_to_pspec():
 
 
 def test_cell_support_matrix():
-    """50 cells (the 40 assigned + the 10 mixed_32k serving cells) =
-    40 runnable + 10 documented skips (mixed follows decode support:
-    only the encoder-only arch skips it)."""
+    """60 cells (the 40 assigned + the 10 mixed_32k + the 10
+    mixed_32k_shared paged serving cells) = 49 runnable + 11 documented
+    skips (both mixed cells follow decode support: only the
+    encoder-only arch skips them)."""
     runnable, skipped = 0, 0
     for name in ARCH_NAMES:
         cfg = get_config(name)
@@ -75,7 +76,7 @@ def test_cell_support_matrix():
             else:
                 skipped += 1
                 assert reason
-    assert runnable == 40 and skipped == 10
+    assert runnable == 49 and skipped == 11
 
 
 def test_pspecs_for_params_ternary_weights():
