@@ -43,6 +43,12 @@ BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 WALLCLOCK_BASELINE = os.path.join(
     os.path.dirname(os.path.abspath(__file__)),
     "baselines", "kernel_bench_wallclock.csv")
+# the paged-attention gather-traffic rows live in their OWN CSV so
+# adding them never rewrites (or even re-headers) the original
+# kernel-bench baseline — old rows stay byte-identical
+PAGED_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "baselines", "paged_attention_baseline.csv")
 
 
 def wallclock_enabled() -> bool:
@@ -188,8 +194,13 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     wallclock = wallclock_enabled()
-    from benchmarks.kernel_bench import bench, deterministic_view
+    from benchmarks.kernel_bench import (bench, deterministic_view,
+                                         paged_attention_rows)
     full = bench(timed=args.exercise or wallclock, quick=True)
+    # paged-attention rows: analytic gate only — their --exercise
+    # timings (interpret-mode kernel) are printed, never compared, and
+    # they stay out of the wall-clock band entirely
+    paged = paged_attention_rows(timed=args.exercise)
     if wallclock:
         # min over repetitions stabilizes the quick-mode timings enough
         # to gate on (single-shot quick timings vary several x)
@@ -197,15 +208,19 @@ def main(argv=None) -> int:
             [full] + [bench(timed=True, quick=True)
                       for _ in range(wallclock_reps() - 1)])
     if args.exercise or wallclock:
-        for r in full:
+        for r in full + paged:
             us = {k: v for k, v in r.items() if k.endswith("_us")}
             if us:
                 print(f"[exercise] {r['case']}: {us}")
     rows = deterministic_view(full)
+    paged_rows = deterministic_view(paged)
 
     if args.update:
         _rows_to_csv(rows, BASELINE)
         print(f"[check_baseline] wrote {BASELINE} ({len(rows)} rows)")
+        _rows_to_csv(paged_rows, PAGED_BASELINE)
+        print(f"[check_baseline] wrote {PAGED_BASELINE} "
+              f"({len(paged_rows)} rows)")
         if wallclock:
             wrows = wallclock_view(full)
             _rows_to_csv(wrows, WALLCLOCK_BASELINE)
@@ -214,6 +229,7 @@ def main(argv=None) -> int:
         return 0
 
     problems = compare_against_baseline(rows)
+    problems += compare_against_baseline(paged_rows, PAGED_BASELINE)
     if wallclock:
         problems += compare_wallclock(full, tol=wallclock_tolerance())
     if problems:
@@ -221,8 +237,8 @@ def main(argv=None) -> int:
             print(f"[check_baseline] FAIL: {p}", file=sys.stderr)
         return 1
     gate = " + wall-clock band" if wallclock else ""
-    print(f"[check_baseline] OK: {len(rows)} rows match the baseline"
-          + gate)
+    print(f"[check_baseline] OK: {len(rows)} + {len(paged_rows)} "
+          f"(paged-attention) rows match the baselines" + gate)
     return 0
 
 

@@ -89,6 +89,95 @@ def bench(timed: bool = True, quick: bool = False) -> List[Dict[str, Any]]:
     return rows
 
 
+# nominal serving attention geometry for the paged-attention HBM rows
+# (llama-class: 32 query / 8 KV heads of dim 128); the accounting is
+# per-KV-head-token so only Hk and D enter
+PAGED_ATTN_HK = 8
+PAGED_ATTN_HD = 128
+
+
+def _kv_token_bytes(kv_dtype: str) -> int:
+    """HBM bytes of ONE token's K+V across the nominal KV heads —
+    the shared init_paged_caches-layout formula from
+    benchmarks/roofline.py, so these rows cannot drift from the
+    dry-run gather pricing."""
+    from benchmarks.roofline import kv_token_bytes_per_head
+    return PAGED_ATTN_HK * kv_token_bytes_per_head(PAGED_ATTN_HD,
+                                                   kv_dtype)
+
+
+def paged_attention_rows(timed: bool = False):
+    """Analytic HBM accounting of the paged-attention kernel vs the
+    XLA-gather route (benchmarks/baselines/paged_attention_baseline.csv
+    gates these like the weight-stream columns).
+
+    The XLA route's ``k_pool[ids]`` per online-softmax chunk
+    materializes every gathered KV chunk as a fresh HBM array the scan
+    body then re-reads: per mixed step the logical context is read
+    from the pool (1x), written to the gathered copies (1x), and read
+    back (1x) — 3x the logical KV bytes.  The Pallas kernel DMAs each
+    block pool->VMEM straight off the block table (scalar prefetch):
+    1x, no copy.  ``gather_bytes_saved`` = the 2x avoided round trip —
+    what the mixed_32k_shared dry-run cell prices per device
+    (benchmarks/roofline.py).  Timings (``--exercise``) run a small
+    interpret-mode kernel case and are never baselined.
+    """
+    from repro.configs.base import SHAPES
+    sc = SHAPES["mixed_32k_shared"]
+    slots, s_ctx = sc.global_batch, sc.seq_len
+    rows = []
+    for block_size in (16, 64):
+        for kv_dtype in ("bf16", "int8"):
+            ctx_tokens = slots * s_ctx
+            logical = ctx_tokens * _kv_token_bytes(kv_dtype)
+            rows.append({
+                "case": f"paged_attn_bs{block_size}_{kv_dtype}",
+                "block_size": block_size,
+                "chunk_kv": 1024,
+                "blocks_per_chunk": 1024 // block_size,
+                "context_tokens": ctx_tokens,
+                "kv_bytes_logical": logical,
+                "xla_gather_bytes": 3 * logical,
+                "kernel_gather_bytes": logical,
+                "gather_bytes_saved": 2 * logical,
+                "gather_traffic_ratio": 3.0,
+                "block_table_bytes": slots * (s_ctx // block_size) * 4,
+            })
+    if timed:
+        rows[0].update(_paged_attn_exercise())
+    return rows
+
+
+def _paged_attn_exercise():
+    """Wall-clock one small paged-attention case: the Pallas kernel in
+    interpret mode (exercising the kernel body in CI) vs the jitted
+    XLA-gather route.  Interpret-mode timings are not meaningful as
+    throughput — the point is that the kernel RUNS."""
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import paged_mixed_attention_pallas
+    from repro.nn.attention import mixed_attention
+
+    rng = np.random.default_rng(0)
+    b, h, hk, d, s, bs = 2, 4, 2, 16, 128, 16
+    nblk = s // bs
+    pk = jnp.asarray(rng.normal(size=(b * nblk + 2, bs, hk, d))
+                     .astype(np.float32))
+    pv = jnp.asarray(rng.normal(size=pk.shape).astype(np.float32))
+    tbl = jnp.asarray(rng.permutation(b * nblk + 2)[:b * nblk]
+                      .reshape(b, nblk).astype(np.int32))
+    q = jnp.asarray(rng.normal(size=(b, 4, h, d)).astype(np.float32))
+    offs = jnp.asarray([60, 90], jnp.int32)
+    vlen = offs + 4
+    t_kernel = _time(lambda: paged_mixed_attention_pallas(
+        q, pk, pv, tbl, vlen, offs, chunk_kv=32), iters=2, warmup=1)
+    xla = jax.jit(lambda: mixed_attention(q, pk, pv, vlen, offs,
+                                          chunk_kv=32, block_tables=tbl,
+                                          impl="xla"))
+    t_xla = _time(xla, iters=2, warmup=1)
+    return {"pallas_interpret_us": round(t_kernel, 1),
+            "xla_gather_us": round(t_xla, 1)}
+
+
 def _paged_mixed_row() -> Dict[str, Any]:
     """Analytic accounting of the block-paged unified serving step (the
     mixed_32k_shared dry-run cell), so prefix-reuse token accounting is

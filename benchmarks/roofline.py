@@ -87,6 +87,17 @@ def model_flops(arch: str, shape: Dict[str, Any], kind: str) -> float:
     return 2.0 * n_act * sc.global_batch
 
 
+def kv_token_bytes_per_head(hd: int, kv_dtype: str) -> int:
+    """HBM bytes of ONE token's K+V in one KV head (the
+    init_paged_caches layout; int8 = codes + the bf16 per-(token, head)
+    scale that rides alongside).  THE formula — kernel_bench's
+    paged_attn_* rows import it so the baselines cannot drift from the
+    roofline gather pricing."""
+    if kv_dtype == "int8":
+        return 2 * (hd * 1 + 2)
+    return 2 * hd * 2
+
+
 def _kv_write_bytes(arch: str, tokens: int) -> float:
     """HBM bytes of the per-layer K+V cache writes for ``tokens``
     tokens — what a prefix-cache hit skips (global, pre-sharding)."""
@@ -94,12 +105,7 @@ def _kv_write_bytes(arch: str, tokens: int) -> float:
     cfg = get_config(arch)
     n_attn = cfg.n_periods * sum(1 for s in cfg.layout
                                  if s.mixer == "attn")
-    if cfg.kv_cache_dtype == "int8":
-        # int8 codes + the bf16 per-(token, head) k/v scales that ride
-        # alongside them (init_paged_caches layout)
-        per_head = 2 * (cfg.hd * 1 + 2)
-    else:
-        per_head = 2 * cfg.hd * 2
+    per_head = kv_token_bytes_per_head(cfg.hd, cfg.kv_cache_dtype)
     return float(tokens) * n_attn * cfg.n_kv_heads * per_head
 
 
@@ -153,6 +159,18 @@ def roofline_row(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
                                 row["prefix_hit_tokens"]) / n_dev
         row["kv_write_bytes_saved_per_dev"] = saved
         row["t_memory_shared_s"] = max(t_memory - saved / HBM_BW, 0.0)
+    if "gather_context_tokens" in cell:
+        # paged-attention gather pricing (the kernel_bench paged_attn_*
+        # rows, per-cell): the XLA-gather route re-materializes every
+        # scan chunk's KV in HBM — one copy write plus one copy read on
+        # top of the pool read the memory term already prices — while
+        # the Pallas kernel's in-VMEM block gather adds nothing.  The
+        # t_memory above IS the kernel route's floor; the XLA route
+        # pays the extra round trip.
+        extra = 2.0 * _kv_write_bytes(
+            cell["arch"], cell["gather_context_tokens"]) / n_dev
+        row["gather_bytes_saved_per_dev"] = extra
+        row["t_memory_xla_gather_s"] = t_memory + extra / HBM_BW
     ws = cell.get("weight_stream")
     if ws:
         # fused-kernel weight-stream terms (serve cells): the memory

@@ -126,7 +126,9 @@ def sharded_mixed_attention(q, k_cache, v_cache, cache_len,
 def sharded_paged_mixed_attention(q, k_pool, v_pool, block_tables,
                                   cache_len, mesh: Mesh,
                                   block_axis: str = "data",
-                                  q_offset: Optional[jax.Array] = None):
+                                  q_offset: Optional[jax.Array] = None,
+                                  impl: str = "auto",
+                                  chunk_kv: int = 1024):
     """Mixed-chunk attention against a block-paged KV pool sharded on
     its block axis.
 
@@ -142,12 +144,22 @@ def sharded_paged_mixed_attention(q, k_pool, v_pool, block_tables,
     local-first argsort keeps at most ``min(nblk, nb_loc)`` entries per
     slot (a device cannot own more distinct blocks than its shard
     holds; table rows must not repeat a physical block, which the
-    engine guarantees) — then gathers those blocks and contributes lse
-    partials at their *logical* positions, merged exactly like
+    engine guarantees) — then attends those blocks at their *logical*
+    positions and contributes lse partials, merged exactly like
     ``sharded_mixed_attention``.  Per-device score compute is therefore
     O(min(nblk, nb_loc) * block_size), i.e. 1/n of the logical length
     in the long-context regime where the pool outgrows one device,
     not a replicated full-length pass.
+
+    ``impl`` picks how each device turns its compacted table into
+    partials: ``'pallas'`` feeds it straight to the paged-attention
+    kernel's ``normalize=False`` entry point (``logical_blocks`` =
+    the kept logical indices, ``entry_valid`` = the is-local mask; the
+    block gather happens in-VMEM inside the kernel, ``chunk_kv``
+    positions per flash step); ``'xla'`` gathers with ``ks[g_ids]``
+    and computes one whole-shard ``_local_partial`` (the oracle).
+    ``'auto'`` = pallas on TPU, xla elsewhere — the kernels/ops.py
+    dispatch discipline.
     """
     n = mesh.shape[block_axis]
     nb_global = k_pool.shape[0]
@@ -155,9 +167,10 @@ def sharded_paged_mixed_attention(q, k_pool, v_pool, block_tables,
     nb_loc = nb_global // n
     bs_blk = k_pool.shape[1]
     l_loc = min(block_tables.shape[1], nb_loc)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
 
-    def body(qs, ks, vs, tbl, cl, qo):
-        idx = jax.lax.axis_index(block_axis)
+    def _compact(tbl, idx):
         base = idx * nb_loc
         is_local = (tbl >= base) & (tbl < base + nb_loc)  # (B, nblk)
         # local entries first (stable: logical order preserved), then
@@ -167,6 +180,11 @@ def sharded_paged_mixed_attention(q, k_pool, v_pool, block_tables,
         sel_local = jnp.take_along_axis(is_local, keep, axis=1)
         g_ids = jnp.clip(jnp.take_along_axis(tbl, keep, axis=1) - base,
                          0, nb_loc - 1)
+        return keep, sel_local, g_ids
+
+    def body(qs, ks, vs, tbl, cl, qo):
+        keep, sel_local, g_ids = _compact(tbl, jax.lax.axis_index(
+            block_axis))
         b_ = tbl.shape[0]
         hk, d = ks.shape[2], ks.shape[3]
         kg = ks[g_ids].reshape(b_, l_loc * bs_blk, hk, d)
@@ -179,14 +197,33 @@ def sharded_paged_mixed_attention(q, k_pool, v_pool, block_tables,
             extra_valid=jnp.repeat(sel_local, bs_blk, axis=1))
         return _lse_merge(m, l, o, block_axis, qs.dtype)
 
+    def body_pallas(qs, ks, vs, tbl, cl, qo):
+        from repro.kernels.paged_attention import paged_attention_pallas
+        keep, sel_local, g_ids = _compact(tbl, jax.lax.axis_index(
+            block_axis))
+        ck = min(chunk_kv - chunk_kv % bs_blk or bs_blk,
+                 l_loc * bs_blk)
+        o, m, l = paged_attention_pallas(
+            qs, ks, vs, g_ids, cl,
+            q_offset=jnp.zeros_like(cl) if qo is None else qo,
+            chunk_kv=max(ck, bs_blk), causal=qo is not None,
+            logical_blocks=keep.astype(jnp.int32),
+            entry_valid=sel_local.astype(jnp.int32), normalize=False)
+        return _lse_merge(m, l, o, block_axis, qs.dtype)
+
     in_specs = (P(), P(block_axis), P(block_axis), P(), P(), P())
     args = [q, k_pool, v_pool, block_tables, cache_len,
             jnp.zeros_like(cache_len) if q_offset is None else q_offset]
+    inner = body_pallas if impl == "pallas" else body
     if q_offset is None:
-        fn = lambda qs, ks, vs, tbl, cl, qo: body(qs, ks, vs, tbl, cl,
-                                                  None)
+        fn = lambda qs, ks, vs, tbl, cl, qo: inner(qs, ks, vs, tbl, cl,
+                                                   None)
     else:
-        fn = body
+        fn = inner
+    if impl == "pallas":
+        # pallas_call has no replication rule for shard_map's rep check
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=P(), check_rep=False)(*args)
     return shard_map(fn, mesh=mesh, in_specs=in_specs,
                      out_specs=P())(*args)
 

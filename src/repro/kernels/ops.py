@@ -48,6 +48,21 @@ parity oracle for the fused path (tests assert bit-identical two-phase
 output) and a fallback if a backend dislikes the fused kernels.
 ``weight_stream_stats`` quantifies the HBM weight-traffic win; the
 kernel benchmark and tests consume it.
+
+Public contract
+---------------
+* Production routes: ``impl='auto'`` resolves to 'pallas' on TPU
+  (interpret mode otherwise exercises the same kernel bodies) and
+  'xla' elsewhere; 'xla' is also what distributed/jitted model code
+  lowers under GSPMD.  Oracles: ``impl='ref'`` (dense dequantized
+  matmul) and ``fused=False`` (multi-launch).  The same dispatch
+  discipline governs the paged-attention kernel in nn/attention.py —
+  the whole family is documented in docs/kernels.md.
+* Invariants the tests pin: all impls agree to float tolerance on the
+  contract above; fused == unfused bit-for-bit on the xla route;
+  packed and ``n_max`` compose on every route; ``weight_stream_stats``
+  launch counts are gated against
+  benchmarks/baselines/kernel_bench_baseline.csv in CI.
 """
 from __future__ import annotations
 

@@ -1,0 +1,319 @@
+"""Pallas paged-attention: the block-table KV gather runs *inside* the
+kernel, not in front of it.
+
+The XLA route (``nn/attention._paged_chunked_attention``) gathers
+``chunk_kv / block_size`` physical KV blocks per online-softmax step
+with ``k_pool[ids]`` — XLA materializes every gathered chunk as a fresh
+HBM array that the scan body then re-reads, so each serving step pays
+the logical KV bytes roughly three times (pool read + copy write + copy
+read).  TiM-DNN's thesis is that the gather and the multiply belong in
+the same access: here the per-slot block table is a **scalar-prefetch**
+argument (``pltpu.PrefetchScalarGridSpec``), the BlockSpec index map
+reads it to pick which physical ``(block_size, head_dim)`` block each
+grid step DMAs into VMEM, and the flash recurrence consumes the block
+straight out of VMEM — the pool is read exactly once and no gathered
+copy ever exists in HBM.
+
+Layout
+------
+Grid ``(B, Hk, nc, cb)`` with ``cb = chunk_kv // block_size`` blocks
+per logical chunk and ``nc`` chunks.  Queries are pre-grouped host-side
+to ``(B, Hk, G*Sq, D)`` f32 (pre-scaled by ``D**-0.5``), so one grid
+cell owns all of a KV head's query rows.  Per inner step the index map
+resolves ``tbl[b, c*cb + i]`` and the kernel writes that block's masked
+scores into a ``(G*Sq, chunk_kv)`` VMEM scratch (and its V tile into a
+``(chunk_kv, D)`` scratch); at ``i == cb-1`` the flash update runs over
+the assembled chunk.  Because every reduction (row max, row sum, the
+``p @ V`` contraction) spans exactly the same ``chunk_kv`` positions in
+the same order as the shared scan body in ``nn/attention.
+_online_softmax_scan``, the kernel is **bit-identical** to the XLA
+gather route (asserted exactly in ``tests/test_paged_attention_kernel.
+py``; the XLA route is in turn bit-identical to the contiguous cache).
+
+VMEM per grid cell: scores ``G*Sq * chunk_kv`` f32 + vbuf ``chunk_kv *
+D`` f32 + the ``(G*Sq, D)`` accumulator — ~0.8 MB at the serving shape
+(G*Sq = 64, chunk_kv = 1024, D = 128).  The block table (and the
+``kv_valid_len`` / ``q_offset`` vectors) live in SMEM via scalar
+prefetch.
+
+Variants
+--------
+* ``paged_mixed_attention_pallas`` — S >= 1 new tokens per slot at
+  per-slot ``q_offset`` (the serving engine's unified mixed step).
+* ``paged_decode_attention_pallas`` — the S == 1 decode special case;
+  skips the causal term entirely (the last token's causality is implied
+  by ``kv_valid_len``, exactly the classic-decode contract).
+* int8 KV: pass ``k_scale``/``v_scale`` pools — codes and their
+  per-(token, head) scales are gathered by the same index map and
+  dequantized in-VMEM (``codes * scale -> compute dtype``), matching
+  ``nn/attention.kv_dequantize`` bit-for-bit.
+* ``normalize=False`` returns un-normalized ``(o_acc, m, l)`` flash
+  partials instead of the softmax output — what ``distrib/decode_attn.
+  sharded_paged_mixed_attention`` feeds its cross-device log-sum-exp
+  merge.  With it, ``logical_blocks``/``entry_valid`` describe a
+  COMPACTED table (each entry names its logical block explicitly and
+  may be invalid) — the per-device table-compaction path.
+
+``interpret=None`` auto-selects interpret mode off-TPU, the same
+discipline as ``kernels/ops.py``: CI validates the kernel body through
+the interpreter, TPUs run it natively.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import compiler_params
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(*args, nc: int, cb: int, bs: int, sq: int,
+                       gsq: int, causal: bool, quant: bool,
+                       compacted: bool, normalize: bool, dequant_dtype):
+    tbl_ref, lblk_ref, sel_ref, vlen_ref, qoff_ref = args[:5]
+    idx = 5
+    q_ref, k_ref, v_ref = args[idx:idx + 3]
+    idx += 3
+    if quant:
+        ks_ref, vs_ref = args[idx:idx + 2]
+        idx += 2
+    if normalize:
+        o_ref = args[idx]
+        idx += 1
+    else:
+        o_ref, mo_ref, lo_ref = args[idx:idx + 3]
+        idx += 3
+    scores_ref, vbuf_ref, m_ref, l_ref, acc_ref = args[idx:idx + 5]
+
+    b = pl.program_id(0)
+    c = pl.program_id(2)
+    i = pl.program_id(3)
+
+    @pl.when((c == 0) & (i == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k = k_ref[0, :, 0, :]                                # (bs, d)
+    v = v_ref[0, :, 0, :]
+    if quant:
+        # exactly nn/attention.kv_dequantize: codes*scale in f32, cast
+        # to the compute dtype, THEN to f32 for the dot — the bf16
+        # round-trip is part of the contract
+        k = (k.astype(jnp.float32)
+             * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+             ).astype(dequant_dtype)
+        v = (v.astype(jnp.float32)
+             * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+             ).astype(dequant_dtype)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    q = q_ref[0, 0]                                      # (gsq, d) f32
+    s = jax.lax.dot_general(q, kf, (((1,), (1,)), ((), ())))  # (gsq, bs)
+
+    e = c * cb + i                                       # table entry
+    lb = lblk_ref[b, e] if compacted else e              # logical block
+    kpos = lb * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    if causal:
+        # query row r is (g = r // sq, q = r % sq); position qoff + q
+        rq = jax.lax.broadcasted_iota(jnp.int32, (gsq, 1), 0) % sq
+        qpos = qoff_ref[b] + rq                          # (gsq, 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    valid = kpos < vlen_ref[b]                           # (1, bs)
+    if compacted:
+        valid = valid & (sel_ref[b, e] > 0)
+    s = jnp.where(valid, s, NEG_INF)
+
+    scores_ref[:, pl.dslice(i * bs, bs)] = s
+    vbuf_ref[pl.dslice(i * bs, bs), :] = vf
+
+    @pl.when(i == cb - 1)
+    def _flash():
+        sfull = scores_ref[...]                          # (gsq, ck)
+        m_prev = m_ref[...]                              # (gsq, 1)
+        mj = jnp.maximum(m_prev, jnp.max(sfull, axis=-1, keepdims=True))
+        m_safe = jnp.maximum(mj, -1e29)
+        p = jnp.exp(sfull - m_safe)
+        corr = jnp.exp(jnp.minimum(m_prev - m_safe, 0.0))
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1,
+                                                 keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, vbuf_ref[...], (((1,), (0,)), ((), ())))
+        m_ref[...] = mj
+
+    @pl.when((c == nc - 1) & (i == cb - 1))
+    def _done():
+        if normalize:
+            o_ref[0, 0] = (acc_ref[...] /
+                           jnp.maximum(l_ref[...], 1e-30)
+                           ).astype(o_ref.dtype)
+        else:
+            o_ref[0, 0] = acc_ref[...]
+            mo_ref[0, 0] = m_ref[...]
+            lo_ref[0, 0] = l_ref[...]
+
+
+def paged_attention_pallas(
+        q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+        block_tables: jax.Array, kv_valid_len: jax.Array,
+        *, q_offset: Optional[Union[int, jax.Array]] = None,
+        chunk_kv: int = 1024,
+        k_scale: Optional[jax.Array] = None,
+        v_scale: Optional[jax.Array] = None,
+        causal: bool = True,
+        logical_blocks: Optional[jax.Array] = None,
+        entry_valid: Optional[jax.Array] = None,
+        normalize: bool = True,
+        interpret: Optional[bool] = None):
+    """In-kernel block-table paged attention (see module docstring).
+
+    q: (B, Sq, H, D); k_pool/v_pool: (num_blocks, block_size, Hk, D)
+    (+ optional (num_blocks, block_size, Hk) scales for int8 KV);
+    block_tables: (B, nblk) int32 (out-of-range entries are clamped and
+    must be masked by ``kv_valid_len``/``entry_valid``); kv_valid_len:
+    (B,) valid *logical* lengths.  ``logical_blocks``/``entry_valid``
+    (both (B, nblk)) mark a compacted table whose entry j covers
+    logical block ``logical_blocks[:, j]`` (invalid entries contribute
+    nothing) — without them entry j IS logical block j.
+
+    Returns (B, Sq, H, D), or un-normalized flash partials
+    (o (B,Hk,G,Sq,D) f32, m (B,Hk,G,Sq) f32, l (B,Hk,G,Sq) f32) when
+    ``normalize=False``.
+    """
+    b, sq, h, d = q.shape
+    nb, bs, hk = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    assert h % hk == 0, (h, hk)
+    g = h // hk
+    gsq = g * sq
+    quant = k_scale is not None
+    compacted = logical_blocks is not None
+    assert (entry_valid is not None) == compacted
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    assert chunk_kv % bs == 0, (chunk_kv, bs)
+    cb = chunk_kv // bs
+    nblk = block_tables.shape[1]
+    pad = (-nblk) % cb
+    tbl = jnp.clip(block_tables, 0, nb - 1).astype(jnp.int32)
+    if compacted:
+        lblk = logical_blocks.astype(jnp.int32)
+        sel = entry_valid.astype(jnp.int32)
+    else:
+        lblk = jnp.zeros((1, 1), jnp.int32)   # unused (entry == block)
+        sel = jnp.zeros((1, 1), jnp.int32)
+    if pad:
+        tbl = jnp.pad(tbl, ((0, 0), (0, pad)))
+        if compacted:  # padded entries masked via sel == 0
+            lblk = jnp.pad(lblk, ((0, 0), (0, pad)))
+            sel = jnp.pad(sel, ((0, 0), (0, pad)))
+        # non-compacted padding is masked positionally: entry e covers
+        # logical positions >= nblk*bs >= kv_valid_len
+    nc = (nblk + pad) // cb
+
+    # exactly the oracle's query prep: group, cast f32, THEN pre-scale
+    qg = q.reshape(b, sq, hk, g, d).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(b, hk, gsq, d).astype(jnp.float32) * (d ** -0.5)
+    vlen = jnp.asarray(kv_valid_len, jnp.int32).reshape(b)
+    qoff = jnp.broadcast_to(
+        jnp.asarray(0 if q_offset is None else q_offset, jnp.int32),
+        (b,))
+
+    def _tbl_idx(bb, hh, c, i, tbl_r, *_):
+        return (tbl_r[bb, c * cb + i], 0, hh, 0)
+
+    def _scale_idx(bb, hh, c, i, tbl_r, *_):
+        return (tbl_r[bb, c * cb + i], 0, hh)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, gsq, d), lambda bb, hh, c, i, *_: (bb, hh, 0, 0)),
+        pl.BlockSpec((1, bs, 1, d), _tbl_idx),
+        pl.BlockSpec((1, bs, 1, d), _tbl_idx),
+    ]
+    inputs = [qg, k_pool, v_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, 1), _scale_idx),
+                     pl.BlockSpec((1, bs, 1), _scale_idx)]
+        inputs += [k_scale, v_scale]
+
+    o_spec = pl.BlockSpec((1, 1, gsq, d), lambda bb, hh, c, i, *_:
+                          (bb, hh, 0, 0))
+    if normalize:
+        out_shape = jax.ShapeDtypeStruct((b, hk, gsq, d), q.dtype)
+        out_specs = o_spec
+    else:
+        ml_spec = pl.BlockSpec((1, 1, gsq, 1), lambda bb, hh, c, i, *_:
+                               (bb, hh, 0, 0))
+        out_shape = (jax.ShapeDtypeStruct((b, hk, gsq, d), jnp.float32),
+                     jax.ShapeDtypeStruct((b, hk, gsq, 1), jnp.float32),
+                     jax.ShapeDtypeStruct((b, hk, gsq, 1), jnp.float32))
+        out_specs = (o_spec, ml_spec, ml_spec)
+
+    kernel = functools.partial(
+        _paged_attn_kernel, nc=nc, cb=cb, bs=bs, sq=sq, gsq=gsq,
+        causal=causal, quant=quant, compacted=compacted,
+        normalize=normalize, dequant_dtype=q.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(b, hk, nc, cb),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((gsq, cb * bs), jnp.float32),   # assembled scores
+            pltpu.VMEM((cb * bs, d), jnp.float32),     # assembled V chunk
+            pltpu.VMEM((gsq, 1), jnp.float32),         # running max
+            pltpu.VMEM((gsq, 1), jnp.float32),         # running sum
+            pltpu.VMEM((gsq, d), jnp.float32),         # accumulator
+        ])
+
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=compiler_params(
+            ("parallel", "parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(tbl, lblk, sel, vlen, qoff, *inputs)
+
+    if normalize:
+        o = outs.reshape(b, hk, g, sq, d).transpose(0, 3, 1, 2, 4)
+        return o.reshape(b, sq, h, d)
+    o, m, l = outs
+    return (o.reshape(b, hk, g, sq, d),
+            m.reshape(b, hk, g, sq),
+            l.reshape(b, hk, g, sq))
+
+
+def paged_mixed_attention_pallas(q, k_pool, v_pool, block_tables,
+                                 kv_valid_len, q_offset, *,
+                                 chunk_kv: int = 1024, k_scale=None,
+                                 v_scale=None, interpret=None):
+    """S >= 1 tokens per slot at per-slot offsets — the serving
+    engine's unified mixed prefill/decode step, in-kernel gather."""
+    return paged_attention_pallas(
+        q, k_pool, v_pool, block_tables, kv_valid_len,
+        q_offset=q_offset, chunk_kv=chunk_kv, k_scale=k_scale,
+        v_scale=v_scale, causal=True, interpret=interpret)
+
+
+def paged_decode_attention_pallas(q, k_pool, v_pool, block_tables,
+                                  kv_valid_len, *, chunk_kv: int = 1024,
+                                  k_scale=None, v_scale=None,
+                                  interpret=None):
+    """One-token decode (Sq == 1): validity alone is the mask — the
+    single query sits at position ``kv_valid_len - 1``, so causality is
+    implied and the causal term is compiled out entirely."""
+    assert q.shape[1] == 1, q.shape
+    return paged_attention_pallas(
+        q, k_pool, v_pool, block_tables, kv_valid_len,
+        q_offset=None, chunk_kv=chunk_kv, k_scale=k_scale,
+        v_scale=v_scale, causal=False, interpret=interpret)

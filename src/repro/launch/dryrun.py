@@ -382,6 +382,15 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh,
                 result["num_blocks"] = num_blocks
                 result["prefix_hit_rate"] = shape.hit_rate
                 result["prefix_hit_tokens"] = hit
+                # in-kernel gather pricing: each mixed step attends the
+                # full logical context per slot; the XLA-gather route
+                # round-trips that KV through HBM copies (write + read
+                # on top of the pool read) while the Pallas kernel DMAs
+                # blocks pool->VMEM directly.  benchmarks/roofline.py
+                # turns this into gather_bytes_saved_per_dev /
+                # t_memory_xla_gather_s for the cell.
+                result["gather_context_tokens"] = \
+                    shape.global_batch * shape.seq_len
                 caches = paged_cache_sds(cfg, shape.global_batch,
                                          num_blocks, shape.block_size)
                 c_ps = shd.tree_pspecs(

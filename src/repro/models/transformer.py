@@ -111,9 +111,7 @@ def _kv_quantize(t: jax.Array):
     return codes, scale.astype(jnp.bfloat16)
 
 
-def _kv_dequantize(codes: jax.Array, scale: jax.Array, dtype):
-    return (codes.astype(jnp.float32)
-            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+_kv_dequantize = attn.kv_dequantize
 
 
 def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
@@ -201,6 +199,7 @@ def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
                         pool.dtype), mode="drop")
                 return flat.reshape(pool.shape)
 
+            scale_kw = {}
             if quant:
                 kq, ks = _kv_quantize(k)
                 vq, vs = _kv_quantize(v)
@@ -210,10 +209,18 @@ def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
                     "k_scale": scatter(cache["k_scale"], ks),
                     "v_scale": scatter(cache["v_scale"], vs),
                 }
-                kd = _kv_dequantize(new_cache["k"], new_cache["k_scale"],
-                                    cd)
-                vd = _kv_dequantize(new_cache["v"], new_cache["v_scale"],
-                                    cd)
+                if block_tables is not None:
+                    # paged: the int8 codes and their scales page
+                    # through the same tables; attention dequantizes
+                    # gathered chunks (in-VMEM on the Pallas route)
+                    kd, vd = new_cache["k"], new_cache["v"]
+                    scale_kw = dict(k_scale=new_cache["k_scale"],
+                                    v_scale=new_cache["v_scale"])
+                else:
+                    kd = _kv_dequantize(new_cache["k"],
+                                        new_cache["k_scale"], cd)
+                    vd = _kv_dequantize(new_cache["v"],
+                                        new_cache["v_scale"], cd)
             else:
                 new_cache = {"k": scatter(cache["k"], k),
                              "v": scatter(cache["v"], v)}
@@ -221,7 +228,8 @@ def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
             o = attn.mixed_attention(q, kd, vd, cache_len + nn_,
                                      cache_len,
                                      chunk_kv=cfg.attn_chunk_kv,
-                                     block_tables=block_tables)
+                                     block_tables=block_tables,
+                                     **scale_kw)
 
     o = o.reshape(b, s, h * hd)
     o = ternary_dense_apply(p["o"], o, pol, cd)

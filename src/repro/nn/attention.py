@@ -27,6 +27,23 @@ positions, causality, and validity are exactly the contiguous path's
 (same chunk boundaries => bit-identical f32 reductions), so paged and
 contiguous attention agree bit-for-bit when ``chunk_kv`` is a multiple
 of ``block_size``.
+
+Two implementations serve the paged scan (``impl=``):
+
+  * ``'pallas'`` — the in-kernel gather (kernels/paged_attention.py):
+    the block table is a scalar-prefetch argument and each physical
+    block DMAs straight into VMEM inside the flash recurrence; the
+    pool is read once and no gathered copy exists in HBM.
+  * ``'xla'`` — ``k_pool[ids]`` per scan chunk; XLA materializes every
+    gathered chunk in HBM before the scan body reads it.  This is the
+    parity ORACLE (bit-identical to the contiguous cache by shared-
+    scan construction) and the production path off-TPU.
+
+``'auto'`` (default) resolves to 'pallas' on TPU and 'xla' elsewhere —
+the same dispatch discipline as kernels/ops.py.  With int8 KV the
+per-(token, head) scales page alongside the codes (``k_scale`` /
+``v_scale`` pools); both routes dequantize gathered chunks with
+``kv_dequantize``.
 """
 from __future__ import annotations
 
@@ -50,6 +67,16 @@ def _query_positions(q_offset, sq: int) -> jax.Array:
     if off.ndim == 0:
         return (jnp.arange(sq) + off)[None, :]
     return off[:, None] + jnp.arange(sq)[None, :]
+
+
+def kv_dequantize(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """int8 KV codes (..., Hk, D) x per-(token, head) scales (..., Hk)
+    -> values in the compute dtype.  THE dequantization everywhere a
+    quantized cache is read (contiguous, paged-XLA, and in-VMEM inside
+    the Pallas paged kernel) — the f32 multiply followed by the compute-
+    dtype cast is part of the bit-parity contract."""
+    return (codes.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
 
 
 def paged_view(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
@@ -95,18 +122,27 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                       chunk_kv: int = 1024,
                       q_offset: Union[int, jax.Array] = 0,
                       kv_valid_len: Optional[jax.Array] = None,
-                      block_tables: Optional[jax.Array] = None) -> jax.Array:
+                      block_tables: Optional[jax.Array] = None,
+                      k_scale: Optional[jax.Array] = None,
+                      v_scale: Optional[jax.Array] = None,
+                      impl: str = "auto") -> jax.Array:
     """Online-softmax attention, O(Sq * chunk_kv) score memory.
 
     Supports GQA, causality across an arbitrary (scalar or per-batch)
     q_offset (for chunked prefill), and ragged KV validity (for batched
     serving).  With ``block_tables``, k/v are a global block pool
     (num_blocks, block_size, Hk, D) and each slot's logical KV sequence
-    is gathered block-by-block inside the scan (see module docstring).
+    is gathered block-by-block inside the scan (see module docstring;
+    ``impl`` routes the scan to the Pallas in-kernel gather or the XLA
+    gather oracle; int8 pools carry ``k_scale``/``v_scale``).
     """
     if block_tables is not None:
         return _paged_chunked_attention(q, k, v, block_tables, causal,
-                                        chunk_kv, q_offset, kv_valid_len)
+                                        chunk_kv, q_offset, kv_valid_len,
+                                        k_scale, v_scale, impl)
+    assert k_scale is None and v_scale is None, \
+        "KV scales only page with block_tables (contiguous caches " \
+        "dequantize before attention)"
     b, sq, h, d = q.shape
     sk, hk = k.shape[1], k.shape[2]
     if sk <= chunk_kv:
@@ -178,14 +214,20 @@ def _paged_chunked_attention(q: jax.Array, k_pool: jax.Array,
                              v_pool: jax.Array, block_tables: jax.Array,
                              causal: bool, chunk_kv: int,
                              q_offset: Union[int, jax.Array],
-                             kv_valid_len: Optional[jax.Array]
-                             ) -> jax.Array:
+                             kv_valid_len: Optional[jax.Array],
+                             k_scale: Optional[jax.Array] = None,
+                             v_scale: Optional[jax.Array] = None,
+                             impl: str = "auto") -> jax.Array:
     """Online-softmax scan over a block-paged KV pool.
 
-    Chunk c gathers physical blocks ``block_tables[:, c*cb:(c+1)*cb]``
-    (cb = chunk_kv // block_size) and attends them at their *logical*
+    Chunk c covers physical blocks ``block_tables[:, c*cb:(c+1)*cb]``
+    (cb = chunk_kv // block_size) attended at their *logical*
     positions — identical masks and reduction order to the contiguous
-    scan, so the two paths match bit-for-bit.
+    scan, so the XLA route matches the contiguous path bit-for-bit.
+    ``impl='pallas'`` gathers the blocks in-kernel instead (see module
+    docstring); ``'auto'`` picks it on TPU.  Caches small enough for a
+    single chunk skip the scan entirely (full_attention on the gathered
+    view) on every impl.
     """
     b, sq, h, d = q.shape
     nb, bs_blk, hk = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
@@ -195,15 +237,29 @@ def _paged_chunked_attention(q: jax.Array, k_pool: jax.Array,
     # physical block — validity is load-bearing, not optional
     assert kv_valid_len is not None, \
         "paged attention requires kv_valid_len"
+    quant = k_scale is not None
     if nblk * bs_blk <= chunk_kv:
-        return full_attention(q, paged_view(k_pool, block_tables),
-                              paged_view(v_pool, block_tables),
-                              causal, q_offset, kv_valid_len)
+        kg, vg = paged_view(k_pool, block_tables), \
+            paged_view(v_pool, block_tables)
+        if quant:
+            kg = kv_dequantize(kg, paged_view(k_scale, block_tables),
+                               q.dtype)
+            vg = kv_dequantize(vg, paged_view(v_scale, block_tables),
+                               q.dtype)
+        return full_attention(q, kg, vg, causal, q_offset, kv_valid_len)
 
     # bit-exact parity with the contiguous scan requires identical
     # chunk boundaries: the scan chunk must hold a whole number of
     # blocks (pick a block_size dividing attn_chunk_kv)
     assert chunk_kv % bs_blk == 0, (chunk_kv, bs_blk)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        from repro.kernels.paged_attention import paged_attention_pallas
+        return paged_attention_pallas(
+            q, k_pool, v_pool, block_tables, kv_valid_len,
+            q_offset=q_offset, chunk_kv=chunk_kv, k_scale=k_scale,
+            v_scale=v_scale, causal=causal)
     cb = chunk_kv // bs_blk
     ck = cb * bs_blk
     pad_blk = (-nblk) % cb
@@ -218,8 +274,14 @@ def _paged_chunked_attention(q: jax.Array, k_pool: jax.Array,
     def load_chunk(c):
         ids = jax.lax.dynamic_index_in_dim(tc, c, 1, keepdims=False)
         ids = jnp.clip(ids, 0, nb - 1)                 # ids: (b, cb)
-        return (k_pool[ids].reshape(b, ck, hk, d),
-                v_pool[ids].reshape(b, ck, hk, d))
+        kj = k_pool[ids].reshape(b, ck, hk, d)
+        vj = v_pool[ids].reshape(b, ck, hk, d)
+        if quant:
+            kj = kv_dequantize(kj, k_scale[ids].reshape(b, ck, hk),
+                               q.dtype)
+            vj = kv_dequantize(vj, v_scale[ids].reshape(b, ck, hk),
+                               q.dtype)
+        return kj, vj
 
     return _online_softmax_scan(qg, qpos, causal, kv_valid_len, nc, ck,
                                 load_chunk, q.dtype)
@@ -239,7 +301,10 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 def mixed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                     kv_valid_len: jax.Array, q_offset: jax.Array,
                     chunk_kv: int = 1024,
-                    block_tables: Optional[jax.Array] = None) -> jax.Array:
+                    block_tables: Optional[jax.Array] = None,
+                    k_scale: Optional[jax.Array] = None,
+                    v_scale: Optional[jax.Array] = None,
+                    impl: str = "auto") -> jax.Array:
     """S-token chunk per slot against a (B, S_max, Hk, D) KV cache.
 
     The serving engine's unified prefill/decode step: slot b's S queries
@@ -254,11 +319,15 @@ def mixed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     With ``block_tables`` the cache is a global (num_blocks, block_size,
     Hk, D) pool and slot b's logical positions resolve through its table
     row — the block-paged serving path (cross-request prefix sharing).
+    ``impl='auto'`` routes the paged scan to the Pallas in-kernel
+    gather on TPU and the XLA-gather oracle elsewhere; int8 pools pass
+    their paged ``k_scale``/``v_scale``.
     """
     return chunked_attention(q, k_cache, v_cache, causal=True,
                              chunk_kv=chunk_kv, q_offset=q_offset,
                              kv_valid_len=kv_valid_len,
-                             block_tables=block_tables)
+                             block_tables=block_tables,
+                             k_scale=k_scale, v_scale=v_scale, impl=impl)
 
 
 def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -34,6 +34,24 @@ Lifecycle of a block::
 Eviction is oldest-release-first among cached blocks (plain free blocks
 are handed out before any cached block is sacrificed).  Blocks with a
 live reference are never evicted.
+
+Public contract / invariants
+----------------------------
+* ``allocate``/``try_allocate`` return a block with refcount exactly 1
+  (exclusively owned, writable); ``try_allocate`` returns None instead
+  of raising when every block holds a live reference — the signal the
+  serving engine's preemption policy acts on (undersized pools preempt
+  a slot rather than fail; see docs/serving.md §preemption).
+* refcount[bid] == number of live references (slot-table entries plus
+  transient admission holds); a block is *written* only while its
+  refcount is 1.
+* ``hash_to_block`` and ``block_hash`` are mutually consistent
+  (``check()`` asserts it), a hash maps to at most one block, and a
+  block's hash survives decref-to-0 (stays matchable) until the block
+  is recycled by ``allocate``.
+* ``blocks_in_use + len(free-or-cached) == num_blocks`` at all times;
+  release-queue entries staled by a ``lookup`` revival are skipped via
+  per-block release generations, never honored out of order.
 """
 from __future__ import annotations
 
@@ -94,24 +112,34 @@ class BlockPool:
                 return bid
         return None
 
-    def allocate(self) -> int:
-        """Hand out a writable block (refcount 1), evicting the oldest-
-        released cached block only if no plain-free block remains."""
+    def try_allocate(self) -> Optional[int]:
+        """``allocate`` that returns None on exhaustion — every block
+        holds a live reference, nothing (cached included) is evictable.
+        The engine turns None into a preemption instead of an error."""
         bid = self._pop_free(self._free_clean)
         if bid is None:
             bid = self._pop_free(self._free_cached)
         if bid is None:
-            raise RuntimeError(
-                f"block pool exhausted: all {self.num_blocks} blocks "
-                f"hold a live reference (size the pool > slots * "
-                f"ceil(max_len / block_size): a full batch plus one "
-                f"transient copy-on-write block)")
+            return None
         h = self.block_hash[bid]
         if h is not None:                     # evict cached content
             del self.hash_to_block[h]
             self.block_hash[bid] = None
             self.evictions += 1
         self.refcount[bid] = 1
+        return bid
+
+    def allocate(self) -> int:
+        """Hand out a writable block (refcount 1), evicting the oldest-
+        released cached block only if no plain-free block remains."""
+        bid = self.try_allocate()
+        if bid is None:
+            raise RuntimeError(
+                f"block pool exhausted: all {self.num_blocks} blocks "
+                f"hold a live reference (size the pool > slots * "
+                f"ceil(max_len / block_size) — a full batch plus one "
+                f"transient copy-on-write block — or serve with "
+                f"preemption enabled)")
         return bid
 
     def incref(self, bid: int) -> None:
@@ -159,6 +187,12 @@ class BlockPool:
     @property
     def blocks_in_use(self) -> int:
         return int((self.refcount > 0).sum())
+
+    @property
+    def blocks_free(self) -> int:
+        """Blocks with no live reference — allocatable without
+        preempting anyone (cached evictables included)."""
+        return self.num_blocks - self.blocks_in_use
 
     @property
     def blocks_cached(self) -> int:

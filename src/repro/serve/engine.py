@@ -45,10 +45,20 @@ amortization discipline applied to activations: one KV write serves
 every request that shares the prefix, exactly as one TiM weight load
 serves the whole ternary VMM.
 
+Undersized pools are survivable (docs/serving.md §preemption): when
+``BlockPool.try_allocate`` comes up empty the scheduler preempts the
+youngest prefilling slot (decode requesters may fall back to decoding
+victims), swapping its exclusively-owned blocks to a host-side numpy
+arena or dropping them for recompute — whichever the roofline
+crossover estimates cheaper — and resumes the request from the queue
+front with bit-identical output (chunked recompute of the same token
+history is exact; swap restores exact bytes).
+
 All scheduler state (slot occupancy, lengths, prompt cursors, block
 tables, refcounts, hashes) lives host-side in numpy: a step issues NO
 device->host sync beyond the one explicit fetch of the sampled tokens
-(see ``d2h_fetches``).
+(see ``d2h_fetches``; swap d2h fetches are counted separately in
+``swap_d2h_fetches``).
 
 This is what the paper's throughput-per-watt story needs above the
 fused Pallas kernels: decode steps are weight-stream-bound, so the
@@ -292,6 +302,50 @@ def copy_kv_block(caches, src, dst):
 
 _copy_kv_block_jit = jax.jit(copy_kv_block, donate_argnums=(0,))
 
+
+def fetch_kv_blocks(caches, bids: np.ndarray) -> Dict[str, Any]:
+    """Device -> host copy of the given physical KV blocks (every
+    layer-period, K/V and any scales): the swap-OUT half of preemption.
+    Returns a nested dict mirroring the cache pytree whose KV leaves
+    are (periods, len(bids), block_size, ...) numpy arrays."""
+    idx = jnp.asarray(bids, jnp.int32)
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: (np.asarray(v[:, idx])
+                        if k in ("k", "v", "k_scale", "v_scale")
+                        and hasattr(v, "at") else walk(v))
+                    for k, v in tree.items() if isinstance(v, dict)
+                    or k in ("k", "v", "k_scale", "v_scale")}
+        return tree
+    return walk(caches)
+
+
+def write_kv_block(caches, dst, values):
+    """Host -> device restore of ONE physical KV block from a
+    ``fetch_kv_blocks``-shaped values tree (sliced to one block): the
+    swap-IN half.  Jitted at module scope with donation
+    (``_write_kv_block_jit``) so restores are in-place on device."""
+    def walk(tree, vals):
+        if isinstance(tree, dict):
+            return {k: (v.at[:, dst].set(vals[k].astype(v.dtype))
+                        if k in ("k", "v", "k_scale", "v_scale")
+                        and hasattr(v, "at") else walk(v, vals.get(k, {})))
+                    for k, v in tree.items()}
+        return tree
+    return walk(caches, values)
+
+
+_write_kv_block_jit = jax.jit(write_kv_block, donate_argnums=(0,))
+
+# Swap-vs-recompute crossover constants (the roofline estimate; see
+# benchmarks/roofline.py for the chip model).  Recompute replays the
+# dropped tokens through the model at PEAK_FLOPS; swap round-trips the
+# blocks' KV bytes over the host link.  Laptop-honest defaults: 197
+# TFLOP/s bf16 and a 16 GB/s PCIe-class host link.
+PEAK_FLOPS = 197e12
+HOST_LINK_BW = 16e9
+
 # row-wise update of the device-resident block-table mirror (module
 # scope: one compile per table shape, shared across engines)
 _set_table_row_jit = jax.jit(lambda t, i, r: t.at[i].set(r),
@@ -358,6 +412,16 @@ class ServeEngine:
     ``submit`` with a ValueError, ``'truncate'`` keeps the most recent
     ``max_len`` tokens.
 
+    ``preempt`` picks the resume policy for pools smaller than the
+    full-batch floor, where allocation can fail: ``'swap'`` round-trips
+    the victim's owned blocks through a host arena (bit-identical
+    restore), ``'recompute'`` replays the token history (bit-identical
+    by the chunked-parity guarantee), ``'auto'`` chooses per victim by
+    the roofline crossover.  Victims are the youngest prefilling slots
+    first; preempted requests resume from the queue front and always
+    complete (tests/test_preemption.py and the small-pool property
+    profile).  Recurrent/media stacks always recompute.
+
     Scheduler state is host-side numpy; the only device->host transfer
     per step is the explicit fetch of the sampled tokens
     (``d2h_fetches`` counts them, tests pin it to one per step).
@@ -368,9 +432,10 @@ class ServeEngine:
                  oversize: str = "error", chunk: int = 16,
                  token_budget: Optional[int] = None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 prefix_reuse: Any = "auto"):
+                 prefix_reuse: Any = "auto", preempt: str = "auto"):
         assert oversize in ("error", "truncate"), oversize
         assert chunk >= 1, chunk
+        assert preempt in ("auto", "swap", "recompute"), preempt
         self.params = params
         self.cfg = cfg
         self.slots = batch_slots
@@ -394,12 +459,19 @@ class ServeEngine:
             # little churn before eviction
             num_blocks = default_num_blocks(batch_slots, max_len,
                                             self.block_size)
-        # + 1: a whole-prompt prefix hit transiently holds all of its
-        # hit blocks PLUS the copy-on-write allocation before releasing
-        # the re-owned source, so exact capacity can raise mid-admission
-        assert num_blocks >= batch_slots * self.max_blocks + 1, (
-            "pool must exceed slots * ceil(max_len / block_size): a "
-            "full batch plus one transient copy-on-write block")
+        # Sizing regimes: at the default sizing (>= a full batch plus
+        # one transient copy-on-write block per the PR-4 floor)
+        # allocation can never fail.  SMALLER pools are now survivable
+        # via preemption — the hard floor is one full sequence plus a
+        # spare block, which guarantees a lone active slot always
+        # completes (so preemption always converges; docs/serving.md
+        # §preemption).
+        assert num_blocks >= self.max_blocks + 1, (
+            "pool must hold at least ceil(max_len / block_size) + 1 "
+            "blocks: one full sequence plus a spare — below that even "
+            "a single request cannot complete", num_blocks,
+            self.max_blocks)
+        self.preemptable = num_blocks < batch_slots * self.max_blocks + 1
         assert cfg.attn_chunk_kv % self.block_size == 0, (
             "block_size must divide attn_chunk_kv — paged attention "
             "chunks the scan in whole blocks, and bit-exact parity "
@@ -417,6 +489,19 @@ class ServeEngine:
                 "make token-only chain hashes unsound — construct with "
                 "prefix_reuse='auto' (or False) for this architecture")
         self.prefix_reuse = bool(prefix_reuse)
+        # swap restores KV blocks only: recurrent SSM/conv state cannot
+        # be swapped at a mid-history cut (a partial resume would leave
+        # state ahead of the restored cache), and media re-uploads are
+        # already admission work — such stacks always recompute
+        swap_sound = (all(s.mixer == "attn" for s in cfg.layout)
+                      and not cfg.n_media_tokens)
+        if preempt == "swap" and not swap_sound:
+            raise ValueError(
+                "preempt='swap' requires a pure-attention stack "
+                "without media: recurrent SSM/conv state cannot be "
+                "restored at a partial-coverage resume point — use "
+                "preempt='auto' (or 'recompute') for this architecture")
+        self.preempt = preempt if swap_sound else "recompute"
         self.pool = BlockPool(num_blocks, self.block_size)
 
         self.caches = tfm.init_paged_caches(cfg, batch_slots, num_blocks,
@@ -442,6 +527,32 @@ class ServeEngine:
         self.prefix_hit_tokens = 0
         self.scheduled_prefill_tokens = 0
         self.scheduled_tokens = 0
+        # preemption/swap state: admission order (victim choice is
+        # youngest first), the host-side swap arena (uid -> saved KV
+        # blocks + resume prompt), and the per-slot first-sample
+        # suppression flag for resumed-mid-decode refills
+        self._admit_seq = 0
+        self.slot_seq = np.zeros((batch_slots,), np.int64)
+        self._resume: Dict[int, Dict[str, Any]] = {}
+        self._skip_sample = np.zeros((batch_slots,), bool)
+        self.preemptions = 0
+        self.swapped_out_blocks = 0
+        self.swapped_in_blocks = 0
+        self.swapped_in_tokens = 0
+        self.recompute_tokens = 0
+        self.admitted_prompt_tokens = 0
+        self.swap_d2h_fetches = 0
+        # roofline crossover inputs: ~2*N FLOPs per recomputed token vs
+        # a host-link round trip of the blocks' KV bytes (total, not
+        # MoE-active, params — conservative toward swapping)
+        self._n_params = sum(
+            int(np.prod(l.shape)) for l in
+            jax.tree_util.tree_leaves(params) if hasattr(l, "shape"))
+        kv_bytes = sum(
+            l.size * l.dtype.itemsize for l in
+            jax.tree_util.tree_leaves(self.caches) if l.ndim >= 2
+            and l.shape[1] == num_blocks)
+        self._block_bytes = kv_bytes / max(num_blocks, 1)
         self._last_slot_map: Optional[np.ndarray] = None
         # device mirror of the block tables, updated ROW-wise when a
         # slot's table changes (admission / block allocation / release)
@@ -470,6 +581,7 @@ class ServeEngine:
         self._step = jax.jit(_counted, donate_argnums=(2,))
         self._copy_step = _copy_kv_block_jit
         self._set_table_row = _set_table_row_jit
+        self._write_block = _write_kv_block_jit
 
     def submit(self, req: Request):
         plen = len(req.prompt)
@@ -563,8 +675,12 @@ class ServeEngine:
         The copy happens BEFORE this slot's first write — sharing the
         block in place would let the newcomer's writes corrupt the
         donor's later reads (the regression test in
-        tests/test_prefix_reuse.py)."""
-        dst = self.pool.allocate()
+        tests/test_prefix_reuse.py).  Returns -1 (no copy, the tokens
+        are simply recomputed) when an undersized pool has no block to
+        spare — admission never preempts for a mere optimization."""
+        dst = self.pool.try_allocate()
+        if dst is None:
+            return -1
         self.caches = self._copy_step(self.caches, np.int32(src),
                                       np.int32(dst))
         self.block_tables[slot, jb] = dst
@@ -578,25 +694,57 @@ class ServeEngine:
         subsequent unified steps chunk by chunk); prefix matching jumps
         the prompt cursor over blocks the pool already holds, a
         partial-tail hit costs one block copy, and the slot's recurrent
-        state is zeroed."""
+        state is zeroed.
+
+        Preempted requests re-enter from the queue FRONT with their
+        *effective* prompt (original prompt + tokens generated before
+        preemption): hash matching re-attaches any still-resident
+        shared blocks, swapped-out blocks upload from the host arena
+        (bit-identical restore), and whatever remains is recomputed —
+        chunked recompute of the same token history writes bit-
+        identical KV, so resumed rollouts stay exact.  A minimal
+        admission gate (at least one allocatable block while other
+        slots are active) keeps admission from thrashing straight back
+        into preemption.
+        """
         for slot in range(self.slots):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
+            res = self._resume.get(self.queue[0].uid)
+            # admission gate: one allocatable block is enough to make
+            # progress (a chunk shrinks to the blocks it can get);
+            # admitting into a zero-free pool would only preempt
+            # whoever owns the last block — churn, not progress.  With
+            # no active slot there is nothing to wait for: admit and
+            # rely on the lone-slot completion guarantee.
+            if self.pool.blocks_free < 1 and self._active_slots():
+                break     # wait for a block instead of thrashing; FIFO
             req = self.queue.pop(0)
-            tokens_in = req.prompt
-            if len(tokens_in) > self.max_len:
-                # oversize == 'truncate' (submit rejected it otherwise):
-                # keep the most recent context, WITHOUT mutating the
-                # caller's Request — req.prompt stays intact
-                tokens_in = tokens_in[len(tokens_in) - self.max_len:]
+            if res is not None:
+                del self._resume[req.uid]
+                tokens_in = res["prompt"]     # <= max_len by invariant
+            else:
+                tokens_in = req.prompt
+                if len(tokens_in) > self.max_len:
+                    # oversize == 'truncate' (submit rejected it
+                    # otherwise): keep the most recent context, WITHOUT
+                    # mutating the caller's Request
+                    tokens_in = tokens_in[len(tokens_in) - self.max_len:]
             tokens_in = np.asarray(tokens_in, np.int32)
             plen = len(tokens_in)
+            resumed_dec = bool(res and res["decoding"])
+            self.admitted_prompt_tokens += plen
 
             matched, hits, chain = (
                 self._match_full_blocks(tokens_in) if self.prefix_reuse
                 else (0, [], []))
             cow_src, cow_take, cow_release = -1, 0, -1
-            if matched >= plen:
+            if matched >= plen and resumed_dec:
+                # a resumed mid-decode request needs no fresh logits
+                # from its refill — full coverage goes straight back to
+                # decoding (the pending token is out_tokens[-1])
+                matched = plen
+            elif matched >= plen:
                 # whole-prompt hit: the last block must be re-owned so
                 # its final position can be recomputed for logits —
                 # drop the full-block credit, CoW all but the last
@@ -606,8 +754,9 @@ class ServeEngine:
                 chain.pop()
                 matched -= self.block_size
                 cow_take, cow_release = self.block_size - 1, cow_src
-            elif self.prefix_reuse:
+            elif self.prefix_reuse and res is None:
                 # the donor slot's own reference protects the source
+                # (resumed requests restore from the arena instead)
                 cow_src, cow_take = self._match_partial_tail(
                     chain, tokens_in, matched)
 
@@ -619,72 +768,261 @@ class ServeEngine:
             self.slot_nblocks[slot] = len(hits)
             self._dirty_slots.add(slot)
             self.slot_chain[slot] = list(chain)
-            if cow_src >= 0 and cow_take > 0:
-                self._cow_block(slot, len(hits), cow_src)
+            if cow_src >= 0 and cow_take > 0 and \
+                    self._cow_block(slot, len(hits), cow_src) >= 0:
                 matched += cow_take
             if cow_release >= 0:
                 self.pool.decref(cow_release)
+            req.prefix_hit_tokens = matched
+            self.prefix_hit_tokens += matched
+
+            if res is not None:
+                matched = self._swap_in(slot, res, tokens_in, matched,
+                                        plen if resumed_dec
+                                        else plen - 1)
+                self.recompute_tokens += max(0,
+                                             res["covered"] - matched)
 
             self.slot_hist[slot] = [int(t) for t in tokens_in[:matched]]
             self.slot_fill[slot] = matched
             self.cache_len[slot] = matched
-            req.prefix_hit_tokens = matched
-            self.prefix_hit_tokens += matched
+            self.slot_seq[slot] = self._admit_seq
+            self._admit_seq += 1
+            self._skip_sample[slot] = resumed_dec and matched < plen
             self._reset_slot_state(slot)
             if self.cfg.n_media_tokens:
                 self._media_host[slot] = \
                     req.media if req.media is not None else 0.0
                 self._media_dirty = True
 
-    def _ensure_blocks(self, i: int, upto_len: int):
+    def _swap_in(self, slot: int, res: Dict[str, Any],
+                 tokens_in: np.ndarray, matched: int, cap: int) -> int:
+        """Upload a resumed request's swapped-out blocks from the host
+        arena into freshly owned pool blocks, contiguously extending
+        the hash-matched prefix.  Full restored blocks are re-registered
+        under their chain hashes; the restore is bit-identical (the
+        regression test compares bytes).  Returns the new matched
+        length."""
+        bs = self.block_size
+        covered = int(res["covered"])
+        swap = res["swap"]
+        jb = int(self.slot_nblocks[slot])
+        while jb in swap and matched == jb * bs:
+            take = min(covered, (jb + 1) * bs) - jb * bs
+            if take <= 0 or matched + take > cap:
+                break
+            bid = self.pool.try_allocate()
+            if bid is None:
+                break                 # recompute the rest instead
+            vals = jax.tree_util.tree_map(jnp.asarray, swap.pop(jb))
+            self.caches = self._write_block(self.caches, np.int32(bid),
+                                            vals)
+            self.block_tables[slot, jb] = bid
+            self.slot_nblocks[slot] = jb + 1
+            self._dirty_slots.add(slot)
+            if take == bs and self.prefix_reuse:
+                prev = self.slot_chain[slot][-1] if self.slot_chain[slot] \
+                    else ROOT_HASH
+                h = chain_hash(prev, tokens_in[jb * bs:(jb + 1) * bs])
+                self.slot_chain[slot].append(h)
+                self.pool.register(bid, h)
+            matched += take
+            self.swapped_in_blocks += 1
+            self.swapped_in_tokens += take
+            jb += 1
+        return matched
+
+    # -- preemption / swap --------------------------------------------------
+
+    def _pick_victim(self, requester: int,
+                     allow_decode: bool) -> Optional[int]:
+        """Victim choice when allocation fails: the YOUNGEST (most
+        recently admitted) prefilling slot first — it has the least
+        sunk work and frees exclusively-owned blocks immediately.  A
+        decode requester may fall back to the youngest *decoding* slot
+        (decodes hold whole sequences; without this fallback an all-
+        decode batch could deadlock) and, as a last resort, itself.  A
+        prefill requester never preempts decodes or older prefills —
+        it just takes a smaller (possibly empty) chunk this iteration.
+        """
+        def youngest(cands):
+            return max(cands, key=lambda s: self.slot_seq[s], default=None)
+        active = self._active_slots()
+        prefilling = [s for s in active if s != requester
+                      and self.slot_fill[s] < len(self.slot_prompt[s])]
+        if not allow_decode:
+            prefilling = [s for s in prefilling
+                          if self.slot_seq[s] > self.slot_seq[requester]]
+        v = youngest(prefilling)
+        if v is not None or not allow_decode:
+            return v
+        v = youngest([s for s in active if s != requester])
+        if v is not None:
+            return v
+        return requester if requester in active else None
+
+    def _preempt(self, victim: int):
+        """Evict a running slot to make blocks available: swap its
+        exclusively-owned KV blocks to the host arena (or drop them for
+        recompute when the roofline estimate says replaying the tokens
+        is cheaper), release every block reference, and requeue the
+        request at the FRONT of the queue with its effective prompt
+        (original prompt + generated-so-far) so it resumes exactly
+        where it stopped.  Shared (refcount > 1) blocks are never
+        copied — they stay pool-resident and re-attach by chain hash at
+        resume."""
+        req = self.slot_req[victim]
+        covered = int(self.cache_len[victim])
+        out = req.out_tokens
+        # the resume prompt: still-prefilling victims keep their (full)
+        # prompt — which for an already-resumed slot is its previous
+        # effective prompt, never re-extended; decoding victims resume
+        # from exactly the cache contents (slot_hist == prompt +
+        # generated-and-written), with out_tokens[-1] the pending input
+        if self.slot_fill[victim] < len(self.slot_prompt[victim]):
+            eff = np.asarray(self.slot_prompt[victim], np.int32)
+        else:
+            eff = np.asarray(self.slot_hist[victim], np.int32)
+        own = [(jb, int(self.block_tables[victim, jb]))
+               for jb in range(int(self.slot_nblocks[victim]))
+               if self.pool.refcount[int(self.block_tables[victim, jb])]
+               == 1]
+        mode = self.preempt
+        if mode == "auto":
+            own_tokens = min(covered, len(own) * self.block_size)
+            t_recompute = 2.0 * self._n_params * own_tokens / PEAK_FLOPS
+            t_swap = 2.0 * len(own) * self._block_bytes / HOST_LINK_BW
+            mode = "swap" if t_swap < t_recompute else "recompute"
+        swap: Dict[int, Any] = {}
+        if mode == "swap" and own:
+            bids = np.asarray([bid for _, bid in own], np.int64)
+            fetched = fetch_kv_blocks(self.caches, bids)
+            self.swap_d2h_fetches += 1
+            for pos, (jb, _) in enumerate(own):
+                swap[jb] = jax.tree_util.tree_map(
+                    lambda a, p=pos: a[:, p], fetched)
+            self.swapped_out_blocks += len(own)
+        self._resume[req.uid] = {
+            "prompt": eff, "decoding": bool(out), "covered": covered,
+            "swap": swap,
+        }
+        # token accounting: the admission episode ends early, so the
+        # never-scheduled prompt remainder leaves the admitted count
+        # (the re-admission will count the resume prompt in full) —
+        # keeps `scheduled_prefill + prefix_hit + swapped_in ==
+        # admitted_prompt_tokens` exact under preemption
+        self.admitted_prompt_tokens -= max(
+            0, len(self.slot_prompt[victim]) - int(self.slot_fill[victim]))
+        self.preemptions += 1
+        self.slot_req[victim] = None
+        self.slot_prompt[victim] = None
+        self.slot_fill[victim] = 0
+        self.cache_len[victim] = 0
+        self._skip_sample[victim] = False
+        self._release_slot(victim)
+        self.queue.insert(0, req)
+
+    def _ensure_blocks(self, i: int, upto_len: int,
+                       allow_decode_victims: bool = True,
+                       on_preempt=None) -> bool:
         """Allocate physical blocks so slot i can hold ``upto_len``
-        cache positions."""
+        cache positions, preempting other slots if the pool is
+        exhausted.  Returns False when slot i cannot be (fully) grown —
+        either it preempted itself (last-resort victim) or, for a
+        prefill requester, no eligible victim remained."""
         need = -(-upto_len // self.block_size)
         while self.slot_nblocks[i] < need:
-            self.block_tables[i, self.slot_nblocks[i]] = \
-                self.pool.allocate()
+            bid = self.pool.try_allocate()
+            if bid is None:
+                victim = self._pick_victim(i, allow_decode_victims)
+                if victim is None:
+                    return False
+                self._preempt(victim)
+                if on_preempt is not None:
+                    on_preempt(victim)
+                if victim == i:
+                    return False
+                continue
+            self.block_tables[i, self.slot_nblocks[i]] = bid
             self.slot_nblocks[i] += 1
             self._dirty_slots.add(i)
+        return True
 
     def _schedule(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                  List[int], List[int]]:
         """Fill the (slots, chunk) grid: decodes first (always), then
         prompt slices under the remaining token budget.  Also builds
         the physical write map (slot_map) and allocates the blocks the
-        scheduled tokens land in."""
+        scheduled tokens land in; on an undersized pool an allocation
+        failure preempts a victim slot (decode requesters take the
+        youngest prefilling slot regardless of relative age, falling
+        back to the youngest other decode; prefill requesters only
+        ever preempt prefills younger than themselves — they otherwise
+        just take a smaller chunk), and a victim already scheduled this
+        iteration is unscheduled — its grid rows cleared and its budget
+        tokens refunded — before the step runs.
+        """
         tokens = np.zeros((self.slots, self.chunk), np.int32)
         n_new = np.zeros((self.slots,), np.int32)
         oob = self.pool.num_blocks * self.block_size
         slot_map = np.full((self.slots, self.chunk), oob, np.int32)
         decode_slots: List[int] = []
         finishing_prefill: List[int] = []
+
+        def unschedule(v):
+            nonlocal budget
+            budget += int(n_new[v])     # refund the victim's tokens
+            tokens[v] = 0
+            n_new[v] = 0
+            slot_map[v] = oob
+            if v in decode_slots:
+                decode_slots.remove(v)
+            if v in finishing_prefill:
+                finishing_prefill.remove(v)
+
+        def write_map(i, t):
+            cl = int(self.cache_len[i])
+            pos = cl + np.arange(t)
+            blk = self.block_tables[i, pos // self.block_size]
+            slot_map[i, :t] = blk * self.block_size + pos % self.block_size
+
         budget = self.token_budget
         for i in self._active_slots():
+            if self.slot_req[i] is None:
+                continue            # preempted earlier in this pass
             if self.slot_fill[i] >= len(self.slot_prompt[i]):
+                if not self._ensure_blocks(i, int(self.cache_len[i]) + 1,
+                                           on_preempt=unschedule):
+                    continue        # last-resort self-preemption
                 tokens[i, 0] = self.slot_req[i].out_tokens[-1]
                 n_new[i] = 1
+                write_map(i, 1)
                 decode_slots.append(i)
                 budget -= 1   # decode is never stalled, even if < 0
         for i in self._active_slots():
+            if self.slot_req[i] is None:
+                continue            # preempted by a later decode pass
             plen = len(self.slot_prompt[i])
             fill = int(self.slot_fill[i])
             if fill >= plen or budget <= 0:
                 continue
             take = min(self.chunk, plen - fill, budget)
+            cl = int(self.cache_len[i])
+            if not self._ensure_blocks(i, cl + take,
+                                       allow_decode_victims=False,
+                                       on_preempt=unschedule):
+                # shrink the chunk to the blocks this slot already owns
+                take = min(take,
+                           int(self.slot_nblocks[i]) * self.block_size
+                           - cl)
+                if take <= 0:
+                    continue
             tokens[i, :take] = self.slot_prompt[i][fill:fill + take]
             n_new[i] = take
+            write_map(i, take)
             budget -= take
             if fill + take >= plen:
                 finishing_prefill.append(i)
-        for i in range(self.slots):
-            t = int(n_new[i])
-            if not t:
-                continue
-            cl = int(self.cache_len[i])
-            self._ensure_blocks(i, cl + t)
-            pos = cl + np.arange(t)
-            blk = self.block_tables[i, pos // self.block_size]
-            slot_map[i, :t] = blk * self.block_size + pos % self.block_size
         return tokens, n_new, slot_map, decode_slots, finishing_prefill
 
     def _release_slot(self, i: int):
@@ -776,6 +1114,13 @@ class ServeEngine:
             req.out_tokens.append(int(toks[i]))
             self._finish_check(i)
         for i in finishing:
+            if self._skip_sample[i]:
+                # resumed-mid-decode refill: the "first generated"
+                # token already exists — out_tokens[-1] is the pending
+                # decode input; appending the (greedy-identical)
+                # re-sample would duplicate it
+                self._skip_sample[i] = False
+                continue
             req = self.slot_req[i]
             req.out_tokens.append(int(toks[i]))   # first generated token
             self._finish_check(i)
@@ -796,9 +1141,18 @@ class ServeEngine:
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "scheduled_tokens": self.scheduled_tokens,
             "scheduled_prefill_tokens": self.scheduled_prefill_tokens,
+            "admitted_prompt_tokens": self.admitted_prompt_tokens,
             "blocks_in_use": self.pool.blocks_in_use,
             "blocks_cached": self.pool.blocks_cached,
             "evictions": self.pool.evictions,
+            "preemptions": self.preemptions,
+            "swapped_out_blocks": self.swapped_out_blocks,
+            "swapped_in_blocks": self.swapped_in_blocks,
+            "swapped_in_tokens": self.swapped_in_tokens,
+            "swap_d2h_fetches": self.swap_d2h_fetches,
+            "recompute_tokens": self.recompute_tokens,
+            "preempted_waiting": len(self._resume),
+            "preemptable_pool": int(self.preemptable),
         }
 
     def validate(self):

@@ -96,6 +96,26 @@ _SCRIPT = textwrap.dedent("""
                                rtol=2e-5, atol=2e-5)
     print("sharded_paged_mixed_attention ok")
 
+    # --- the same compacted tables feeding the Pallas paged-attention
+    # kernel (interpret mode) instead of the XLA gather: each device's
+    # local-first compaction becomes the kernel's logical_blocks /
+    # entry_valid scalar-prefetch inputs -----------------------------------
+    for args_i, want_i, off_i in (
+            ((qm, pk, pv, tbl, offs + nnew), want_p, offs),
+            ((q_long, pk, pv, tbl_long, off_l + 2), want_l, off_l)):
+        got_k = sharded_paged_mixed_attention(*args_i, mesh,
+                                              block_axis="model",
+                                              q_offset=off_i,
+                                              impl="pallas")
+        np.testing.assert_allclose(np.asarray(got_k), np.asarray(want_i),
+                                   rtol=2e-5, atol=2e-5)
+    got_k1 = sharded_paged_mixed_attention(q, pk, pv, tbl, clen_p, mesh,
+                                           block_axis="model",
+                                           impl="pallas")
+    np.testing.assert_allclose(np.asarray(got_k1), np.asarray(want_p1),
+                               rtol=2e-5, atol=2e-5)
+    print("sharded_paged_kernel ok")
+
     # --- row-parallel matmul ---------------------------------------------
     from repro.distrib.collectives import (allgather_matmul_overlapped,
                                            rowparallel_matmul)
@@ -163,6 +183,7 @@ def test_multidevice_distribution():
     assert "sharded_decode_attention ok" in proc.stdout
     assert "sharded_mixed_attention ok" in proc.stdout
     assert "sharded_paged_mixed_attention ok" in proc.stdout
+    assert "sharded_paged_kernel ok" in proc.stdout
     assert "rowparallel_matmul ok" in proc.stdout
     assert "allgather_matmul_overlapped ok" in proc.stdout
     assert "pipeline_apply ok" in proc.stdout

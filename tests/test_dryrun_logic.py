@@ -112,6 +112,38 @@ def test_paged_mixed_shared_shape_modeled():
     assert abs(shared - per_tok * (128 - 1 + 64 - hit)) / shared < 1e-9
 
 
+def test_paged_gather_pricing_in_roofline_row():
+    """The paged cell prices the in-kernel gather: the XLA route pays
+    a 2x KV round trip (copy write + copy read) on top of the memory
+    term, the Pallas kernel route pays nothing extra — and both the
+    saved bytes and the kernel_bench paged_attn_* ratio agree."""
+    from benchmarks.roofline import HBM_BW, _kv_write_bytes, roofline_row
+    sc = SHAPES["mixed_32k_shared"]
+    cell = {
+        "status": "ok", "arch": "granite-34b",
+        "shape": "mixed_32k_shared", "mesh": "16x16", "variant":
+        "baseline", "n_devices": 256,
+        "hlo": {"dot_flops": 1e12, "total_wire_bytes": 1e6},
+        "memory": {"argument_size_in_bytes": 10 ** 9,
+                   "output_size_in_bytes": 10 ** 8},
+        "prefix_hit_rate": sc.hit_rate,
+        "prefix_hit_tokens": sc.prefix_hit_tokens,
+        "scheduled_tokens": sc.scheduled_mixed_tokens,
+        "gather_context_tokens": sc.global_batch * sc.seq_len,
+    }
+    row = roofline_row(cell)
+    want = 2 * _kv_write_bytes("granite-34b",
+                               sc.global_batch * sc.seq_len) / 256
+    assert row["gather_bytes_saved_per_dev"] == want
+    assert abs(row["t_memory_xla_gather_s"]
+               - (row["t_memory_s"] + want / HBM_BW)) < 1e-12
+    # the analytic kernel-bench rows claim the same 3x-vs-1x shape
+    from benchmarks.kernel_bench import paged_attention_rows
+    for r in paged_attention_rows():
+        assert r["xla_gather_bytes"] == 3 * r["kv_bytes_logical"]
+        assert r["gather_bytes_saved"] == 2 * r["kv_bytes_logical"]
+
+
 def test_weight_stream_summary_math():
     from repro.launch.hlo_analysis import weight_stream_summary
     rep = {"weight_bytes_resident": 1000,

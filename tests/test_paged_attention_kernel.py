@@ -1,0 +1,231 @@
+"""Pallas paged-attention kernel parity matrix (ISSUE-5 tentpole).
+
+The in-kernel block-table gather (`kernels/paged_attention.py`, run in
+interpret mode on CPU) is checked against the XLA-gather route of
+``nn/attention.mixed_attention`` — the production path off-TPU and the
+parity oracle everywhere — across block_size {16, 64} x decode (S=1) /
+mixed (S>1, ragged) x {bf16-free f32, int8 KV + paged scales}.
+
+Tolerance note: the oracle's online-softmax scan is a compiled
+``lax.scan`` while the interpret-mode kernel is a separately lowered
+program, and XLA's fusion choices differ between the two — identical
+math, identical reduction *grouping* (same ``chunk_kv`` boundaries),
+but one-ulp f32 differences appear data-dependently (the same effect
+makes an eager re-execution of the oracle's own ops differ from the
+scan).  The cross-program parity matrix therefore asserts a <= few-ulp
+bound (`_ULP_TOL`, tight enough that any mask / position / gather bug
+fails by orders of magnitude), while everything that IS one program is
+asserted **bit-exact**:
+
+  * gather invariance — two different random physical block placements
+    of the same logical cache produce bit-identical kernel output;
+  * the compacted-table entry point with identity logical_blocks /
+    all-valid entries equals the plain kernel bit-for-bit;
+  * the S=1 decode variant (causal term compiled out) equals the
+    causal kernel bit-for-bit;
+  * ``normalize=False`` flash partials with a single chunk equal
+    ``distrib/decode_attn._local_partial`` (the lse-merge oracle).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention import (paged_attention_pallas,
+                                           paged_decode_attention_pallas,
+                                           paged_mixed_attention_pallas)
+from repro.nn.attention import kv_dequantize, mixed_attention
+
+B, H, HK, D = 2, 4, 2, 8
+S_MAX = 128
+_ULP_TOL = dict(rtol=3e-6, atol=3e-6)
+
+
+def _pool_from_contiguous(k, v, block_size, seed=0):
+    """Scatter a contiguous (B, S, Hk, D) cache into a block pool under
+    a random physical permutation (same helper as the XLA-route matrix
+    in test_paged_attention.py)."""
+    rng = np.random.default_rng(seed)
+    b, s = k.shape[0], k.shape[1]
+    nblk = s // block_size
+    nb = b * nblk + 3
+    perm = rng.permutation(nb)[:b * nblk].reshape(b, nblk)
+    pool_k = rng.normal(size=(nb, block_size) + k.shape[2:]) \
+        .astype(np.asarray(k).dtype)
+    pool_v = rng.normal(size=pool_k.shape).astype(pool_k.dtype)
+    for i in range(b):
+        for j in range(nblk):
+            pool_k[perm[i, j]] = np.asarray(
+                k[i, j * block_size:(j + 1) * block_size])
+            pool_v[perm[i, j]] = np.asarray(
+                v[i, j * block_size:(j + 1) * block_size])
+    return (jnp.asarray(pool_k), jnp.asarray(pool_v),
+            jnp.asarray(perm, jnp.int32))
+
+
+@pytest.fixture(scope="module")
+def kv():
+    rng = np.random.default_rng(7)
+    k = jnp.asarray(rng.normal(size=(B, S_MAX, HK, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S_MAX, HK, D)).astype(np.float32))
+    return k, v
+
+
+@pytest.fixture(scope="module")
+def kv_int8(kv):
+    """int8 codes + per-(token, head) bf16 scales (the kv8 cache)."""
+    from repro.models.transformer import _kv_quantize
+    k, v = kv
+    kq, ks = _kv_quantize(k)
+    vq, vs = _kv_quantize(v)
+    return kq, ks, vq, vs
+
+
+def _case(kv, block_size, chunk_kv, q_offset, n_new, seed=1):
+    k, v = kv
+    rng = np.random.default_rng(seed)
+    sq = int(max(n_new))
+    q = jnp.asarray(rng.normal(size=(B, sq, H, D)).astype(np.float32))
+    offs = jnp.asarray(q_offset, jnp.int32)
+    nnew = jnp.asarray(n_new, jnp.int32)
+    pk, pv, tables = _pool_from_contiguous(k, v, block_size, seed)
+    return q, offs, nnew, pk, pv, tables
+
+
+# -- kernel vs the XLA-gather oracle (block_size x S x offsets) -------------
+
+@pytest.mark.parametrize("block_size,chunk_kv", [(16, 32), (64, 64),
+                                                 (16, 64)])
+@pytest.mark.parametrize("q_offset,n_new", [
+    ([17, 63], [5, 3]),                 # mixed ragged chunk
+    ([15, 32], [4, 4]),                 # block-boundary +-1 offsets
+    ([S_MAX - 1, 31], [1, 1]),          # decode as S=1
+])
+def test_kernel_matches_xla_gather(kv, block_size, chunk_kv, q_offset,
+                                   n_new):
+    q, offs, nnew, pk, pv, tables = _case(kv, block_size, chunk_kv,
+                                          q_offset, n_new)
+    want = mixed_attention(q, pk, pv, offs + nnew, offs,
+                           chunk_kv=chunk_kv, block_tables=tables)
+    got = paged_mixed_attention_pallas(q, pk, pv, tables, offs + nnew,
+                                       offs, chunk_kv=chunk_kv)
+    for i in range(B):
+        nv = int(nnew[i])
+        np.testing.assert_allclose(np.asarray(got[i, :nv]),
+                                   np.asarray(want[i, :nv]), **_ULP_TOL)
+
+
+@pytest.mark.parametrize("block_size,chunk_kv", [(16, 32), (64, 64)])
+def test_kernel_matches_xla_gather_int8(kv_int8, block_size, chunk_kv):
+    """int8 KV: codes and their scales page through the same tables;
+    the kernel dequantizes in-VMEM exactly like kv_dequantize."""
+    kq, ks, vq, vs = kv_int8
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(B, 4, H, D)).astype(np.float32))
+    offs = jnp.asarray([33, 90], jnp.int32)
+    nnew = jnp.asarray([4, 2], jnp.int32)
+    pk, pv, tables = _pool_from_contiguous(kq, vq, block_size, 5)
+    psk, psv, tables2 = _pool_from_contiguous(ks[..., None], vs[..., None],
+                                              block_size, 5)
+    np.testing.assert_array_equal(np.asarray(tables), np.asarray(tables2))
+    psk, psv = psk[..., 0], psv[..., 0]
+    want = mixed_attention(q, pk, pv, offs + nnew, offs,
+                           chunk_kv=chunk_kv, block_tables=tables,
+                           k_scale=psk, v_scale=psv)
+    got = paged_mixed_attention_pallas(q, pk, pv, tables, offs + nnew,
+                                       offs, chunk_kv=chunk_kv,
+                                       k_scale=psk, v_scale=psv)
+    for i in range(B):
+        nv = int(nnew[i])
+        np.testing.assert_allclose(np.asarray(got[i, :nv]),
+                                   np.asarray(want[i, :nv]), **_ULP_TOL)
+
+
+# -- bit-exact single-program invariants ------------------------------------
+
+def test_gather_invariance_is_bit_exact(kv):
+    """Two different physical placements of the same logical cache:
+    the in-kernel gather must make the layout invisible, bit-for-bit."""
+    k, v = kv
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(B, 3, H, D)).astype(np.float32))
+    offs = jnp.asarray([40, 77], jnp.int32)
+    nnew = jnp.asarray([3, 3], jnp.int32)
+    outs = []
+    for seed in (1, 2):
+        pk, pv, tables = _pool_from_contiguous(k, v, 16, seed)
+        outs.append(np.asarray(paged_mixed_attention_pallas(
+            q, pk, pv, tables, offs + nnew, offs, chunk_kv=32)))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_compacted_identity_is_bit_exact(kv):
+    """logical_blocks == arange + all-valid entries must be the plain
+    kernel, bit-for-bit (the sharded-compaction entry point's no-op)."""
+    k, v = kv
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.normal(size=(B, 2, H, D)).astype(np.float32))
+    offs = jnp.asarray([50, 100], jnp.int32)
+    nnew = jnp.asarray([2, 2], jnp.int32)
+    pk, pv, tables = _pool_from_contiguous(k, v, 16, 3)
+    nblk = tables.shape[1]
+    plain = paged_attention_pallas(q, pk, pv, tables, offs + nnew,
+                                   q_offset=offs, chunk_kv=32)
+    lblk = jnp.broadcast_to(jnp.arange(nblk, dtype=jnp.int32), (B, nblk))
+    sel = jnp.ones((B, nblk), jnp.int32)
+    comp = paged_attention_pallas(q, pk, pv, tables, offs + nnew,
+                                  q_offset=offs, chunk_kv=32,
+                                  logical_blocks=lblk, entry_valid=sel)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(comp))
+
+
+def test_decode_variant_drops_causal_bit_exact(kv):
+    """S=1 with kv_valid_len == q_offset + 1: the decode variant (no
+    causal term at all) must equal the causal kernel bit-for-bit."""
+    k, v = kv
+    rng = np.random.default_rng(17)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)).astype(np.float32))
+    cl = jnp.asarray([97, S_MAX], jnp.int32)
+    pk, pv, tables = _pool_from_contiguous(k, v, 16, 9)
+    causal = paged_attention_pallas(q, pk, pv, tables, cl,
+                                    q_offset=cl - 1, chunk_kv=32,
+                                    causal=True)
+    dec = paged_decode_attention_pallas(q, pk, pv, tables, cl,
+                                        chunk_kv=32)
+    np.testing.assert_array_equal(np.asarray(causal), np.asarray(dec))
+
+
+def test_partials_match_local_partial_oracle(kv):
+    """normalize=False with ONE chunk: the un-normalized (o, m, l)
+    partials must match distrib/decode_attn._local_partial — what the
+    sharded lse merge consumes."""
+    from repro.distrib.decode_attn import _local_partial
+    k, v = kv
+    rng = np.random.default_rng(19)
+    bs = 16
+    q = jnp.asarray(rng.normal(size=(B, 2, H, D)).astype(np.float32))
+    offs = jnp.asarray([20, 61], jnp.int32)
+    nnew = jnp.asarray([2, 2], jnp.int32)
+    pk, pv, tables = _pool_from_contiguous(k, v, bs, 23)
+    nblk = tables.shape[1]
+    keep = jnp.broadcast_to(jnp.arange(nblk, dtype=jnp.int32), (B, nblk))
+    sel = np.ones((B, nblk), np.int32)
+    sel[:, 5:] = 0                        # only blocks 0..4 are "local"
+    sel = jnp.asarray(sel)
+    o, m, l = paged_attention_pallas(
+        q, pk, pv, tables, offs + nnew, q_offset=offs,
+        chunk_kv=nblk * bs,               # single chunk => bit-exact
+        logical_blocks=keep, entry_valid=sel, normalize=False)
+    # oracle: gather the same blocks, attend at logical positions with
+    # the same selection mask
+    kg = pk[tables].reshape(B, nblk * bs, HK, D)
+    vg = pv[tables].reshape(B, nblk * bs, HK, D)
+    kpos = jnp.broadcast_to(jnp.arange(nblk * bs, dtype=jnp.int32),
+                            (B, nblk * bs))
+    ev = jnp.repeat(sel.astype(bool), bs, axis=1)
+    m_o, l_o, o_o = _local_partial(q, kg, vg, 0, offs + nnew,
+                                   q_offset=offs, kpos=kpos,
+                                   extra_valid=ev)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_o), **_ULP_TOL)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l_o), **_ULP_TOL)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_o), **_ULP_TOL)

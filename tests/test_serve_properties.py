@@ -22,10 +22,30 @@ engine is checked after EVERY step:
   6. token accounting closes: scheduled prefill tokens + prefix-hit
      tokens == total admitted prompt tokens.
 
+A second, SMALL-POOL profile (ISSUE-5) runs the same streams against a
+pool sized below the full-batch floor, where allocation failures force
+preemption (swap or recompute), and checks two more invariants on top
+of the six:
+
+  7. preempted requests always complete — every submitted request
+     drains ``done`` with the preemption arena empty, and greedy
+     output still matches the reference token-for-token (recompute
+     replays are bit-identical; swap-ins restore exact bytes);
+  8. swap-in restores bit-identical KV: the swap profile disables
+     prefix matching so every resume MUST rebuild from the host arena,
+     and greedy parity (invariant 4) then certifies the restored cache
+     bit-exactly (the direct byte-compare regression lives in
+     tests/test_preemption.py).
+
+Token accounting under preemption closes against the engine's
+``admitted_prompt_tokens`` (re-admissions included):
+``scheduled_prefill + prefix_hit + swapped_in == admitted``.
+
 Runs with a bounded deterministic profile (fixed seed via
 ``derandomize``, ``max_examples`` = SERVE_PROPERTY_EXAMPLES, default
-50) so CI stays reproducible and fast; the in-repo hypothesis fallback
-shim (tests/_hypothesis_compat.py) keeps it runnable without the
+50, halved for the small-pool profiles) so CI stays reproducible and
+fast; the in-repo hypothesis fallback shim
+(tests/_hypothesis_compat.py) keeps it runnable without the
 dependency.
 """
 import os
@@ -62,12 +82,13 @@ def _setup():
     return _STATE
 
 
-def _fresh_engine(state, greedy):
+def _fresh_engine(state, greedy, **kw):
     eng = ServeEngine(state["params"], state["cfg"], batch_slots=SLOTS,
                       max_len=MAX_LEN, chunk=CHUNK,
-                      block_size=BLOCK_SIZE, greedy=greedy)
+                      block_size=BLOCK_SIZE, greedy=greedy, **kw)
     # share ONE compiled step across examples (fixed shapes): per-engine
-    # jit closures would recompile identical HLO every example
+    # jit closures would recompile identical HLO every example (the
+    # small-pool profile's pool shape gets its own cache entry)
     if state["step"] is None:
         state["step"], state["copy"] = eng._step, eng._copy_step
     else:
@@ -102,15 +123,12 @@ _REQUEST = st.tuples(st.booleans(), st.integers(1, MAX_LEN - 2),
                      st.integers(1, 3), st.integers(0, 2))
 
 
-@settings(max_examples=MAX_EXAMPLES, derandomize=True, deadline=None)
-@given(st.lists(_REQUEST, min_size=1, max_size=3),
-       st.integers(0, 2 ** 20), st.booleans())
-def test_engine_invariants_over_random_streams(stream, seed, greedy):
-    state = _setup()
+def _run_stream(state, eng, stream, seed, greedy):
+    """Submit the stream with interleaved gaps, step-checking every
+    iteration, then drain and check the drain/accounting/parity
+    invariants shared by both pool profiles."""
     cfg = state["cfg"]
     rng = np.random.default_rng(seed)
-    eng = _fresh_engine(state, greedy)
-
     reqs = []
     for uid, (shared, plen, max_new, gap) in enumerate(stream):
         prompt = (state["base"][:plen].copy() if shared else
@@ -127,17 +145,55 @@ def test_engine_invariants_over_random_streams(stream, seed, greedy):
         assert iters < 500
 
     # invariant 5: drained — every block released, hash maps consistent
-    assert eng.stats()["blocks_in_use"] == 0
+    st_ = eng.stats()
+    assert st_["blocks_in_use"] == 0
     eng.validate()
 
-    # invariant 6: token accounting closes exactly
-    total_plen = sum(len(r.prompt) for r in reqs)
-    assert eng.scheduled_prefill_tokens + eng.prefix_hit_tokens \
-        == total_plen
-    assert all(r.done for r in reqs)
+    # invariant 6: token accounting closes exactly (admitted counts
+    # re-admissions of preempted requests; without preemption it equals
+    # the submitted prompt lengths)
+    assert st_["scheduled_prefill_tokens"] + st_["prefix_hit_tokens"] \
+        + st_["swapped_in_tokens"] == st_["admitted_prompt_tokens"]
 
-    # invariant 4: greedy parity with the unpaged reference
+    # invariant 7: every request completes (preempted ones included —
+    # the arena must be empty at drain)
+    assert all(r.done for r in reqs)
+    assert st_["preempted_waiting"] == 0
+
+    # invariant 4 (and 8 on the swap profile): greedy parity with the
+    # unpaged reference — bit-identical recompute/swap-restore included
     if greedy:
         for r in reqs:
             assert r.out_tokens == _reference(state, r.prompt,
                                               len(r.out_tokens)), r.uid
+    return reqs
+
+
+@settings(max_examples=MAX_EXAMPLES, derandomize=True, deadline=None)
+@given(st.lists(_REQUEST, min_size=1, max_size=3),
+       st.integers(0, 2 ** 20), st.booleans())
+def test_engine_invariants_over_random_streams(stream, seed, greedy):
+    state = _setup()
+    eng = _fresh_engine(state, greedy)
+    reqs = _run_stream(state, eng, stream, seed, greedy)
+    # default sizing: allocation can never fail, so nothing preempts
+    assert eng.stats()["preemptions"] == 0
+    assert eng.scheduled_prefill_tokens + eng.prefix_hit_tokens \
+        == sum(len(r.prompt) for r in reqs)
+
+
+# pool below the full-batch floor (SLOTS * (MAX_LEN/BS) + 1 = 9): the
+# streams above overflow 6 blocks routinely, forcing preemption.  The
+# swap profile disables prefix matching so resumes MUST restore from
+# the host arena (invariant 8); auto keeps matching (hash revival and
+# the roofline crossover pick the resume path per victim).
+@settings(max_examples=max(1, MAX_EXAMPLES // 2), derandomize=True,
+          deadline=None)
+@given(st.lists(_REQUEST, min_size=2, max_size=3),
+       st.integers(0, 2 ** 20), st.booleans(),
+       st.sampled_from(["auto", "swap"]))
+def test_small_pool_preemption_invariants(stream, seed, greedy, mode):
+    state = _setup()
+    eng = _fresh_engine(state, greedy, num_blocks=6, preempt=mode,
+                        prefix_reuse=(mode != "swap"))
+    _run_stream(state, eng, stream, seed, greedy)
