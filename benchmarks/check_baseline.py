@@ -16,6 +16,13 @@ wall-clock: CI runs the bench in interpret mode (``--exercise`` times
 the small paper-tile case once, driving the fused Pallas kernels
 through the interpreter) but only the analytic columns are compared.
 
+The serving traffic rows (benchmarks/serving_bench.py — TTFT/TPOT/
+goodput digests of seeded traces replayed through ServeEngine in
+virtual time) gate the same way against
+benchmarks/baselines/serving_baseline.csv: deterministic columns only,
+with the replay ``*_us`` timings printed by ``--exercise`` but never
+band-compared.
+
 ``--update`` regenerates the CSV after an intentional change (new rows
 are an error until recorded here, so additions stay deliberate).
 
@@ -49,6 +56,16 @@ WALLCLOCK_BASELINE = os.path.join(
 PAGED_BASELINE = os.path.join(
     os.path.dirname(os.path.abspath(__file__)),
     "baselines", "paged_attention_baseline.csv")
+# same discipline for the serving traffic rows (benchmarks/
+# serving_bench.py): virtual-time TTFT/TPOT/goodput digests are fully
+# deterministic, so they gate like the analytic kernel columns — in
+# their own CSV, leaving the older baselines byte-identical.  Their
+# ``*_us`` replay timings are printed by --exercise but deliberately
+# excluded from the BENCH_WALLCLOCK band (whole-trace replays are far
+# noisier than kernel microbenches).
+SERVING_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "baselines", "serving_baseline.csv")
 
 
 def wallclock_enabled() -> bool:
@@ -201,6 +218,8 @@ def main(argv=None) -> int:
     # timings (interpret-mode kernel) are printed, never compared, and
     # they stay out of the wall-clock band entirely
     paged = paged_attention_rows(timed=args.exercise)
+    from benchmarks.serving_bench import serving_rows
+    serving = serving_rows(timed=args.exercise)
     if wallclock:
         # min over repetitions stabilizes the quick-mode timings enough
         # to gate on (single-shot quick timings vary several x)
@@ -208,12 +227,13 @@ def main(argv=None) -> int:
             [full] + [bench(timed=True, quick=True)
                       for _ in range(wallclock_reps() - 1)])
     if args.exercise or wallclock:
-        for r in full + paged:
+        for r in full + paged + serving:
             us = {k: v for k, v in r.items() if k.endswith("_us")}
             if us:
                 print(f"[exercise] {r['case']}: {us}")
     rows = deterministic_view(full)
     paged_rows = deterministic_view(paged)
+    serving_csv_rows = deterministic_view(serving)
 
     if args.update:
         _rows_to_csv(rows, BASELINE)
@@ -221,6 +241,9 @@ def main(argv=None) -> int:
         _rows_to_csv(paged_rows, PAGED_BASELINE)
         print(f"[check_baseline] wrote {PAGED_BASELINE} "
               f"({len(paged_rows)} rows)")
+        _rows_to_csv(serving_csv_rows, SERVING_BASELINE)
+        print(f"[check_baseline] wrote {SERVING_BASELINE} "
+              f"({len(serving_csv_rows)} rows)")
         if wallclock:
             wrows = wallclock_view(full)
             _rows_to_csv(wrows, WALLCLOCK_BASELINE)
@@ -230,7 +253,11 @@ def main(argv=None) -> int:
 
     problems = compare_against_baseline(rows)
     problems += compare_against_baseline(paged_rows, PAGED_BASELINE)
+    problems += compare_against_baseline(serving_csv_rows,
+                                         SERVING_BASELINE)
     if wallclock:
+        # serving rows stay out of the band (their *_us are whole-trace
+        # replays, not kernel timings) — analytic gate only
         problems += compare_wallclock(full, tol=wallclock_tolerance())
     if problems:
         for p in problems:
@@ -238,7 +265,8 @@ def main(argv=None) -> int:
         return 1
     gate = " + wall-clock band" if wallclock else ""
     print(f"[check_baseline] OK: {len(rows)} + {len(paged_rows)} "
-          f"(paged-attention) rows match the baselines" + gate)
+          f"(paged-attention) + {len(serving_csv_rows)} (serving) "
+          f"rows match the baselines" + gate)
     return 0
 
 

@@ -26,9 +26,11 @@ import json
 import os
 from typing import Any, Dict, List, Optional
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
+# chip constants shared with the serving engine's swap-vs-recompute
+# crossover (ONE home: repro/sim/chip.py — re-exported here so the
+# historical `from benchmarks.roofline import PEAK_FLOPS` keeps working
+# and cannot drift from the engine's view)
+from repro.sim.chip import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: F401
 
 _PARAM_CACHE: Dict[str, Dict[str, float]] = {}
 

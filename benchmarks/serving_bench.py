@@ -1,0 +1,143 @@
+"""Headline serving rows: seeded traffic traces through ``ServeEngine``
+with deterministic TTFT/TPOT/goodput digests.
+
+Each row replays one fixed :class:`repro.sim.traffic.TrafficConfig`
+through a smoke-config engine and reports the virtual-time summary from
+serve/metrics.py — request counts, TTFT/TPOT percentiles (engine-step
+units), goodput, queue-depth/occupancy percentiles, and the final
+paging counters.  Every gated column is computed in VIRTUAL time
+(engine steps), so the rows are deterministic across machines and CI-
+gateable next to the analytic kernel baselines
+(benchmarks/baselines/serving_baseline.csv via check_baseline.py).
+
+Rows:
+
+  * ``serve_bursty_shared`` — the headline: bursty (MMPP) arrivals
+    with a shared-system-prompt mix over a default-sized pool; the
+    prefix-hit counter shows the chain-hash reuse path firing under
+    load.
+  * ``serve_smallpool_{auto,swap,recompute}`` — the same small-pool
+    profile the property suite uses (6 blocks < the full-batch floor),
+    one row per preemption policy, characterizing how victim choice +
+    resume path trade preemptions/swaps/recompute against TTFT/TPOT.
+
+Wall-clock enters only as ``*_us`` columns (replay wall time and
+us/step) when ``timed=True`` — printed by ``check_baseline
+--exercise``, stripped by ``deterministic_view`` before gating, and
+deliberately NOT part of the BENCH_WALLCLOCK band (a whole-trace
+replay is far noisier than a kernel microbench; see docs/serving.md
+§benchmark gates).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List
+
+# the property-suite smoke geometry (tests/test_serve_properties.py):
+# tiny dims, real scheduler/pool/kernel paths
+ARCH = "granite-34b"
+SLOTS = 2
+MAX_LEN = 32
+BLOCK_SIZE = 8
+CHUNK = 8
+SMALL_POOL = 6           # below the full-batch floor -> preemption
+
+# fixed seeded workloads (step units).  The headline mix: bursty
+# arrivals, 60% of prompts opening with one of two 16-token system
+# prompts (2 full blocks at BLOCK_SIZE=8 -> real chain-hash hits).
+HEADLINE_TRAFFIC = dict(seed=7, n_requests=24, process="bursty",
+                        rate=0.5, prompt_len=(6, 24), max_new=(1, 5),
+                        n_prefix_pools=2, shared_frac=0.6,
+                        prefix_len=(16, 16))
+# the small-pool stress: dense bursts of LONG requests — two slots of
+# plen ~24 + several decode tokens want 4 blocks each, 8 > 6, so the
+# pool overflows and the preemption policy decides who survives
+SMALL_POOL_TRAFFIC = dict(seed=11, n_requests=12, process="bursty",
+                          rate=1.5, burst_factor=8.0, burst_len=8.0,
+                          idle_len=10.0, prompt_len=(20, 24),
+                          max_new=(4, 8), n_prefix_pools=1,
+                          shared_frac=0.5, prefix_len=(16, 16))
+
+# ONE compiled step shared across every engine in the bench (fixed
+# (slots, chunk) shape; jax.jit keys the pool shapes internally) —
+# per-engine closures would recompile identical HLO per row
+_SHARED: Dict[str, Any] = {}
+
+
+def _engine(num_blocks=None, preempt: str = "auto",
+            prefix_reuse: Any = "auto"):
+    from repro.sim.traffic import smoke_engine
+    eng, _ = smoke_engine(ARCH, slots=SLOTS, max_len=MAX_LEN,
+                          block_size=BLOCK_SIZE, chunk=CHUNK,
+                          num_blocks=num_blocks, preempt=preempt,
+                          prefix_reuse=prefix_reuse)
+    if "step" not in _SHARED:
+        _SHARED["step"] = eng._step
+        _SHARED["copy"] = eng._copy_step
+    else:
+        eng._step = _SHARED["step"]
+        eng._copy_step = _SHARED["copy"]
+    return eng
+
+
+def _row(case: str, traffic_kw: Dict[str, Any], timed: bool,
+         **engine_kw) -> Dict[str, Any]:
+    from repro.sim.traffic import (TrafficConfig, generate_trace,
+                                   run_trace)
+    eng = _engine(**engine_kw)
+    tcfg = TrafficConfig(vocab_size=eng.cfg.vocab_size, **traffic_kw)
+    trace = generate_trace(tcfg)
+    t0 = time.perf_counter()
+    res = run_trace(eng, trace)
+    wall = time.perf_counter() - t0
+    row: Dict[str, Any] = {
+        "case": case,
+        "process": tcfg.process,
+        "n_requests": tcfg.n_requests,
+        "slots": SLOTS,
+        "num_blocks": eng.pool.num_blocks,
+        "preempt": eng.preempt,
+    }
+    row.update(res.summary())
+    # sustained-drift verdicts are part of the gated row: a scheduler
+    # change that makes queue depth or rolling TTFT p99 drift under the
+    # fixed workload flips these bits
+    for metric in ("queue_depth", "ttft_p99"):
+        rep = res.drift(metric)
+        row[f"drift_{metric}_flagged"] = int(rep.flagged)
+    if timed:
+        row["trace_wall_us"] = wall * 1e6
+        row["per_step_us"] = wall * 1e6 / max(res.steps, 1)
+    return row
+
+
+def serving_rows(timed: bool = False) -> List[Dict[str, Any]]:
+    rows = [_row("serve_bursty_shared", HEADLINE_TRAFFIC, timed)]
+    for mode in ("auto", "swap", "recompute"):
+        # the swap row disables prefix matching (as in the property
+        # suite) so every resume exercises the host-arena restore path
+        rows.append(_row(
+            f"serve_smallpool_{mode}", SMALL_POOL_TRAFFIC, timed,
+            num_blocks=SMALL_POOL, preempt=mode,
+            prefix_reuse=(False if mode == "swap" else "auto")))
+    return rows
+
+
+def main() -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--timed", action="store_true",
+                    help="also report replay wall time (*_us, printed "
+                         "only — never gated)")
+    args = ap.parse_args()
+    for r in serving_rows(timed=args.timed):
+        print(f"== {r['case']} ==")
+        for k, v in r.items():
+            if k != "case":
+                print(f"  {k}: {v}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -80,6 +80,7 @@ from repro.models import transformer as tfm
 from repro.nn.linear import TernaryPolicy
 from repro.serve.block_pool import (ROOT_HASH, BlockPool, chain_hash,
                                     default_num_blocks)
+from repro.sim.chip import HOST_LINK_BW, PEAK_FLOPS
 
 
 # ---------------------------------------------------------------------------
@@ -338,13 +339,13 @@ def write_kv_block(caches, dst, values):
 
 _write_kv_block_jit = jax.jit(write_kv_block, donate_argnums=(0,))
 
-# Swap-vs-recompute crossover constants (the roofline estimate; see
-# benchmarks/roofline.py for the chip model).  Recompute replays the
-# dropped tokens through the model at PEAK_FLOPS; swap round-trips the
-# blocks' KV bytes over the host link.  Laptop-honest defaults: 197
-# TFLOP/s bf16 and a 16 GB/s PCIe-class host link.
-PEAK_FLOPS = 197e12
-HOST_LINK_BW = 16e9
+# Swap-vs-recompute crossover constants (the roofline estimate):
+# recompute replays the dropped tokens through the model at PEAK_FLOPS;
+# swap round-trips the blocks' KV bytes over the host link.  Imported
+# at the top from repro.sim.chip — the ONE home shared with
+# benchmarks/roofline.py, so the preemption crossover and the roofline
+# model cannot drift apart (re-exported here for callers/tests that
+# patch the engine's view of them).
 
 # row-wise update of the device-resident block-table mirror (module
 # scope: one compile per table shape, shared across engines)
@@ -378,6 +379,23 @@ class Request:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     prefix_hit_tokens: int = 0   # prompt tokens served from shared blocks
+    # request finished because the cache filled (cache_len hit max_len)
+    # BEFORE max_new_tokens was produced — a shortened answer the caller
+    # previously could not distinguish from a complete one
+    truncated: bool = False
+    # lifecycle instrumentation (engine-step indices, the engine's
+    # virtual clock): when the request was submitted and at which step
+    # each output token was emitted — token_steps[j] is the step index
+    # that produced out_tokens[j] (the two lists stay aligned, across
+    # preemption/resume too).  serve/metrics.py derives TTFT/TPOT from
+    # these; -1 / empty until the events happen.
+    submit_step: int = -1
+    token_steps: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def first_token_step(self) -> int:
+        """Step index of the first emitted token (-1 before it exists)."""
+        return self.token_steps[0] if self.token_steps else -1
 
 
 class ServeEngine:
@@ -420,7 +438,19 @@ class ServeEngine:
     the roofline crossover.  Victims are the youngest prefilling slots
     first; preempted requests resume from the queue front and always
     complete (tests/test_preemption.py and the small-pool property
-    profile).  Recurrent/media stacks always recompute.
+    profile).  Recurrent/media stacks always recompute.  ``'none'``
+    disables preemption entirely — allocation failures shrink or skip
+    the requester's chunk, which on an undersized pool can LIVELOCK;
+    ``run_until_done`` detects the no-progress spin and raises instead
+    of burning host CPU.
+
+    Per-request lifecycle is instrumented on the engine's virtual
+    clock (``iters``, +1 per ``step()`` call): ``Request.submit_step``
+    and ``Request.token_steps`` record when the request arrived and at
+    which step each output token was emitted — serve/metrics.py turns
+    these into TTFT/TPOT/goodput digests, and ``stats()`` exposes the
+    cumulative counters (plus occupancy gauges) a per-step telemetry
+    stream diffs (docs/serving.md §telemetry).
 
     Scheduler state is host-side numpy; the only device->host transfer
     per step is the explicit fetch of the sampled tokens
@@ -435,7 +465,7 @@ class ServeEngine:
                  prefix_reuse: Any = "auto", preempt: str = "auto"):
         assert oversize in ("error", "truncate"), oversize
         assert chunk >= 1, chunk
-        assert preempt in ("auto", "swap", "recompute"), preempt
+        assert preempt in ("auto", "swap", "recompute", "none"), preempt
         self.params = params
         self.cfg = cfg
         self.slots = batch_slots
@@ -501,7 +531,12 @@ class ServeEngine:
                 "without media: recurrent SSM/conv state cannot be "
                 "restored at a partial-coverage resume point — use "
                 "preempt='auto' (or 'recompute') for this architecture")
-        self.preempt = preempt if swap_sound else "recompute"
+        # 'none' disables preemption entirely (allocation failures just
+        # shrink/skip the requester's chunk): the regime where an
+        # undersized pool can genuinely LIVELOCK — run_until_done's
+        # no-progress detector raises instead of spinning there
+        self.preempt = preempt if (swap_sound or preempt == "none") \
+            else "recompute"
         self.pool = BlockPool(num_blocks, self.block_size)
 
         self.caches = tfm.init_paged_caches(cfg, batch_slots, num_blocks,
@@ -522,6 +557,11 @@ class ServeEngine:
         self.slot_chain: List[List[bytes]] = [[] for _ in range(batch_slots)]
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        # the engine's virtual clock: count of step() calls (no-op
+        # iterations included) — the step index every lifecycle event
+        # (submit/token emission) is stamped with
+        self.iters = 0
+        self.truncated_requests = 0
         self.d2h_fetches = 0
         self.n_step_compiles = 0
         self.prefix_hit_tokens = 0
@@ -593,6 +633,7 @@ class ServeEngine:
                 f"capacity max_len={self.max_len}; resubmit a shorter "
                 f"prompt or construct the engine with "
                 f"oversize='truncate'")
+        req.submit_step = self.iters     # lifecycle: arrival stamp
         self.queue.append(req)
 
     def _next_key(self):
@@ -934,6 +975,8 @@ class ServeEngine:
         while self.slot_nblocks[i] < need:
             bid = self.pool.try_allocate()
             if bid is None:
+                if self.preempt == "none":
+                    return False      # never evict anyone; caller shrinks
                 victim = self._pick_victim(i, allow_decode_victims)
                 if victim is None:
                     return False
@@ -1043,6 +1086,13 @@ class ServeEngine:
         # it exists iff cache_len < max_len
         if len(req.out_tokens) >= req.max_new_tokens or \
                 int(self.cache_len[i]) >= self.max_len:
+            # cache-full finish BEFORE the requested budget is a
+            # truncation — flagged on the request and counted in
+            # stats() so callers can tell a shortened answer from a
+            # complete one
+            if len(req.out_tokens) < req.max_new_tokens:
+                req.truncated = True
+                self.truncated_requests += 1
             req.done = True
             self.finished.append(req)
             self.slot_req[i] = None
@@ -1061,7 +1111,15 @@ class ServeEngine:
             self.pool.register(int(self.block_tables[i, jb]), h)
 
     def step(self):
-        """One engine iteration: admit -> one unified mixed step."""
+        """One engine iteration: admit -> one unified mixed step.
+
+        Every call advances the virtual clock ``iters`` by one —
+        including no-op iterations where nothing could be scheduled —
+        so lifecycle stamps (``Request.submit_step`` /
+        ``token_steps``) live on one monotone step axis.
+        """
+        this_step = self.iters
+        self.iters += 1
         self._admit()
         tokens, n_new, slot_map, decode_slots, finishing = self._schedule()
         if not n_new.any():
@@ -1112,6 +1170,7 @@ class ServeEngine:
         for i in decode_slots:
             req = self.slot_req[i]
             req.out_tokens.append(int(toks[i]))
+            req.token_steps.append(this_step)
             self._finish_check(i)
         for i in finishing:
             if self._skip_sample[i]:
@@ -1123,21 +1182,103 @@ class ServeEngine:
                 continue
             req = self.slot_req[i]
             req.out_tokens.append(int(toks[i]))   # first generated token
+            req.token_steps.append(this_step)
             self._finish_check(i)
 
-    def run_until_done(self, max_iters: int = 10000):
+    def _progress_signature(self) -> Tuple[int, ...]:
+        """Monotone counters that MUST move if an iteration did real
+        work: scheduling tokens, finishing requests, preempting a
+        victim, or admitting/restoring prompt tokens.  Two identical
+        consecutive signatures mean the step was a pure spin."""
+        return (self.scheduled_tokens, len(self.finished),
+                self.preemptions, self.admitted_prompt_tokens,
+                self.prefix_hit_tokens, self.swapped_in_tokens)
+
+    def _pending_report(self) -> str:
+        """Human-readable stuck-state summary for drain-loop errors:
+        which requests are queued / mid-flight and what the pool holds."""
+        queued = [r.uid for r in self.queue]
+        active = {
+            self.slot_req[i].uid:
+                f"slot {i}: fill {int(self.slot_fill[i])}/"
+                f"{len(self.slot_prompt[i])}, cache_len "
+                f"{int(self.cache_len[i])}, blocks "
+                f"{int(self.slot_nblocks[i])}"
+            for i in self._active_slots()}
+        return (f"queued uids={queued}, active={active}, pool: "
+                f"{self.pool.blocks_free} free / "
+                f"{self.pool.blocks_in_use} in use / "
+                f"{self.pool.blocks_cached} cached of "
+                f"{self.pool.num_blocks} blocks, preempt="
+                f"{self.preempt!r}")
+
+    def run_until_done(self, max_iters: int = 10000,
+                       stall_iters: int = 8) -> List[Request]:
+        """Drive ``step()`` until every submitted request finishes.
+
+        Returns ``finished`` only when the engine actually DRAINED
+        (empty queue, no active slots).  The two failure modes that
+        used to be silent are now loud:
+
+        * **iteration cap** — work remains after ``max_iters`` steps:
+          raises instead of returning a partial ``finished`` list the
+          caller cannot distinguish from a complete one;
+        * **livelock** — ``stall_iters`` consecutive iterations make no
+          progress (nothing scheduled, admitted, finished, preempted,
+          or swapped in — e.g. an undersized pool with
+          ``preempt='none'``): raises naming the stuck requests and the
+          pool state instead of spinning host CPU forever.
+
+        Progress is read from the engine's monotone counters
+        (``_progress_signature``), so a no-op ``step()`` is detected
+        without any device sync.
+        """
         it = 0
-        while (self.queue or self._active_slots()) and it < max_iters:
+        stalled = 0
+        sig = self._progress_signature()
+        while self.queue or self._active_slots():
+            if it >= max_iters:
+                raise RuntimeError(
+                    f"run_until_done: iteration-capped — work remains "
+                    f"after {it} iterations ({len(self.finished)} "
+                    f"requests finished); raise max_iters or inspect "
+                    f"the backlog: " + self._pending_report())
             self.step()
             it += 1
+            new_sig = self._progress_signature()
+            stalled = stalled + 1 if new_sig == sig else 0
+            sig = new_sig
+            if stalled >= stall_iters:
+                raise RuntimeError(
+                    f"run_until_done: no progress for {stalled} "
+                    f"consecutive iterations (livelock — the scheduler "
+                    f"can neither schedule tokens nor admit, finish, "
+                    f"or preempt anything): " + self._pending_report())
         return self.finished
 
     # -- introspection / invariants ----------------------------------------
 
+    @property
+    def output_tokens(self) -> int:
+        """Total output tokens emitted so far, in-flight requests
+        included (monotone: preempted requests keep their out_tokens
+        while queued, so nothing is ever double- or un-counted)."""
+        live = sum(len(self.slot_req[i].out_tokens)
+                   for i in self._active_slots())
+        return live + sum(len(r.out_tokens) for r in self.finished) \
+            + sum(len(r.out_tokens) for r in self.queue)
+
     def stats(self) -> Dict[str, int]:
-        """Per-engine paging and reuse counters (cumulative except the
-        block-occupancy gauges)."""
+        """Per-engine paging and reuse counters.
+
+        Everything here is a cumulative COUNTER (monotone; per-step
+        deltas are the rates — serve/metrics.counter_deltas computes
+        them) except the GAUGES ``blocks_in_use`` / ``blocks_cached``
+        / ``preempted_waiting`` / ``preemptable_pool``, which are
+        instantaneous occupancy readings (serve/metrics.GAUGES names
+        the split; docs/serving.md §telemetry)."""
         return {
+            "steps": self.iters,
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "scheduled_tokens": self.scheduled_tokens,
             "scheduled_prefill_tokens": self.scheduled_prefill_tokens,
@@ -1151,6 +1292,10 @@ class ServeEngine:
             "swapped_in_tokens": self.swapped_in_tokens,
             "swap_d2h_fetches": self.swap_d2h_fetches,
             "recompute_tokens": self.recompute_tokens,
+            "truncated_requests": self.truncated_requests,
+            "finished_requests": len(self.finished),
+            "output_tokens": self.output_tokens,
+            "d2h_fetches": self.d2h_fetches,
             "preempted_waiting": len(self._resume),
             "preemptable_pool": int(self.preemptable),
         }

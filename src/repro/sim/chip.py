@@ -1,0 +1,25 @@
+"""Shared chip/host roofline constants — ONE home for the numbers the
+serving stack and the benchmark analyses both price against.
+
+These used to be duplicated (``serve/engine.py`` vs
+``benchmarks/roofline.py``), which let the preemption swap-vs-recompute
+crossover and the roofline model drift apart silently; both now import
+from here.  The numbers model a TPU v5e-class chip (the assignment's
+target) with a PCIe-class host link:
+
+  * ``PEAK_FLOPS``   — 197 TFLOP/s bf16 matmul peak.
+  * ``HBM_BW``       — 819 GB/s HBM bandwidth.
+  * ``LINK_BW``      — ~50 GB/s per ICI link (collective wire model).
+  * ``HOST_LINK_BW`` — 16 GB/s host<->device link (the preemption swap
+    arena round-trips KV blocks over this; laptop-honest PCIe class).
+
+Distinct from ``sim/hwmodel.py``, which holds the *paper's* TiM-tile
+constants (SPICE/RTL-calibrated, 32 nm) — those model the accelerator
+being reproduced, these model the chip the reproduction runs on.
+"""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HOST_LINK_BW = 16e9

@@ -1,0 +1,325 @@
+"""Fleet-scale traffic harness: seeded load generation + virtual-time
+replay against ``ServeEngine``.
+
+TiM-DNN's headline numbers come from a simulator *calibrated against
+measured behavior*; this module applies the same discipline to the
+serving stack.  ``sim/workloads.py`` and the dry-run cost model price
+single steps — here, instead, a deterministic arrival process drives
+the engine request-by-request so the policies that only matter under
+pressure (preemption victim choice, swap-vs-recompute crossover,
+eviction order, token-budget sizing) are exercised and *measured*:
+TTFT/TPOT/goodput/queue-depth digests via serve/metrics.py, engine
+counters snapshotted every step, sustained-drift detection over any of
+those streams.
+
+Everything runs in VIRTUAL time: one engine ``step()`` is one clock
+tick, arrivals are scheduled in step units, and the engine's own
+``iters`` counter is the clock (idle ticks while waiting for the next
+arrival are no-op steps — the scheduler runs, nothing is scheduled, no
+device work happens).  Determinism is therefore total: a seeded
+``TrafficConfig`` fixes the arrival times, prompts, sharing structure
+and decode lengths, and since request completion is length-based (not
+content-based) the whole schedule — admissions, preemptions, finish
+steps, every TTFT/TPOT digest — replays identically run over run.
+That is what lets benchmarks/serving_bench.py gate a headline serving
+row in CI (wall-clock never enters the gated columns).
+
+Arrival processes (``TrafficConfig.process``):
+
+  * ``'poisson'`` — memoryless arrivals at ``rate`` req/step, the
+    classic open-loop fleet model;
+  * ``'bursty'`` — a Markov-modulated Poisson process: exponential
+    ON phases (mean ``burst_len`` steps) arriving at ``rate *
+    burst_factor``, separated by silent OFF phases (mean
+    ``idle_len``) — queue-depth spikes and preemption pressure;
+  * ``'diurnal'`` — inhomogeneous Poisson by thinning, rate
+    ``rate * (1 + depth * sin(2*pi*t / period))`` — the day/night
+    swing, slow enough for the regression detector to see load-
+    correlated drift.
+
+The prompt mix models a shared-system-prompt fleet: ``shared_frac`` of
+requests draw their leading tokens from one of ``n_prefix_pools``
+fixed pools (exercising the chain-hash prefix-reuse path — pool
+prefixes spanning full blocks become cross-request cache hits), the
+rest are disjoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve import metrics as srv_metrics
+
+PROCESSES = ("poisson", "bursty", "diurnal")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """Seeded, fully deterministic traffic description (step units)."""
+    seed: int = 0
+    n_requests: int = 32
+    process: str = "poisson"
+    rate: float = 0.5            # mean arrivals per engine step
+    burst_factor: float = 8.0    # bursty: ON-phase rate multiplier
+    burst_len: float = 6.0       # bursty: mean ON-phase steps
+    idle_len: float = 18.0       # bursty: mean OFF-phase steps
+    period: float = 64.0         # diurnal: steps per cycle
+    depth: float = 0.9           # diurnal: modulation depth in [0, 1)
+    prompt_len: Tuple[int, int] = (4, 24)      # inclusive range
+    max_new: Tuple[int, int] = (1, 6)          # inclusive range
+    n_prefix_pools: int = 2      # shared system prompts
+    shared_frac: float = 0.5     # fraction drawing from a shared pool
+    prefix_len: Tuple[int, int] = (8, 16)      # pool prefix length range
+    vocab_size: int = 512
+
+    def __post_init__(self):
+        assert self.process in PROCESSES, self.process
+        assert self.rate > 0 and self.n_requests >= 1
+        assert 0.0 <= self.depth < 1.0, self.depth
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One generated request: arrival time (virtual steps) + payload."""
+    uid: int
+    time: float
+    prompt: np.ndarray           # (plen,) int32
+    max_new_tokens: int
+    pool: int                    # shared-prefix pool id, -1 = disjoint
+
+
+def _arrival_times(cfg: TrafficConfig, rng: np.random.Generator
+                   ) -> np.ndarray:
+    n = cfg.n_requests
+    if cfg.process == "poisson":
+        return np.cumsum(rng.exponential(1.0 / cfg.rate, size=n))
+    if cfg.process == "bursty":
+        times: List[float] = []
+        t, on = 0.0, True
+        on_rate = cfg.rate * cfg.burst_factor
+        while len(times) < n:
+            dur = rng.exponential(cfg.burst_len if on else cfg.idle_len)
+            if on:
+                tt = t + rng.exponential(1.0 / on_rate)
+                while tt < t + dur and len(times) < n:
+                    times.append(tt)
+                    tt += rng.exponential(1.0 / on_rate)
+            t += dur
+            on = not on
+        return np.asarray(times)
+    # diurnal: thinning against the envelope rate_max = rate * (1+depth)
+    rmax = cfg.rate * (1.0 + cfg.depth)
+    times = []
+    t = 0.0
+    while len(times) < n:
+        t += rng.exponential(1.0 / rmax)
+        lam = cfg.rate * (1.0 + cfg.depth
+                          * math.sin(2.0 * math.pi * t / cfg.period))
+        if rng.random() * rmax < lam:
+            times.append(t)
+    return np.asarray(times)
+
+
+def generate_trace(cfg: TrafficConfig) -> List[Arrival]:
+    """The full deterministic trace: same config => identical arrival
+    times, prompts, sharing structure, and decode budgets."""
+    rng = np.random.default_rng(cfg.seed)
+    lo_f, hi_f = cfg.prefix_len
+    prefixes = [
+        rng.integers(1, cfg.vocab_size,
+                     int(rng.integers(lo_f, hi_f + 1))).astype(np.int32)
+        for _ in range(cfg.n_prefix_pools)]
+    times = _arrival_times(cfg, rng)
+    lo, hi = cfg.prompt_len
+    out: List[Arrival] = []
+    for uid, t in enumerate(times):
+        plen = int(rng.integers(lo, hi + 1))
+        pool = -1
+        if cfg.n_prefix_pools and float(rng.random()) < cfg.shared_frac:
+            pool = int(rng.integers(cfg.n_prefix_pools))
+        prompt = rng.integers(1, cfg.vocab_size, plen).astype(np.int32)
+        if pool >= 0 and plen > 1:
+            # leading tokens from the pool prefix, always >= 1 fresh
+            # tail token (the engine recomputes the last prompt token
+            # for logits anyway; a fresh tail keeps pools from aliasing
+            # whole prompts)
+            k = min(len(prefixes[pool]), plen - 1)
+            prompt[:k] = prefixes[pool][:k]
+        out.append(Arrival(
+            uid=uid, time=float(t), prompt=prompt,
+            max_new_tokens=int(rng.integers(cfg.max_new[0],
+                                            cfg.max_new[1] + 1)),
+            pool=pool))
+    return out
+
+
+@dataclasses.dataclass
+class TraceResult:
+    """Replay outcome: requests in arrival order, per-step snapshots
+    (``ServeEngine.stats()`` + queue/slot gauges), and the digests."""
+    requests: List[Any]                 # serve.engine.Request, uid order
+    snapshots: List[Dict[str, Any]]
+    steps: int
+
+    def digest(self, ndigits: int = 4) -> Dict[str, float]:
+        """The TTFT/TPOT percentile digest (deterministic per trace)."""
+        return srv_metrics.request_digest(self.requests, ndigits=ndigits)
+
+    def summary(self, ndigits: int = 4) -> Dict[str, Any]:
+        return srv_metrics.summarize(self.requests, self.snapshots,
+                                     self.steps, ndigits=ndigits)
+
+    def counter_deltas(self) -> List[Dict[str, Any]]:
+        return srv_metrics.counter_deltas(self.snapshots)
+
+    def series(self, metric: str) -> List[float]:
+        """A per-step metric stream for the drift detector: gauges are
+        sampled raw, counters as per-step deltas; ``'ttft_p99'`` is the
+        rolling (window 8) TTFT p99 in first-token order."""
+        if metric == "ttft_p99":
+            done = sorted((r for r in self.requests if r.token_steps),
+                          key=lambda r: (r.token_steps[0], r.uid))
+            ttfts = [srv_metrics.ttft_steps(r) for r in done]
+            return srv_metrics.rolling_percentile(
+                [t for t in ttfts if t is not None], q=99, window=8)
+        if metric in srv_metrics.GAUGES:
+            return [float(s[metric]) for s in self.snapshots]
+        return [float(d[metric]) for d in self.counter_deltas()]
+
+    def drift(self, metric: str = "queue_depth", window: int = 16,
+              tolerance: float = 0.25, patience: int = 4
+              ) -> srv_metrics.DriftReport:
+        """Run the median-window regression detector over a metric
+        stream (docs/serving.md §telemetry)."""
+        return srv_metrics.detect_drift(self.series(metric),
+                                        window=window,
+                                        tolerance=tolerance,
+                                        patience=patience)
+
+
+def run_trace(engine, trace: Sequence[Arrival],
+              max_steps: int = 100_000, stall_iters: int = 8,
+              requests: Optional[List[Any]] = None) -> TraceResult:
+    """Replay a trace through the engine in virtual time.
+
+    Each loop iteration submits every arrival whose time has come
+    (``time <= engine.iters``) and runs ONE engine step; idle gaps
+    between bursts are no-op steps (the clock still ticks).  The same
+    no-progress detector as ``ServeEngine.run_until_done`` guards the
+    drain: ``stall_iters`` consecutive zero-progress steps *while the
+    engine has work* raise RuntimeError instead of spinning.
+
+    ``requests`` lets the caller pass pre-built Request objects (uid
+    order must match the trace); by default they are constructed here.
+    Returns a :class:`TraceResult`.
+    """
+    from repro.serve.engine import Request
+    if requests is None:
+        requests = [Request(uid=a.uid, prompt=a.prompt.copy(),
+                            max_new_tokens=a.max_new_tokens)
+                    for a in trace]
+    assert len(requests) == len(trace)
+    pending = sorted(zip(trace, requests), key=lambda p: (p[0].time,
+                                                          p[0].uid))
+    pending = list(pending)[::-1]          # pop() from the back = FIFO
+    snapshots: List[Dict[str, Any]] = []
+    stalled = 0
+    sig = engine._progress_signature()
+    t0 = engine.iters
+    while pending or engine.queue or engine._active_slots():
+        if engine.iters - t0 >= max_steps:
+            raise RuntimeError(
+                f"run_trace: step cap {max_steps} reached with "
+                f"{len(pending)} arrivals pending — "
+                + engine._pending_report())
+        while pending and pending[-1][0].time <= engine.iters:
+            engine.submit(pending.pop()[1])
+        had_work = bool(engine.queue or engine._active_slots())
+        engine.step()
+        snap = dict(engine.stats())
+        snap["step"] = engine.iters
+        snap["queue_depth"] = len(engine.queue)
+        snap["active_slots"] = len(engine._active_slots())
+        snapshots.append(snap)
+        if had_work:
+            new_sig = engine._progress_signature()
+            stalled = stalled + 1 if new_sig == sig else 0
+            sig = new_sig
+            if stalled >= stall_iters:
+                raise RuntimeError(
+                    f"run_trace: no progress for {stalled} consecutive "
+                    f"iterations (livelock): "
+                    + engine._pending_report())
+        else:
+            stalled = 0
+            sig = engine._progress_signature()
+    return TraceResult(requests=requests, snapshots=snapshots,
+                       steps=engine.iters - t0)
+
+
+def smoke_engine(arch: str = "granite-34b", slots: int = 2,
+                 max_len: int = 32, block_size: int = 8, chunk: int = 8,
+                 num_blocks: Optional[int] = None,
+                 preempt: str = "auto", prefix_reuse="auto",
+                 seed: int = 0):
+    """A small ternarized engine for harness smokes/benches (smoke
+    config: tiny dims, real scheduler/pool/kernel paths)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+    from repro.serve.engine import ServeEngine, ternarize_model
+    cfg = get_config(arch, smoke=True)
+    params = ternarize_model(tfm.init(cfg, jax.random.PRNGKey(seed)), cfg)
+    return ServeEngine(params, cfg, batch_slots=slots, max_len=max_len,
+                       chunk=chunk, block_size=block_size,
+                       num_blocks=num_blocks, preempt=preempt,
+                       prefix_reuse=prefix_reuse), cfg
+
+
+def main(argv=None) -> int:
+    """CLI smoke: generate a seeded trace, replay it, print the digest
+    and drift report — the CI fast-tier harness smoke."""
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--process", default="bursty", choices=PROCESSES)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rate", type=float, default=0.4)
+    ap.add_argument("--arch", default="granite-34b")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=32)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--num-blocks", type=int, default=None)
+    ap.add_argument("--preempt", default="auto",
+                    choices=("auto", "swap", "recompute", "none"))
+    args = ap.parse_args(argv)
+
+    eng, cfg = smoke_engine(args.arch, args.slots, args.max_len,
+                            args.block_size, args.chunk,
+                            args.num_blocks, args.preempt)
+    tcfg = TrafficConfig(seed=args.seed, n_requests=args.requests,
+                         process=args.process, rate=args.rate,
+                         prompt_len=(4, args.max_len - 8),
+                         vocab_size=cfg.vocab_size)
+    trace = generate_trace(tcfg)
+    res = run_trace(eng, trace)
+    print(f"[traffic] {args.process} x {args.requests} requests through "
+          f"{args.arch} (slots={args.slots}, pool="
+          f"{eng.pool.num_blocks} blocks, preempt={eng.preempt!r}):")
+    for k, v in sorted(res.summary().items()):
+        print(f"  {k}: {v}")
+    for metric in ("queue_depth", "ttft_p99"):
+        rep = res.drift(metric)
+        print(f"  drift[{metric}]: flagged={rep.flagged} "
+              f"worst_ratio={rep.worst_ratio:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -37,6 +37,16 @@ of the six:
      bit-exactly (the direct byte-compare regression lives in
      tests/test_preemption.py).
 
+Every profile also checks the per-request lifecycle stamps (ISSUE-6
+telemetry): ``token_steps`` strictly increasing, one stamp per output
+token, and the first token at or after the submit step — what the
+TTFT/TPOT digests in serve/metrics.py are computed from.
+
+A third profile replays seeded BURSTY traces from sim/traffic.py
+(MMPP arrivals, shared-prefix pools) through the engine in virtual
+time with the same per-step checks — the harness's arrival schedule
+composed with invariants 1-6.
+
 Token accounting under preemption closes against the engine's
 ``admitted_prompt_tokens`` (re-admissions included):
 ``scheduled_prefill + prefix_hit + swapped_in == admitted``.
@@ -118,6 +128,19 @@ def _step_checked(eng):
             f"decode stalled: uid={req.uid}"          # invariant 3
 
 
+def _check_lifecycle(reqs):
+    """Telemetry stamps: strictly increasing token_steps, one stamp per
+    emitted token, first token no earlier than submission."""
+    for r in reqs:
+        assert len(r.token_steps) == len(r.out_tokens), r.uid
+        assert all(a < b for a, b in
+                   zip(r.token_steps, r.token_steps[1:])), r.uid
+        if r.token_steps:
+            assert r.submit_step >= 0, r.uid
+            assert r.token_steps[0] >= r.submit_step, r.uid
+            assert r.first_token_step == r.token_steps[0], r.uid
+
+
 # one request: (shared-prefix?, prompt len, max_new, submit-gap steps)
 _REQUEST = st.tuples(st.booleans(), st.integers(1, MAX_LEN - 2),
                      st.integers(1, 3), st.integers(0, 2))
@@ -160,6 +183,8 @@ def _run_stream(state, eng, stream, seed, greedy):
     assert all(r.done for r in reqs)
     assert st_["preempted_waiting"] == 0
 
+    _check_lifecycle(reqs)
+
     # invariant 4 (and 8 on the swap profile): greedy parity with the
     # unpaged reference — bit-identical recompute/swap-restore included
     if greedy:
@@ -197,3 +222,44 @@ def test_small_pool_preemption_invariants(stream, seed, greedy, mode):
     eng = _fresh_engine(state, greedy, num_blocks=6, preempt=mode,
                         prefix_reuse=(mode != "swap"))
     _run_stream(state, eng, stream, seed, greedy)
+
+
+# bursty-trace profile: the traffic harness's MMPP arrival schedule
+# (shared-prefix pools included) replayed in virtual time with the
+# per-step checks — arrivals land whenever the trace says, idle gaps
+# are no-op steps, and the same drain/accounting/parity/lifecycle
+# invariants must hold at the end
+@settings(max_examples=max(1, MAX_EXAMPLES // 5), derandomize=True,
+          deadline=None)
+@given(st.integers(0, 2 ** 10), st.booleans())
+def test_bursty_trace_replay_invariants(seed, greedy):
+    from repro.sim.traffic import TrafficConfig, generate_trace
+    state = _setup()
+    cfg = state["cfg"]
+    eng = _fresh_engine(state, greedy)
+    tcfg = TrafficConfig(seed=seed, n_requests=5, process="bursty",
+                         rate=0.5, prompt_len=(1, MAX_LEN - 2),
+                         max_new=(1, 3), vocab_size=cfg.vocab_size)
+    trace = generate_trace(tcfg)
+    reqs = [Request(uid=a.uid, prompt=a.prompt.copy(),
+                    max_new_tokens=a.max_new_tokens) for a in trace]
+    pending = list(zip(trace, reqs))[::-1]
+    iters = 0
+    while pending or eng.queue or eng._active_slots():
+        while pending and pending[-1][0].time <= eng.iters:
+            eng.submit(pending.pop()[1])
+        _step_checked(eng)
+        iters += 1
+        assert iters < 2000
+
+    st_ = eng.stats()
+    assert st_["blocks_in_use"] == 0                     # invariant 5
+    eng.validate()
+    assert st_["scheduled_prefill_tokens"] + st_["prefix_hit_tokens"] \
+        + st_["swapped_in_tokens"] == st_["admitted_prompt_tokens"]
+    assert all(r.done for r in reqs)                     # invariant 7
+    _check_lifecycle(reqs)
+    if greedy:
+        for r in reqs:
+            assert r.out_tokens == _reference(state, r.prompt,
+                                              len(r.out_tokens)), r.uid
