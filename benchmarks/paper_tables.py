@@ -17,8 +17,8 @@ from __future__ import annotations
 from typing import Any, Dict, List, Tuple
 
 from repro.sim import hwmodel as hw
-from repro.sim.simulator import (ISO_AREA, ISO_CAP, TIM_DNN, TIM_DNN_8,
-                                 simulate, speedup_table)
+from repro.sim.simulator import (ISO_AREA, TIM_DNN, simulate,
+                                 speedup_table)
 from repro.sim.variations import (accuracy_impact_experiment,
                                   error_probability)
 from repro.sim.workloads import TABLE_III, WORKLOADS

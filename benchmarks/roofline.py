@@ -50,7 +50,6 @@ def arch_params(arch: str) -> Dict[str, float]:
     active = total
     if cfg.moe is not None:
         # inactive share of expert weights
-        import numpy as np
         layers = sds["layers"]
         expert_elems = 0
         for j, spec in enumerate(cfg.layout):

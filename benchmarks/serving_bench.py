@@ -20,6 +20,11 @@ Rows:
     profile the property suite uses (6 blocks < the full-batch floor),
     one row per preemption policy, characterizing how victim choice +
     resume path trade preemptions/swaps/recompute against TTFT/TPOT.
+  * ``serve_budget_{4,16,32}`` — the headline trace under explicit
+    per-step ``token_budget`` caps bracketing the default
+    (slots + chunk = 10): the continuous-batching knob's TTFT/TPOT
+    trade-off, gated so a scheduler change that shifts the curve shows
+    up as a baseline diff.
 
 Wall-clock enters only as ``*_us`` columns (replay wall time and
 us/step) when ``timed=True`` — printed by ``check_baseline
@@ -65,12 +70,13 @@ _SHARED: Dict[str, Any] = {}
 
 
 def _engine(num_blocks=None, preempt: str = "auto",
-            prefix_reuse: Any = "auto"):
+            prefix_reuse: Any = "auto", token_budget=None):
     from repro.sim.traffic import smoke_engine
     eng, _ = smoke_engine(ARCH, slots=SLOTS, max_len=MAX_LEN,
                           block_size=BLOCK_SIZE, chunk=CHUNK,
                           num_blocks=num_blocks, preempt=preempt,
-                          prefix_reuse=prefix_reuse)
+                          prefix_reuse=prefix_reuse,
+                          token_budget=token_budget)
     if "step" not in _SHARED:
         _SHARED["step"] = eng._step
         _SHARED["copy"] = eng._copy_step
@@ -97,6 +103,7 @@ def _row(case: str, traffic_kw: Dict[str, Any], timed: bool,
         "slots": SLOTS,
         "num_blocks": eng.pool.num_blocks,
         "preempt": eng.preempt,
+        "token_budget": eng.token_budget,
     }
     row.update(res.summary())
     # sustained-drift verdicts are part of the gated row: a scheduler
@@ -111,6 +118,15 @@ def _row(case: str, traffic_kw: Dict[str, Any], timed: bool,
     return row
 
 
+# the token_budget sizing sweep (ISSUE-7 satellite): the same headline
+# trace replayed under three explicit per-step token caps bracketing
+# the default (slots + chunk = 10) — how TTFT/TPOT/goodput respond to
+# the scheduler's continuous-batching knob.  4 starves prefill (a full
+# chunk splits across steps), 16 admits ~two chunks, 32 is effectively
+# uncapped at this geometry.
+BUDGET_SWEEP = (4, 16, 32)
+
+
 def serving_rows(timed: bool = False) -> List[Dict[str, Any]]:
     rows = [_row("serve_bursty_shared", HEADLINE_TRAFFIC, timed)]
     for mode in ("auto", "swap", "recompute"):
@@ -120,6 +136,9 @@ def serving_rows(timed: bool = False) -> List[Dict[str, Any]]:
             f"serve_smallpool_{mode}", SMALL_POOL_TRAFFIC, timed,
             num_blocks=SMALL_POOL, preempt=mode,
             prefix_reuse=(False if mode == "swap" else "auto")))
+    for budget in BUDGET_SWEEP:
+        rows.append(_row(f"serve_budget_{budget}", HEADLINE_TRAFFIC,
+                         timed, token_budget=budget))
     return rows
 
 

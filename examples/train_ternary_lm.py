@@ -15,11 +15,9 @@ import argparse
 import os
 import tempfile
 
-import jax
 
 from repro.configs import get_config
 from repro.configs.base import ArchConfig, BlockSpec
-from repro.models import transformer as tfm
 from repro.nn.module import param_count
 from repro.train.data import DataConfig
 from repro.train.optimizer import OptConfig, ScheduleConfig

@@ -1,0 +1,18 @@
+"""timcheck: repo-specific static analysis over ``src/repro``.
+
+The serving stack's hot-path contracts — "the ONE d2h fetch" per step,
+jit-boundary purity, Pallas grid/BlockSpec/VMEM consistency, the
+counter-vs-gauge telemetry split — were enforced by comments until
+ISSUE-7.  This package turns each one into an AST-level checker that
+runs in CI (``python -m repro.analysis.check``); docs/static-analysis.md
+is the catalog.
+
+Checkers (one module each, all exporting ``check(files) -> findings``):
+
+  * host_sync — device->host transfers outside pragma'd sites
+  * jit_purity — Python side effects reachable from jit/pallas_call
+  * pallas_contracts — grid/BlockSpec/index-map arity + VMEM budgets
+  * telemetry — stats()/harness keys vs the COUNTERS/GAUGES registry
+"""
+from repro.analysis.base import (Finding, SourceFile,  # noqa: F401
+                                 load_repo, run_all)

@@ -1,0 +1,142 @@
+"""Shared timcheck infrastructure: source loading, findings, pragmas.
+
+Every checker consumes a list of :class:`SourceFile` (path relative to
+``src/repro``, raw text, parsed AST, pragma table) and returns a list
+of :class:`Finding`.  Operating on in-memory sources — not the
+filesystem — is deliberate: the self-tests feed doctored copies of
+real modules (e.g. engine.py with its ``allow[d2h]`` pragma deleted)
+through the same entry points CI uses.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Tuple
+
+# ``# timcheck: allow[<rule>] <reason>`` — the reason is mandatory; an
+# unexplained suppression is itself a finding (rule ``bad-pragma``).
+_PRAGMA_RE = re.compile(
+    r"#\s*timcheck:\s*allow\[([a-z0-9_-]+)\]\s*(.*)$")
+
+# rules a pragma may name (see docs/static-analysis.md §pragmas)
+PRAGMA_RULES = ("d2h", "impure")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation: ``src/repro/<path>:<line>: [checker/rule] msg``."""
+
+    checker: str
+    rule: str
+    path: str        # relative to src/repro (or the virtual test path)
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return (f"src/repro/{self.path}:{self.line}: "
+                f"[{self.checker}/{self.rule}] {self.message}")
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+class SourceFile:
+    """One analyzed module: path + text + AST + pragma table."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path.replace(os.sep, "/")
+        self.text = text
+        self.tree = ast.parse(text, filename=self.path)
+        # line -> (rule, reason); populated once, consumed by checkers
+        self.pragmas: Dict[int, Tuple[str, str]] = {}
+        self.bad_pragmas: List[Tuple[int, str]] = []
+        self.used_pragma_lines: set = set()
+        for i, line in enumerate(text.splitlines(), 1):
+            m = _PRAGMA_RE.search(line)
+            if not m:
+                continue
+            rule, reason = m.group(1), m.group(2).strip()
+            if rule not in PRAGMA_RULES:
+                self.bad_pragmas.append(
+                    (i, f"unknown pragma rule {rule!r} "
+                        f"(have {PRAGMA_RULES})"))
+            elif not reason:
+                self.bad_pragmas.append(
+                    (i, f"allow[{rule}] pragma without a reason"))
+            else:
+                self.pragmas[i] = (rule, reason)
+
+    @property
+    def package(self) -> str:
+        """Leading path component: 'serve', 'kernels', ..."""
+        return self.path.split("/", 1)[0]
+
+    def allowed(self, node: ast.AST, rule: str) -> bool:
+        """True if a matching pragma covers ``node`` (same line, any
+        line the node spans, or the line just above the statement)."""
+        lines = {getattr(node, "lineno", 0),
+                 getattr(node, "end_lineno", 0) or 0}
+        lines.add(min(lines) - 1)
+        for ln in lines:
+            hit = self.pragmas.get(ln)
+            if hit and hit[0] == rule:
+                self.used_pragma_lines.add(ln)
+                return True
+        return False
+
+
+def load_repo(root: Optional[str] = None) -> List[SourceFile]:
+    """Load every ``src/repro/**/*.py`` under the repo root."""
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+    base = os.path.join(root, "src", "repro")
+    out = []
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames.sort()
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fn)
+            rel = os.path.relpath(full, base)
+            with open(full) as f:
+                out.append(SourceFile(rel, f.read()))
+    return out
+
+
+def pragma_findings(files: List[SourceFile]) -> List[Finding]:
+    """Malformed pragmas, and pragmas no checker consumed (suppressing
+    nothing means the code changed out from under the annotation)."""
+    out = []
+    for sf in files:
+        for line, msg in sf.bad_pragmas:
+            out.append(Finding("pragmas", "bad-pragma", sf.path, line,
+                               msg))
+        for line in sorted(set(sf.pragmas) - sf.used_pragma_lines):
+            rule, _ = sf.pragmas[line]
+            out.append(Finding(
+                "pragmas", "unused-pragma", sf.path, line,
+                f"allow[{rule}] pragma suppresses nothing — stale "
+                f"annotation; delete it or move it to the flagged "
+                f"line"))
+    return out
+
+
+def run_all(files: List[SourceFile]) -> List[Finding]:
+    """All four checkers + pragma hygiene, in catalog order.
+
+    Pragma hygiene runs LAST: ``used_pragma_lines`` is only complete
+    once every checker has had the chance to consume its pragmas.
+    """
+    from repro.analysis import (host_sync, jit_purity, pallas_contracts,
+                                telemetry)
+    findings: List[Finding] = []
+    findings += host_sync.check(files)
+    findings += jit_purity.check(files)
+    findings += pallas_contracts.check(files)
+    findings += telemetry.check(files)
+    findings += pragma_findings(files)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

@@ -1,0 +1,53 @@
+"""timcheck CLI: ``python -m repro.analysis.check [--json] [--root R]``.
+
+Runs the four checkers (host-sync, jit-purity, pallas-contract,
+telemetry) plus pragma hygiene over ``src/repro`` and exits non-zero
+if anything is flagged.  ``--json`` emits a machine-readable report
+(``{"findings": [...], "counts": {...}, "files_scanned": N}``) for
+tooling; the default text mode prints one ``path:line: [checker/rule]
+message`` row per finding, grouped summary last — the same rendering
+the CI step surfaces.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+
+from repro.analysis.base import load_repo, run_all
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check", description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="emit a JSON report instead of text")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: inferred from this file)")
+    args = ap.parse_args(argv)
+
+    files = load_repo(args.root)
+    findings = run_all(files)
+
+    if args.json:
+        report = {
+            "files_scanned": len(files),
+            "counts": dict(Counter(
+                f"{f.checker}/{f.rule}" for f in findings)),
+            "findings": [f.to_json() for f in findings],
+        }
+        print(json.dumps(report, indent=2, sort_keys=True))
+    else:
+        for f in findings:
+            print(f.render())
+        by_checker = Counter(f.checker for f in findings)
+        summary = ", ".join(f"{k}: {v}" for k, v in
+                            sorted(by_checker.items())) or "clean"
+        print(f"timcheck: {len(files)} files scanned, "
+              f"{len(findings)} findings ({summary})")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

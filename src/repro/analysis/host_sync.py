@@ -1,0 +1,127 @@
+"""Host-sync detector: device->host transfers in hot-path modules.
+
+The serving contract is ONE accounted d2h fetch per engine step
+(engine.py's sampled-token readback) plus the accounted swap-out path;
+everything else on the hot path must stay on device.  This checker
+flags every construct that forces (or strongly implies) a device->host
+sync:
+
+  * ``jax.device_get(...)`` — the explicit transfer;
+  * ``x.item()`` / ``x.block_until_ready()`` — sync methods;
+  * ``int(...)``/``float(...)``/``bool(...)`` whose argument contains a
+    ``jax.``/``jnp.``-rooted subexpression — scalar coercion of a
+    device value blocks until the value is ready;
+  * ``np.asarray``/``np.array``/``np.copy`` whose argument contains a
+    ``jax.``/``jnp.`` root, or is a sliced subscript (``v[:, idx]`` —
+    the swap-arena fetch shape): numpy materializes device arrays via
+    an implicit d2h copy.
+
+The analysis is syntactic: it sees through names only when the device
+origin is visible in the flagged expression itself (documented bound —
+``float(v)`` where ``v`` flowed from a jit call two lines up is the
+transfer_guard regression test's job, not this checker's).
+
+A ``timcheck: allow[d2h]`` pragma comment (with a mandatory reason) on
+or just above the flagged line suppresses the finding.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.base import Finding, SourceFile
+
+CHECKER = "host-sync"
+
+# hot path per ISSUE-7, plus train/ (checkpoint + corpus generation
+# hold the only sanctioned offline transfers; scanning them keeps the
+# pragma inventory exhaustive rather than scoping the sites out)
+SCANNED_PACKAGES = ("serve", "kernels", "nn", "models", "distrib",
+                    "sim", "train")
+
+_SYNC_METHODS = ("item", "block_until_ready")
+_COERCIONS = ("int", "float", "bool")
+_NP_MATERIALIZERS = ("asarray", "array", "copy")
+_DEVICE_ROOTS = ("jax", "jnp")
+
+
+def _attr_root(node: ast.AST):
+    """Leftmost Name of a dotted/called chain, e.g. jax in
+    jax.random.split(k)[0]."""
+    while True:
+        if isinstance(node, ast.Attribute):
+            node = node.value
+        elif isinstance(node, (ast.Call, ast.Subscript)):
+            node = node.func if isinstance(node, ast.Call) else node.value
+        else:
+            break
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _contains_device_expr(node: ast.AST) -> bool:
+    """True if any subexpression is rooted at ``jax``/``jnp``."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in _DEVICE_ROOTS:
+            return True
+    return False
+
+
+def _is_sliced_subscript(node: ast.AST) -> bool:
+    """``v[:, idx]`` / ``v[a:b]`` — slicing that reads as an array
+    gather rather than a host-container lookup."""
+    if not isinstance(node, ast.Subscript):
+        return False
+    sl = node.slice
+    if isinstance(sl, ast.Slice):
+        return True
+    if isinstance(sl, ast.Tuple):
+        return any(isinstance(e, ast.Slice) for e in sl.elts)
+    return False
+
+
+def _flag(findings, sf, node, rule, msg):
+    if not sf.allowed(node, "d2h"):
+        findings.append(Finding(CHECKER, rule, sf.path, node.lineno,
+                                msg))
+
+
+def check(files: List[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in files:
+        if sf.package not in SCANNED_PACKAGES:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            # jax.device_get(...)
+            if (isinstance(fn, ast.Attribute)
+                    and fn.attr == "device_get"
+                    and _attr_root(fn) == "jax"):
+                _flag(findings, sf, node, "device-get",
+                      "jax.device_get forces a device->host transfer; "
+                      "annotate accounted fetches with a "
+                      "timcheck allow[d2h] pragma and a reason")
+            # x.item() / x.block_until_ready()
+            elif (isinstance(fn, ast.Attribute)
+                    and fn.attr in _SYNC_METHODS):
+                _flag(findings, sf, node, "sync-method",
+                      f".{fn.attr}() blocks on a device value")
+            # int()/float()/bool() over a visible jax/jnp expression
+            elif (isinstance(fn, ast.Name) and fn.id in _COERCIONS
+                    and node.args
+                    and _contains_device_expr(node.args[0])):
+                _flag(findings, sf, node, "scalar-coercion",
+                      f"{fn.id}() over a jax/jnp expression is a "
+                      f"blocking scalar readback")
+            # np.asarray/np.array/np.copy materializing device values
+            elif (isinstance(fn, ast.Attribute)
+                    and fn.attr in _NP_MATERIALIZERS
+                    and _attr_root(fn) in ("np", "numpy")
+                    and node.args
+                    and (_contains_device_expr(node.args[0])
+                         or _is_sliced_subscript(node.args[0]))):
+                _flag(findings, sf, node, "np-materialize",
+                      f"np.{fn.attr} of a device-shaped value copies "
+                      f"device->host")
+    return findings

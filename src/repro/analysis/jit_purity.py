@@ -1,0 +1,421 @@
+"""Jit-boundary purity checker.
+
+Resolves every function reachable from a ``jax.jit`` / ``pl.pallas_call``
+call site (including decorator forms and ``functools.partial`` wrappers)
+and flags Python-side effects inside the traced region:
+
+  * ``print(...)`` / ``input(...)`` — runs at trace time only, silently
+    vanishes from the compiled step;
+  * stdlib / ``np.random`` randomness — trace-time constants baked into
+    the compiled program;
+  * numpy calls over *tainted* names (values assigned from ``jax``/
+    ``jnp`` expressions inside the function) — numpy forces a concrete
+    value out of a tracer;
+  * closure mutation — writes through names that live OUTSIDE the
+    traced function (``global``/``nonlocal``, or attribute/subscript
+    stores whose root is neither a parameter nor a local of any scope
+    between the store and the traced entry).  Mutating refs that are
+    parameters of the entry (the Pallas out/scratch idiom) is the
+    kernel contract, not an effect.
+
+Resolution is deliberately bounded: it follows plain names, module
+attributes via ``import``/``from ... import`` aliases into other
+``repro.*`` modules, ``functools.partial`` heads, and call-of-call
+factories (``make_step(cfg)(...)``).  Dynamic dispatch (``self.fn``)
+is skipped — the runtime transfer-guard test covers what static
+resolution cannot.
+
+A ``timcheck: allow[impure]`` pragma comment on the flagged line
+suppresses a finding (e.g. the engine's trace-time compile counter).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.base import Finding, SourceFile
+
+CHECKER = "jit-purity"
+
+SCANNED_PACKAGES = ("serve", "kernels", "nn", "models", "distrib",
+                    "sim", "train")
+_MAX_UNITS = 400          # reachability cap (cycles are also guarded)
+
+_RANDOM_ROOTS = ("random",)
+_NP_ROOTS = ("np", "numpy")
+_DEVICE_ROOTS = ("jax", "jnp")
+
+
+# ------------------------------------------------------------- indexing
+
+
+class _Module:
+    """Per-file symbol table: module-level defs + import aliases."""
+
+    def __init__(self, sf: SourceFile):
+        self.sf = sf
+        self.defs: Dict[str, ast.AST] = {}
+        self.import_mods: Dict[str, str] = {}       # alias -> dotted
+        self.from_imports: Dict[str, Tuple[str, str]] = {}
+        for node in sf.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs[node.name] = node
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    self.import_mods[a.asname or a.name.split(".")[0]] \
+                        = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.from_imports[a.asname or a.name] = (
+                        node.module, a.name)
+
+
+def _dotted(path: str) -> str:
+    mod = path[:-3].replace("/", ".")
+    if mod.endswith(".__init__"):
+        mod = mod[:-len(".__init__")]
+    return "repro." + mod
+
+
+class _Index:
+    def __init__(self, files: List[SourceFile]):
+        self.by_dotted: Dict[str, _Module] = {}
+        for sf in files:
+            self.by_dotted[_dotted(sf.path)] = _Module(sf)
+
+    def module(self, dotted: str) -> Optional[_Module]:
+        return self.by_dotted.get(dotted)
+
+    def resolve_in(self, mod: _Module, name: str, depth: int = 0):
+        """Resolve ``name`` in ``mod`` to (module, funcdef), following
+        ``from x import y`` re-export chains a few hops."""
+        if depth > 4 or mod is None:
+            return None
+        if name in mod.defs:
+            return mod, mod.defs[name]
+        if name in mod.from_imports:
+            src, orig = mod.from_imports[name]
+            target = self.module(src)
+            if target is not None:
+                return self.resolve_in(target, orig, depth + 1)
+            # ``from repro.a import b`` where b is itself a module
+            return None
+        return None
+
+
+# ------------------------------------------------------ entry discovery
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "jit"
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "jax")
+
+
+def _is_pallas_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "pallas_call"
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "pl")
+
+
+def _partial_head(call: ast.Call) -> Optional[ast.AST]:
+    """functools.partial(f, ...) -> f (also bare partial)."""
+    fn = call.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else (
+        fn.id if isinstance(fn, ast.Name) else None)
+    if name == "partial" and call.args:
+        return call.args[0]
+    return None
+
+
+def _find_entries(mod: _Module):
+    """Yield (target_expr, scope_stack) for every jit/pallas site.
+
+    ``scope_stack`` is the chain of enclosing FunctionDefs at the call
+    site, innermost last — name resolution searches it before the
+    module scope.
+    """
+    entries = []
+
+    def walk(node, stack):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # decorator forms: @jax.jit / @functools.partial(jax.jit, ..)
+            for dec in node.decorator_list:
+                if _is_jax_jit(dec):
+                    entries.append((node, stack))
+                elif isinstance(dec, ast.Call):
+                    if _is_jax_jit(dec.func):
+                        entries.append((node, stack))
+                    head = _partial_head(dec)
+                    if head is not None and _is_jax_jit(head):
+                        entries.append((node, stack))
+            stack = stack + [node]
+        elif isinstance(node, ast.Call):
+            if (_is_jax_jit(node.func) or _is_pallas_call(node.func)) \
+                    and node.args:
+                entries.append((node.args[0], stack))
+        for child in ast.iter_child_nodes(node):
+            walk(child, stack)
+
+    walk(mod.sf.tree, [])
+    return entries
+
+
+# ------------------------------------------------------ target resolution
+
+
+def _local_defs(fn: ast.AST) -> Dict[str, ast.AST]:
+    out = {}
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)
+    return out
+
+
+def _local_assigns(fn: ast.AST) -> Dict[str, ast.AST]:
+    out = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.setdefault(t.id, node.value)
+    return out
+
+
+def _resolve_target(index: _Index, mod: _Module, expr, stack,
+                    depth: int = 0):
+    """Resolve a callable expression to (module, funcdef/lambda)."""
+    if depth > 6 or expr is None:
+        return None
+    if isinstance(expr, (ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.Lambda)):
+        return mod, expr
+    if isinstance(expr, ast.Call):
+        head = _partial_head(expr)
+        if head is not None:
+            return _resolve_target(index, mod, head, stack, depth + 1)
+        # factory: make_step(cfg)(...) — follow the factory; its nested
+        # defs (the returned closure) are analyzed with it
+        return _resolve_target(index, mod, expr.func, stack, depth + 1)
+    if isinstance(expr, ast.Name):
+        for fn in reversed(stack):
+            if expr.id in _local_defs(fn):
+                return mod, _local_defs(fn)[expr.id]
+            assigned = _local_assigns(fn).get(expr.id)
+            if assigned is not None:
+                return _resolve_target(index, mod, assigned, stack,
+                                       depth + 1)
+        return index.resolve_in(mod, expr.id)
+    if isinstance(expr, ast.Attribute) and isinstance(expr.value,
+                                                      ast.Name):
+        root = expr.value.id
+        dotted = mod.import_mods.get(root)
+        if dotted is None and root in mod.from_imports:
+            src, orig = mod.from_imports[root]
+            dotted = f"{src}.{orig}"
+        if dotted is not None:
+            target = index.module(dotted)
+            if target is not None:
+                return self_resolve(index, target, expr.attr)
+    return None
+
+
+def self_resolve(index: _Index, mod: _Module, name: str):
+    return index.resolve_in(mod, name)
+
+
+# ------------------------------------------------------- effect analysis
+
+
+def _scope_locals(fn: ast.AST) -> set:
+    """Parameter and locally-bound names of one function scope."""
+    names = set()
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs):
+        names.add(a.arg)
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not stmt:
+                continue
+            if isinstance(node, ast.Name) and isinstance(
+                    node.ctx, (ast.Store, ast.Del)):
+                names.add(node.id)
+            elif isinstance(node, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef)):
+                names.add(node.name)
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                pass
+    return names
+
+
+def _store_root(target: ast.AST) -> Optional[str]:
+    node = target
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _attr_chain_root(node: ast.AST) -> Optional[str]:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _contains_any(node: ast.AST, names: set) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in names:
+            return True
+    return False
+
+
+class _EffectVisitor:
+    """Walks one reachable function (with nested defs, scope-aware)."""
+
+    def __init__(self, sf: SourceFile, findings: List[Finding]):
+        self.sf = sf
+        self.findings = findings
+        self.calls: List[Tuple[ast.AST, list]] = []
+
+    def _flag(self, node, rule, msg):
+        if not self.sf.allowed(node, "impure"):
+            self.findings.append(Finding(CHECKER, rule, self.sf.path,
+                                         node.lineno, msg))
+
+    def run(self, fn: ast.AST):
+        self._visit_fn(fn, [])
+
+    def _visit_fn(self, fn, outer_scopes):
+        scopes = outer_scopes + [_scope_locals(fn)]
+        visible = set().union(*scopes)
+        tainted = set()
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+
+        def visit(node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                self._visit_fn(node, scopes)
+                return
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                self._flag(node, "closure-mutation",
+                           f"{type(node).__name__.lower()} declaration "
+                           f"inside a traced function")
+            elif isinstance(node, ast.Assign):
+                if any(isinstance(s, ast.Name) and s.id in _DEVICE_ROOTS
+                       for s in ast.walk(node.value)):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            tainted.add(t.id)
+                self._check_store(node, node.targets, visible)
+            elif isinstance(node, ast.AugAssign):
+                self._check_store(node, [node.target], visible)
+            elif isinstance(node, ast.AnnAssign) and node.value:
+                self._check_store(node, [node.target], visible)
+            elif isinstance(node, ast.Call):
+                self._check_call(node, tainted)
+                self.calls.append((node.func, None))
+                for arg in list(node.args) + [k.value for k in
+                                              node.keywords]:
+                    # callbacks passed by name are reachable too
+                    if isinstance(arg, ast.Name):
+                        self.calls.append((arg, None))
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        for stmt in body:
+            visit(stmt)
+
+    def _check_store(self, stmt, targets, visible):
+        for t in targets:
+            if isinstance(t, ast.Name):
+                continue          # plain local rebinding: pure
+            root = _store_root(t)
+            if root is not None and root not in visible:
+                self._flag(stmt, "closure-mutation",
+                           f"store through `{root}` mutates state "
+                           f"outside the traced function (trace-time "
+                           f"side effect)")
+
+    def _check_call(self, node, tainted):
+        fn = node.func
+        name = fn.id if isinstance(fn, ast.Name) else None
+        if name in ("print", "input"):
+            self._flag(node, "print",
+                       f"{name}() inside a traced function runs at "
+                       f"trace time only")
+            return
+        root = _attr_chain_root(fn) if isinstance(fn, ast.Attribute) \
+            else None
+        if root in _RANDOM_ROOTS or (
+                root in _NP_ROOTS and isinstance(fn, ast.Attribute)
+                and isinstance(fn.value, ast.Attribute)
+                and fn.value.attr == "random"):
+            self._flag(node, "host-random",
+                       "host randomness is a trace-time constant; use "
+                       "jax.random with a threaded key")
+            return
+        if root in _NP_ROOTS:
+            args = list(node.args) + [k.value for k in node.keywords]
+            if any(_contains_any(a, tainted)
+                   or any(isinstance(s, ast.Name)
+                          and s.id in _DEVICE_ROOTS
+                          for s in ast.walk(a)) for a in args):
+                self._flag(node, "numpy-on-traced",
+                           f"np.{fn.attr} over a traced value forces "
+                           f"concretization at trace time")
+
+
+# --------------------------------------------------------------- driver
+
+
+def check(files: List[SourceFile]) -> List[Finding]:
+    index = _Index(files)
+    findings: List[Finding] = []
+
+    # seed the worklist with every resolvable jit/pallas target
+    work: List[Tuple[_Module, ast.AST]] = []
+    seen = set()
+
+    def enqueue(mod, fn):
+        key = (mod.sf.path, getattr(fn, "lineno", 0),
+               getattr(fn, "col_offset", 0))
+        if key not in seen:
+            seen.add(key)
+            work.append((mod, fn))
+
+    for sf in files:
+        if sf.package not in SCANNED_PACKAGES:
+            continue
+        mod = index.by_dotted[_dotted(sf.path)]
+        for target, stack in _find_entries(mod):
+            resolved = _resolve_target(index, mod, target, stack)
+            if resolved is not None:
+                enqueue(*resolved)
+
+    analyzed = 0
+    while work and analyzed < _MAX_UNITS:
+        mod, fn = work.pop()
+        analyzed += 1
+        visitor = _EffectVisitor(mod.sf, findings)
+        visitor.run(fn)
+        # nested defs were analyzed in-scope above; mark them seen so a
+        # by-name resolution can't re-analyze them standalone (their
+        # closure scope would be lost and findings would duplicate)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not fn:
+                seen.add((mod.sf.path, node.lineno, node.col_offset))
+        # reachability: resolve this unit's outgoing calls
+        stack = [fn]
+        for expr, _ in visitor.calls:
+            resolved = _resolve_target(index, mod, expr, stack)
+            if resolved is not None:
+                enqueue(*resolved)
+    return sorted(set(findings), key=lambda f: (f.path, f.line, f.rule))

@@ -1,0 +1,588 @@
+"""Pallas kernel-contract checker.
+
+For every ``pl.pallas_call`` site in ``kernels/``, statically extract
+the launch geometry — grid rank, BlockSpec block shapes, index-map
+arity/return rank, scratch shapes, dimension semantics — and verify
+the contracts the kernels rely on:
+
+  * grid rank == ``dimension_semantics`` length == index-map arity
+    (plus ``num_scalar_prefetch`` for prefetch grids; ``*_`` varargs
+    absorb the tail);
+  * BlockSpec block rank == the index map's returned tuple length;
+  * kernel signature arity == #inputs + #outputs + #scratch
+    (+ #prefetch operands), skipped for ``*args`` kernels;
+  * lane alignment: any resolved block/scratch dimension >= 128 must
+    be a multiple of 128 (MXU/VREG lane width) — the last dim of a
+    VMEM tile that lands on 192 is a silent padding bill;
+  * VMEM footprint (inputs + outputs + scratch blocks, elementwise
+    bytes) <= the per-kernel budget the module declares.
+
+Budgets and shape symbols are declared per kernels module as a literal
+
+    TIMCHECK_VMEM = {
+        "symbols": {"bm": 128, "bn": 256, ...},
+        "budgets": {"_my_kernel": 2 * 2**20},
+    }
+
+(see docs/static-analysis.md).  Shape expressions are evaluated under
+``symbols`` with a tiny arithmetic evaluator (names, attributes map to
+their terminal symbol, ``+ - * // / %``, ``**``, ``min``/``max``
+calls, conditional expressions take the widest branch).  A module with
+``pallas_call`` sites but no ``TIMCHECK_VMEM`` — or a kernel with no
+budget entry, or a shape whose symbols aren't declared — is an error:
+the budget table must keep pace with the kernels.
+
+Resolution follows local names through assignments, ``functools
+.partial`` heads, NamedTuple-factory attributes (``plan.in_specs`` →
+the ``_TilePlan(...)`` constructor keyword inside ``_tile_plan``), and
+list ``+=`` extensions (worst case: all conditional extensions
+included).  Sites that resolve to nothing checkable are reported as
+``unresolved`` findings rather than skipped silently.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.base import Finding, SourceFile
+
+CHECKER = "pallas-contract"
+LANE = 128
+
+_DTYPE_BYTES = {
+    "int8": 1, "uint8": 1, "int16": 2, "bfloat16": 2, "float16": 2,
+    "int32": 4, "uint32": 4, "float32": 4, "int64": 8, "float64": 8,
+}
+_DEFAULT_ELT = 4          # unresolved dtypes priced as f32 (worst case)
+
+
+class _Unresolved(Exception):
+    pass
+
+
+# ------------------------------------------------------------ evaluator
+
+
+def _eval_shape_expr(node: ast.AST, symbols: Dict[str, int]) -> int:
+    """Safe arithmetic over declared symbols; raises _Unresolved."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Name):
+        if node.id in symbols:
+            return symbols[node.id]
+        raise _Unresolved(node.id)
+    if isinstance(node, ast.Attribute):            # plan.bm -> "bm"
+        if node.attr in symbols:
+            return symbols[node.attr]
+        raise _Unresolved(node.attr)
+    if isinstance(node, ast.BinOp):
+        lhs = _eval_shape_expr(node.left, symbols)
+        rhs = _eval_shape_expr(node.right, symbols)
+        ops = {ast.Add: lambda a, b: a + b,
+               ast.Sub: lambda a, b: a - b,
+               ast.Mult: lambda a, b: a * b,
+               ast.FloorDiv: lambda a, b: a // b,
+               ast.Div: lambda a, b: a // b,
+               ast.Mod: lambda a, b: a % b,
+               ast.Pow: lambda a, b: a ** b}
+        for op_t, f in ops.items():
+            if isinstance(node.op, op_t):
+                return f(lhs, rhs)
+        raise _Unresolved(ast.dump(node.op))
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("min", "max"):
+        vals = [_eval_shape_expr(a, symbols) for a in node.args]
+        return (min if node.func.id == "min" else max)(vals)
+    if isinstance(node, ast.IfExp):                # widest branch
+        return max(_eval_shape_expr(node.body, symbols),
+                   _eval_shape_expr(node.orelse, symbols))
+    raise _Unresolved(ast.dump(node))
+
+
+def _literal_int_dict(node: ast.AST) -> Dict[str, int]:
+    """{'bm': 128, 'budget': 2 * 2**20} with arithmetic values."""
+    if not isinstance(node, ast.Dict):
+        raise _Unresolved("expected dict literal")
+    out = {}
+    for k, v in zip(node.keys, node.values):
+        if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+            raise _Unresolved("non-string key")
+        out[k.value] = _eval_shape_expr(v, {})
+    return out
+
+
+# ------------------------------------------------------------- resolver
+
+
+class _Scope:
+    """Assignments visible at a pallas_call site (module + enclosing
+    function), including list ``+=`` extensions."""
+
+    def __init__(self, sf: SourceFile, enclosing: List[ast.AST]):
+        self.sf = sf
+        self.assigns: Dict[str, ast.AST] = {}
+        self.extends: Dict[str, List[ast.AST]] = {}
+        self.defs: Dict[str, ast.AST] = {}
+        layers = [sf.tree] + enclosing
+        for layer in layers:
+            body = layer.body if isinstance(layer.body, list) else []
+            for stmt in body:
+                self._scan(stmt)
+
+    def _scan(self, stmt):
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    self.assigns[t.id] = stmt.value
+        elif isinstance(stmt, ast.AugAssign) and isinstance(
+                stmt.target, ast.Name) and isinstance(stmt.op, ast.Add):
+            self.extends.setdefault(stmt.target.id, []).append(
+                stmt.value)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.defs[stmt.name] = stmt
+        elif isinstance(stmt, (ast.If, ast.For, ast.While, ast.With,
+                               ast.Try)):
+            for sub in ast.iter_child_nodes(stmt):
+                if isinstance(sub, ast.stmt):
+                    self._scan(sub)
+            for field in ("body", "orelse", "finalbody"):
+                for sub in getattr(stmt, field, []) or []:
+                    self._scan(sub)
+
+    def lookup(self, name: str) -> Optional[ast.AST]:
+        return self.assigns.get(name)
+
+
+def _factory_kwarg(scope: _Scope, func_name: str, attr: str):
+    """Resolve ``plan.attr`` where ``plan = _tile_plan(...)`` and
+    ``_tile_plan`` returns ``SomeNamedTuple(attr=<expr>, ...)``."""
+    fn = scope.defs.get(func_name)
+    if fn is None:
+        return None
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(node.value,
+                                                       ast.Call):
+            for kw in node.value.keywords:
+                if kw.arg == attr:
+                    return kw.value
+    return None
+
+
+def _resolve(scope: _Scope, node: ast.AST, depth: int = 0):
+    """Chase names/attributes to a structural literal where possible."""
+    if depth > 6 or node is None:
+        return node
+    if isinstance(node, ast.Name):
+        target = scope.lookup(node.id)
+        if target is not None:
+            resolved = _resolve(scope, target, depth + 1)
+            ext = scope.extends.get(node.id, [])
+            if ext and isinstance(resolved, ast.List):
+                merged = ast.List(elts=list(resolved.elts), ctx=ast.Load())
+                for e in ext:
+                    e_r = _resolve(scope, e, depth + 1)
+                    if isinstance(e_r, ast.List):
+                        merged.elts.extend(e_r.elts)
+                return merged
+            return resolved
+        return node
+    if isinstance(node, ast.Attribute) and isinstance(node.value,
+                                                      ast.Name):
+        base = scope.lookup(node.value.id)
+        if isinstance(base, ast.Call) and isinstance(base.func, ast.Name):
+            got = _factory_kwarg(scope, base.func.id, node.attr)
+            if got is not None:
+                return _resolve(scope, got, depth + 1)
+    return node
+
+
+def _partial_head_name(scope: _Scope, node: ast.AST) -> Optional[str]:
+    node = _resolve(scope, node)
+    if isinstance(node, ast.Call):
+        fn = node.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None)
+        if name == "partial" and node.args and isinstance(
+                node.args[0], ast.Name):
+            return node.args[0].id
+        return None
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, (ast.FunctionDef, ast.Lambda)):
+        return getattr(node, "name", None)
+    return None
+
+
+# --------------------------------------------------------- spec parsing
+
+
+class _Spec:
+    """One BlockSpec: block-shape exprs + index-map node (or SMEM)."""
+
+    def __init__(self, shape: Optional[ast.AST], index_map,
+                 smem: bool, line: int):
+        self.shape = shape
+        self.index_map = index_map
+        self.smem = smem
+        self.line = line
+
+
+def _parse_blockspec(scope: _Scope, node: ast.AST) -> Optional[_Spec]:
+    node = _resolve(scope, node)
+    if not (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "BlockSpec"):
+        return None
+    smem = any(kw.arg == "memory_space" for kw in node.keywords)
+    shape = node.args[0] if node.args else None
+    imap = node.args[1] if len(node.args) > 1 else None
+    if isinstance(imap, ast.Name):
+        imap = scope.defs.get(imap.id, imap)
+    return _Spec(shape, imap, smem, node.lineno)
+
+
+def _spec_list(scope: _Scope, node: ast.AST) -> Optional[List[_Spec]]:
+    node = _resolve(scope, node)
+    if isinstance(node, (ast.List, ast.Tuple)):
+        out = []
+        for e in node.elts:
+            spec = _parse_blockspec(scope, e)
+            if spec is None:
+                return None
+            out.append(spec)
+        return out
+    spec = _parse_blockspec(scope, node)
+    return [spec] if spec is not None else None
+
+
+def _scratch_shapes(scope: _Scope, node: ast.AST):
+    """-> list of (shape_expr_tuple, dtype_name or None).
+
+    Handles literal lists of ``pltpu.VMEM(shape, dtype)`` and the
+    ``_acc_shapes(plan, (flag, ...))`` comprehension-factory pattern
+    (count = len(flags), per-entry shape = the comprehension element's
+    widest branch).
+    """
+    node = _resolve(scope, node)
+    if isinstance(node, ast.List):
+        out = []
+        for e in node.elts:
+            out.append(_parse_vmem(e))
+        return out
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        fn = scope.defs.get(node.func.id)
+        flags = node.args[-1] if node.args else None
+        if fn is not None and isinstance(flags, ast.Tuple):
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Return) and isinstance(
+                        sub.value, ast.ListComp):
+                    entry = _parse_vmem(sub.value.elt)
+                    return [entry] * len(flags.elts)
+    return None
+
+
+def _parse_vmem(node: ast.AST):
+    if (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "VMEM" and node.args):
+        shape = node.args[0]
+        dtype = None
+        if len(node.args) > 1 and isinstance(node.args[1],
+                                             ast.Attribute):
+            dtype = node.args[1].attr
+        return (shape, dtype)
+    return (None, None)
+
+
+def _tuple_elts(node: ast.AST) -> Optional[List[ast.AST]]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    if isinstance(node, ast.IfExp):
+        # widest branch by length, ties broken toward the true branch
+        a, b = _tuple_elts(node.body), _tuple_elts(node.orelse)
+        if a is None or b is None:
+            return a or b
+        return a if len(a) >= len(b) else b
+    return None
+
+
+def _lambda_arity(fn) -> Optional[Tuple[int, bool]]:
+    """(n_positional, has_vararg) of a Lambda/FunctionDef index map."""
+    if not isinstance(fn, (ast.Lambda, ast.FunctionDef)):
+        return None
+    a = fn.args
+    return (len(a.posonlyargs) + len(a.args), a.vararg is not None)
+
+
+def _index_map_return(fn) -> Optional[List[ast.AST]]:
+    if isinstance(fn, ast.Lambda):
+        return _tuple_elts(fn.body)
+    if isinstance(fn, ast.FunctionDef):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Return):
+                return _tuple_elts(node.value)
+    return None
+
+
+# --------------------------------------------------------------- checks
+
+
+def _enclosing_chain(tree: ast.AST, target: ast.AST) -> List[ast.AST]:
+    """FunctionDefs lexically containing ``target``, outermost first."""
+    chain: List[ast.AST] = []
+
+    def walk(node, stack):
+        if node is target:
+            chain.extend(stack)
+            return True
+        next_stack = stack + [node] if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef)) else stack
+        return any(walk(c, next_stack)
+                   for c in ast.iter_child_nodes(node))
+
+    walk(tree, [])
+    return chain
+
+
+def _find_sites(sf: SourceFile):
+    for node in ast.walk(sf.tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "pallas_call"):
+            yield node
+
+
+def _vmem_config(sf: SourceFile):
+    for stmt in sf.tree.body:
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name) and t.id == "TIMCHECK_VMEM":
+                    if not isinstance(stmt.value, ast.Dict):
+                        return None
+                    cfg = {}
+                    for k, v in zip(stmt.value.keys, stmt.value.values):
+                        if isinstance(k, ast.Constant):
+                            try:
+                                cfg[k.value] = _literal_int_dict(v)
+                            except _Unresolved:
+                                return None
+                    return cfg
+    return None
+
+
+class _SiteChecker:
+    def __init__(self, sf: SourceFile, site: ast.Call,
+                 config, findings: List[Finding]):
+        self.sf = sf
+        self.site = site
+        self.config = config or {}
+        self.findings = findings
+        self.scope = _Scope(sf, _enclosing_chain(sf.tree, site))
+        self.kw = {k.arg: k.value for k in site.keywords}
+        # PrefetchScalarGridSpec folds grid/specs/scratch into one obj
+        self.n_prefetch = 0
+        gs = self.kw.get("grid_spec")
+        if gs is not None:
+            gs = _resolve(self.scope, gs)
+            if isinstance(gs, ast.Call):
+                for k in gs.keywords:
+                    if k.arg == "num_scalar_prefetch" and isinstance(
+                            k.value, ast.Constant):
+                        self.n_prefetch = k.value.value
+                    elif k.arg in ("grid", "in_specs", "out_specs",
+                                   "scratch_shapes"):
+                        self.kw.setdefault(k.arg, k.value)
+
+    def _flag(self, rule, msg, line=None):
+        self.findings.append(Finding(
+            CHECKER, rule, self.sf.path,
+            line or self.site.lineno, msg))
+
+    def run(self):
+        kernel_name = _partial_head_name(
+            self.scope, self.site.args[0]) if self.site.args else None
+        grid_rank = self._grid_rank()
+        in_specs = _spec_list(self.scope, self.kw.get("in_specs")) or []
+        out_specs = _spec_list(self.scope, self.kw.get("out_specs")) \
+            or []
+        scratch = _scratch_shapes(self.scope,
+                                  self.kw.get("scratch_shapes")) or []
+        if not in_specs:
+            self._flag("unresolved",
+                       "could not resolve in_specs for this "
+                       "pallas_call site")
+        self._check_semantics(grid_rank)
+        self._check_index_maps(grid_rank, in_specs + out_specs)
+        self._check_kernel_arity(kernel_name, len(in_specs),
+                                 len(out_specs), len(scratch))
+        self._check_vmem(kernel_name, in_specs, out_specs, scratch)
+
+    # -- grid ----------------------------------------------------------
+    def _grid_rank(self) -> Optional[int]:
+        grid = self.kw.get("grid")
+        if grid is None:
+            return None
+        grid = _resolve(self.scope, grid)
+        elts = _tuple_elts(grid)
+        if elts is None:
+            self._flag("unresolved", "could not resolve the grid tuple")
+            return None
+        return len(elts)
+
+    def _check_semantics(self, grid_rank):
+        cp = self.kw.get("compiler_params")
+        if not isinstance(cp, ast.Call):
+            cp = _resolve(self.scope, cp) if cp is not None else None
+            if isinstance(cp, ast.Call) and isinstance(
+                    cp.func, ast.Name) and cp.func.id in self.scope.defs:
+                # helper like _compiler_params(): look inside for the
+                # literal semantics tuple
+                fn = self.scope.defs[cp.func.id]
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Return) and isinstance(
+                            node.value, ast.Call):
+                        cp = node.value
+                        break
+        if not isinstance(cp, ast.Call):
+            return
+        sem = None
+        for arg in list(cp.args) + [k.value for k in cp.keywords]:
+            elts = _tuple_elts(arg)
+            if elts is not None and all(
+                    isinstance(e, ast.Constant) and isinstance(
+                        e.value, str) for e in elts):
+                sem = elts
+        if sem is not None and grid_rank is not None \
+                and len(sem) != grid_rank:
+            self._flag("grid-semantics",
+                       f"dimension_semantics has {len(sem)} entries "
+                       f"but the grid has rank {grid_rank}")
+
+    # -- index maps ----------------------------------------------------
+    def _check_index_maps(self, grid_rank, specs):
+        if grid_rank is None:
+            return
+        expected = grid_rank + self.n_prefetch
+        for spec in specs:
+            if spec is None or spec.smem or spec.index_map is None:
+                continue
+            arity = _lambda_arity(spec.index_map)
+            if arity is None:
+                continue
+            n, vararg = arity
+            ok = (n == expected) or (vararg and n <= expected)
+            if not ok:
+                self._flag("index-map-arity",
+                           f"index map takes {n} args but the grid "
+                           f"(+{self.n_prefetch} prefetch) supplies "
+                           f"{expected}", line=spec.line)
+            ret = _index_map_return(spec.index_map)
+            shape = _tuple_elts(spec.shape) if spec.shape is not None \
+                else None
+            if ret is not None and shape is not None \
+                    and len(ret) != len(shape):
+                self._flag("block-rank",
+                           f"BlockSpec block shape has rank "
+                           f"{len(shape)} but its index map returns "
+                           f"{len(ret)} coordinates", line=spec.line)
+
+    # -- kernel arity ---------------------------------------------------
+    def _check_kernel_arity(self, kernel_name, n_in, n_out, n_scratch):
+        if kernel_name is None or not n_in:
+            return
+        fn = self.scope.defs.get(kernel_name)
+        if fn is None:
+            return
+        a = fn.args
+        if a.vararg is not None:        # *args kernels unpack manually
+            return
+        got = len(a.posonlyargs) + len(a.args)
+        want = n_in + n_out + n_scratch + self.n_prefetch
+        if got != want:
+            self._flag("kernel-arity",
+                       f"kernel `{kernel_name}` takes {got} positional "
+                       f"refs but the launch supplies {want} "
+                       f"({n_in} in + {n_out} out + {n_scratch} "
+                       f"scratch + {self.n_prefetch} prefetch)",
+                       line=fn.lineno)
+
+    # -- VMEM ------------------------------------------------------------
+    def _check_vmem(self, kernel_name, in_specs, out_specs, scratch):
+        cfg = self.config
+        symbols = cfg.get("symbols", {})
+        budgets = cfg.get("budgets", {})
+        if not budgets:
+            self._flag("missing-budget",
+                       "kernels module has pallas_call sites but no "
+                       "TIMCHECK_VMEM budget declaration")
+            return
+        budget = budgets.get(kernel_name or "")
+        if budget is None:
+            self._flag("missing-budget",
+                       f"no TIMCHECK_VMEM budget entry for kernel "
+                       f"`{kernel_name}`")
+            return
+        total = 0
+        shapes: List[Tuple[List[ast.AST], int, int]] = []
+        for spec in in_specs + out_specs:
+            if spec is None or spec.smem or spec.shape is None:
+                continue
+            elts = _tuple_elts(spec.shape)
+            if elts is not None:
+                shapes.append((elts, _DEFAULT_ELT, spec.line))
+        for shape_node, dtype in scratch:
+            if shape_node is None:
+                continue
+            elts = _tuple_elts(shape_node)
+            if elts is not None:
+                shapes.append((elts,
+                               _DTYPE_BYTES.get(dtype, _DEFAULT_ELT),
+                               self.site.lineno))
+        for elts, elt_bytes, line in shapes:
+            n = elt_bytes
+            for e in elts:
+                try:
+                    dim = _eval_shape_expr(e, symbols)
+                except _Unresolved as exc:
+                    self._flag("undeclared-symbol",
+                               f"block shape uses symbol {exc} not "
+                               f"declared in TIMCHECK_VMEM symbols",
+                               line=line)
+                    return
+                n *= dim
+            # lane alignment on the resolved trailing dim
+            try:
+                last = _eval_shape_expr(elts[-1], symbols)
+                if last >= LANE and last % LANE:
+                    self._flag("lane-alignment",
+                               f"trailing block dim {last} is not a "
+                               f"multiple of {LANE} (silent VREG "
+                               f"padding)", line=line)
+            except _Unresolved:
+                pass
+            total += n
+        if total > budget:
+            self._flag("vmem-budget",
+                       f"estimated VMEM footprint {total} bytes "
+                       f"({total / 2**20:.2f} MiB) exceeds the "
+                       f"declared budget {budget} for kernel "
+                       f"`{kernel_name}`")
+
+
+def check(files: List[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in files:
+        if sf.package != "kernels":
+            continue
+        sites = list(_find_sites(sf))
+        if not sites:
+            continue
+        config = _vmem_config(sf)
+        if config is None:
+            findings.append(Finding(
+                CHECKER, "missing-budget", sf.path, 1,
+                "kernels module has pallas_call sites but no literal "
+                "TIMCHECK_VMEM declaration"))
+        for site in sites:
+            _SiteChecker(sf, site, config, findings).run()
+    return findings

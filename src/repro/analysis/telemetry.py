@@ -1,0 +1,141 @@
+"""Telemetry-registry checker.
+
+``serve/metrics.py`` declares the COUNTERS/GAUGES partition that
+``counter_deltas`` routes every snapshot key through (counters are
+diffed into rates, gauges pass through raw).  This checker statically
+cross-checks the registry against the two places snapshot keys are
+born:
+
+  * the dict literal returned by ``ServeEngine.stats()``
+    (serve/engine.py);
+  * the ``snap["..."] = ...`` harness additions in
+    ``sim/traffic.run_trace``.
+
+Contracts enforced: every emitted key is declared in exactly one of
+COUNTERS/GAUGES; the two sets are disjoint; every declared key is
+emitted somewhere (a stale registry entry means the metric was renamed
+without updating the registry — exactly the drift the strict
+``counter_deltas`` raises on at runtime).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.base import Finding, SourceFile
+
+CHECKER = "telemetry"
+
+METRICS_PATH = "serve/metrics.py"
+EMITTERS = {
+    "serve/engine.py": "stats",
+    "sim/traffic.py": None,          # snap["k"] = ... assignments
+}
+
+
+def _frozenset_literal(sf: SourceFile, name: str,
+                       ) -> Optional[Dict[str, int]]:
+    """{'key': lineno} for ``NAME = frozenset({...})`` literals."""
+    for stmt in sf.tree.body:
+        if not isinstance(stmt, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Name) and t.id == name
+                   for t in stmt.targets):
+            continue
+        call = stmt.value
+        if (isinstance(call, ast.Call)
+                and isinstance(call.func, ast.Name)
+                and call.func.id == "frozenset" and call.args):
+            inner = call.args[0]
+            if isinstance(inner, (ast.Set, ast.List, ast.Tuple)):
+                out = {}
+                for e in inner.elts:
+                    if isinstance(e, ast.Constant) and isinstance(
+                            e.value, str):
+                        out[e.value] = e.lineno
+                return out
+    return None
+
+
+def _stats_keys(sf: SourceFile) -> Dict[str, int]:
+    """Keys of the dict literal returned by ServeEngine.stats()."""
+    out: Dict[str, int] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "stats":
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Return) and isinstance(
+                        sub.value, ast.Dict):
+                    for k in sub.value.keys:
+                        if isinstance(k, ast.Constant) and isinstance(
+                                k.value, str):
+                            out[k.value] = k.lineno
+    return out
+
+
+def _snap_keys(sf: SourceFile) -> Dict[str, int]:
+    """``snap["key"] = ...`` harness additions."""
+    out: Dict[str, int] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "snap"
+                        and isinstance(t.slice, ast.Constant)
+                        and isinstance(t.slice.value, str)):
+                    out[t.slice.value] = t.lineno
+    return out
+
+
+def check(files: List[SourceFile]) -> List[Finding]:
+    by_path = {sf.path: sf for sf in files}
+    metrics_sf = by_path.get(METRICS_PATH)
+    if metrics_sf is None:
+        return []          # fixture runs without the real module
+    findings: List[Finding] = []
+
+    counters = _frozenset_literal(metrics_sf, "COUNTERS")
+    gauges = _frozenset_literal(metrics_sf, "GAUGES")
+    for name, table in (("COUNTERS", counters), ("GAUGES", gauges)):
+        if table is None:
+            findings.append(Finding(
+                CHECKER, "missing-registry", METRICS_PATH, 1,
+                f"serve/metrics.py must declare a literal frozenset "
+                f"`{name}`"))
+    if counters is None or gauges is None:
+        return findings
+
+    overlap = set(counters) & set(gauges)
+    for key in sorted(overlap):
+        findings.append(Finding(
+            CHECKER, "double-classified", METRICS_PATH, counters[key],
+            f"snapshot key {key!r} is declared as BOTH a counter and "
+            f"a gauge"))
+
+    emitted: Dict[str, int] = {}
+    emitted_paths: Dict[str, str] = {}
+    for path, fn_name in EMITTERS.items():
+        sf = by_path.get(path)
+        if sf is None:
+            continue
+        keys = _stats_keys(sf) if fn_name else _snap_keys(sf)
+        for key, line in keys.items():
+            if key not in set(counters) | set(gauges):
+                findings.append(Finding(
+                    CHECKER, "unclassified-key", path, line,
+                    f"emitted snapshot key {key!r} is in neither "
+                    f"COUNTERS nor GAUGES — counter_deltas will raise "
+                    f"on it at runtime"))
+            emitted.setdefault(key, line)
+            emitted_paths.setdefault(key, path)
+
+    if emitted:            # stale entries only checkable with emitters
+        declared: Set[str] = set(counters) | set(gauges)
+        for key in sorted(declared - set(emitted)):
+            table = counters if key in counters else gauges
+            findings.append(Finding(
+                CHECKER, "stale-registry-entry", METRICS_PATH,
+                table[key],
+                f"registry declares {key!r} but no emitter produces "
+                f"it (renamed metric?)"))
+    return findings

@@ -17,6 +17,8 @@ DESIGN.md §5:
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -140,9 +142,6 @@ def constrain(x, mesh: Mesh, spec: Tuple[Optional[str], ...], rules: Rules):
 # Inactive by default (plain CPU tests see zero constraints); the
 # dry-run and trainer activate it for §Perf variants.
 # ---------------------------------------------------------------------------
-
-import contextlib
-import contextvars
 
 _HINTS: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
     "sharding_hints", default=None)

@@ -17,7 +17,6 @@ VMEM @ bq=bk=256, D=128: q 128 KB + k/v 256 KB + acc/m/l ~132 KB f32
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +26,15 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels._compat import compiler_params
 
 NEG_INF = -1e30
+
+# Static VMEM contract (timcheck pallas-contract checker;
+# docs/static-analysis.md §vmem-budgets): symbols at the default
+# block_q/block_k=256, D=128 geometry; Q/K/V/O tiles + the running
+# max/sum/accumulator scratch land around 0.63 MiB.
+TIMCHECK_VMEM = {
+    "symbols": {"bq": 256, "bk": 256, "d": 128},
+    "budgets": {"_fa_kernel": 2 ** 20},
+}
 
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,

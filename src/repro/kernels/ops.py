@@ -66,7 +66,6 @@ Public contract
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -61,7 +61,7 @@ the interpreter, TPUs run it natively.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple, Union
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +71,18 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels._compat import compiler_params
 
 NEG_INF = -1e30
+
+# Static VMEM contract (timcheck pallas-contract checker;
+# docs/static-analysis.md §vmem-budgets).  Symbols at the serving
+# shape the docstring budgets: gsq = G*Sq = 64 grouped queries,
+# D = 128, block_size = 16, chunk_kv = 1024 (so cb = 64 table entries
+# per chunk).  The assembled-scores + V-chunk scratch dominates
+# (~0.8 MiB); the 1 MiB budget is the ROADMAP's "~1 MB at mixed_32k"
+# figure made machine-checkable.
+TIMCHECK_VMEM = {
+    "symbols": {"gsq": 64, "d": 128, "bs": 16, "cb": 64},
+    "budgets": {"_paged_attn_kernel": 2 ** 20},
+}
 
 
 def _paged_attn_kernel(*args, nc: int, cb: int, bs: int, sq: int,

@@ -80,6 +80,23 @@ DEFAULT_BN = 256
 DEFAULT_BK = 512
 L_BLOCK = 16
 
+# Static VMEM contract, machine-checked by repro.analysis (timcheck's
+# pallas-contract checker; docs/static-analysis.md §vmem-budgets).
+# ``symbols`` bind the block-shape names used in the BlockSpecs at the
+# DEFAULT_* tile sizes (wk = the unpacked worst case — the packed
+# kernels stream bk//4 weight bytes and come in under this estimate);
+# ``budgets`` cap each kernel's estimated resident footprint (input +
+# output + scratch blocks, f32-priced).  The fused two-phase kernel is
+# the high-water mark at ~1.4 MiB.
+TIMCHECK_VMEM = {
+    "symbols": {"bm": 128, "bn": 256, "bk": 512, "wk": 512},
+    "budgets": {
+        "_tim_kernel": 2 * 2 ** 20,
+        "_tim_kernel_fused": 2 * 2 ** 20,
+        "_tim_kernel_bitserial": 2 * 2 ** 20,
+    },
+}
+
 
 def _compiler_params():
     # grid is always (M/bm, N/bn, K/bk) with K innermost-accumulating

@@ -46,11 +46,10 @@ Variants (--variant, '+'-composable) are the §Perf levers:
   rematdots     save-dots remat policy
 """
 import argparse
-import dataclasses
 import json
 import re
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
 
 
 def main():

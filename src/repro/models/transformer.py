@@ -19,7 +19,6 @@ blocks recompute K/V from the (small) media embeddings each step.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -30,9 +29,9 @@ from repro.nn import attention as attn
 from repro.nn.basic import (apply_rope, embedding_init, embedding_specs,
                             layernorm_apply, layernorm_init, layernorm_specs,
                             rmsnorm_apply, rmsnorm_init, rmsnorm_specs)
-from repro.nn.linear import (TernaryPolicy, dense_apply, dense_init,
-                             dense_specs, ternary_dense_apply,
-                             ternary_dense_init, ternary_dense_specs)
+from repro.nn.linear import (dense_apply, dense_init, dense_specs,
+                             ternary_dense_apply, ternary_dense_init,
+                             ternary_dense_specs)
 from repro.nn.mlp import mlp_apply, mlp_init, mlp_specs
 from repro.nn.module import subkey
 from repro.nn.moe import moe_apply, moe_init, moe_specs

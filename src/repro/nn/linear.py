@@ -21,7 +21,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import ternary as T

@@ -313,6 +313,7 @@ def fetch_kv_blocks(caches, bids: np.ndarray) -> Dict[str, Any]:
 
     def walk(tree):
         if isinstance(tree, dict):
+            # timcheck: allow[d2h] accounted swap-out fetch (swap_d2h_fetches)
             return {k: (np.asarray(v[:, idx])
                         if k in ("k", "v", "k_scale", "v_scale")
                         and hasattr(v, "at") else walk(v))
@@ -613,6 +614,7 @@ class ServeEngine:
 
         def _counted(params, batch, caches, cache_len, n_new,
                      block_tables, slot_map):
+            # timcheck: allow[impure] trace-time shape-count telemetry
             self.n_step_compiles += 1          # trace-time: counts shapes
             return make_paged_unified_step(cfg)(
                 params, batch, caches, cache_len, n_new, block_tables,
@@ -1165,6 +1167,7 @@ class ServeEngine:
                                          int(old_len[i]) + t)
         toks_dev = (greedy_token(lg) if self.greedy
                     else sample_token(lg, self._next_key()))
+        # timcheck: allow[d2h] the ONE accounted fetch per step (d2h_fetches)
         toks = np.asarray(jax.device_get(toks_dev))   # the ONE d2h fetch
         self.d2h_fetches += 1
         for i in decode_slots:

@@ -51,9 +51,22 @@ from typing import Any, Deque, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
-# instantaneous readings in ServeEngine.stats() / harness snapshots;
-# everything else is a cumulative counter whose per-step delta is the
-# meaningful rate
+# The telemetry registry: every key ServeEngine.stats() or the traffic
+# harness emits is classified exactly once, as a cumulative monotone
+# COUNTER (per-step delta = the meaningful rate) or an instantaneous
+# GAUGE (raw reading passes through).  ``counter_deltas`` routes
+# strictly through this partition and raises on undeclared keys, and
+# timcheck's telemetry checker (repro.analysis.telemetry) statically
+# cross-checks both sets against the emitters in CI — adding a metric
+# without classifying it here fails loudly at both layers.
+COUNTERS = frozenset({
+    "steps", "prefix_hit_tokens", "scheduled_tokens",
+    "scheduled_prefill_tokens", "admitted_prompt_tokens", "evictions",
+    "preemptions", "swapped_out_blocks", "swapped_in_blocks",
+    "swapped_in_tokens", "swap_d2h_fetches", "recompute_tokens",
+    "truncated_requests", "finished_requests", "output_tokens",
+    "d2h_fetches",
+})
 GAUGES = frozenset({
     "blocks_in_use", "blocks_cached", "preempted_waiting",
     "preemptable_pool", "queue_depth", "active_slots", "step",
@@ -125,19 +138,36 @@ def goodput_tokens_per_step(requests: Iterable[Any],
 
 def counter_deltas(snapshots: Sequence[Dict[str, Any]]
                    ) -> List[Dict[str, Any]]:
-    """Per-step deltas of the counter keys across consecutive
-    snapshots; gauge keys (``GAUGES``) pass through unchanged.  The
-    first snapshot is diffed against zero, so the output aligns 1:1
-    with the input steps."""
+    """Per-step deltas of the ``COUNTERS`` keys across consecutive
+    snapshots; ``GAUGES`` keys pass through unchanged.  The first
+    snapshot is diffed against zero, so the output aligns 1:1 with the
+    input steps.
+
+    Routing is strict: a key in neither registry raises ``KeyError``
+    (registry drift — a renamed or new metric that nobody classified),
+    and a declared counter with a non-integer value raises
+    ``TypeError`` (diffing floats silently yields garbage rates).
+    Before ISSUE-7 both cases fell through as pass-through gauges and
+    quietly corrupted the rate streams."""
     out: List[Dict[str, Any]] = []
     prev: Dict[str, Any] = {}
     for snap in snapshots:
         row: Dict[str, Any] = {}
         for k, v in snap.items():
-            if k in GAUGES or not isinstance(v, (int, np.integer)):
+            if k in GAUGES:
                 row[k] = v
-            else:
+            elif k in COUNTERS:
+                if not isinstance(v, (int, np.integer)):
+                    raise TypeError(
+                        f"counter {k!r} has non-integer value {v!r} "
+                        f"({type(v).__name__}); counters are monotone "
+                        f"integer totals")
                 row[k] = int(v) - int(prev.get(k, 0))
+            else:
+                raise KeyError(
+                    f"snapshot key {k!r} is declared in neither "
+                    f"COUNTERS nor GAUGES (serve/metrics.py); classify "
+                    f"it before emitting it")
         out.append(row)
         prev = snap
     return out

@@ -264,6 +264,7 @@ def smoke_engine(arch: str = "granite-34b", slots: int = 2,
                  max_len: int = 32, block_size: int = 8, chunk: int = 8,
                  num_blocks: Optional[int] = None,
                  preempt: str = "auto", prefix_reuse="auto",
+                 token_budget: Optional[int] = None,
                  seed: int = 0):
     """A small ternarized engine for harness smokes/benches (smoke
     config: tiny dims, real scheduler/pool/kernel paths)."""
@@ -277,7 +278,8 @@ def smoke_engine(arch: str = "granite-34b", slots: int = 2,
     return ServeEngine(params, cfg, batch_slots=slots, max_len=max_len,
                        chunk=chunk, block_size=block_size,
                        num_blocks=num_blocks, preempt=preempt,
-                       prefix_reuse=prefix_reuse), cfg
+                       prefix_reuse=prefix_reuse,
+                       token_budget=token_budget), cfg
 
 
 def main(argv=None) -> int:

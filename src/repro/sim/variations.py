@@ -133,6 +133,7 @@ def accuracy_impact_experiment(seed: int = 0) -> Dict[str, float]:
         if cfg.sensing_error:
             k2 = jax.random.split(key)[0]
         logits = tim_matvec(qh, qw2, s2, sh, cfg, key=k2)
+        # timcheck: allow[d2h] offline accuracy eval (one scalar per run)
         return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
 
     return {

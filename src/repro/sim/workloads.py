@@ -8,7 +8,7 @@ the standard architectures; CNNs use [2-bit A, ternary W] (WRPN), RNNs
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

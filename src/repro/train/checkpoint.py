@@ -21,7 +21,7 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -61,6 +61,7 @@ def save_pytree(tree, directory: str, step: int, extra_meta: Optional[
     named = _flatten_with_names(tree)
     arrays, dtypes = {}, {}
     for name, leaf in named:
+        # timcheck: allow[d2h] checkpoint save IS the transfer
         arr, dtype_name = _to_savable(np.asarray(jax.device_get(leaf)))
         arrays[name] = arr
         dtypes[name] = dtype_name
@@ -145,6 +146,7 @@ class CheckpointManager:
              extra_meta: Optional[Dict[str, Any]] = None):
         # snapshot to host *now* (cheap on CPU; on TPU this is the D2H)
         host_tree = jax.tree_util.tree_map(
+            # timcheck: allow[d2h] async-checkpoint snapshot IS the transfer
             lambda x: np.asarray(jax.device_get(x)), tree)
         self.wait()
 

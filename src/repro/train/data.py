@@ -12,11 +12,10 @@ uniform noise would pin CE at ln(V)).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,7 +45,9 @@ def synthetic_lm_batch(cfg: DataConfig, step: int,
     v = cfg.vocab_size
     chain_key = jax.random.PRNGKey(cfg.seed)
     # odd multiplier => bijective map mod any V
+    # timcheck: allow[d2h] host-side corpus constants, derived once
     a = int(jax.random.randint(chain_key, (), 1, max(v // 2, 2))) * 2 + 1
+    # timcheck: allow[d2h] host-side corpus constants, derived once
     off = int(jax.random.randint(_fold(chain_key, 1), (), 0, v))
 
     key = _fold(jax.random.PRNGKey(cfg.seed), step, shard)

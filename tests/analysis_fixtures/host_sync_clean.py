@@ -1,0 +1,11 @@
+# timcheck fixture (AST-only): pragma'd accounted fetch + genuinely
+# host-side numpy — nothing may flag.
+
+
+def accounted(toks_dev, names, victim, table):
+    # timcheck: allow[d2h] the accounted per-step fetch
+    toks = np.asarray(jax.device_get(toks_dev))
+    host = np.asarray(names, np.int32)        # host container: fine
+    row = np.asarray(table[victim], np.int32)  # scalar index: fine
+    n = int(len(names))                        # host int: fine
+    return toks, host, row, n

@@ -1,0 +1,11 @@
+# timcheck fixture (AST-only, never imported): every host-sync rule
+# fires once.  Fed to the checker under a virtual hot-path name.
+
+
+def hot_path(toks_dev, v, idx):
+    a = jax.device_get(toks_dev)            # device-get
+    b = toks_dev.item()                     # sync-method
+    c = float(jnp.mean(v))                  # scalar-coercion
+    d = np.asarray(v[:, idx])               # np-materialize (slice)
+    toks_dev.block_until_ready()            # sync-method
+    return a, b, c, d

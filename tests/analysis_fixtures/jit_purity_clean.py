@@ -1,0 +1,21 @@
+# timcheck fixture (AST-only): the Pallas ref-mutation idiom and numpy
+# over static host values are NOT effects — nothing may flag.
+
+
+def _kernel(x_ref, o_ref, acc_ref):
+    @pl.when(True)
+    def _init():
+        acc_ref[...] = 0           # param of the traced entry: contract
+    o_ref[...] = x_ref[...] + acc_ref[...]
+
+
+launched = pl.pallas_call(_kernel, grid=(1,))
+
+
+def pure(x):
+    shape = (4, 4)
+    n = np.prod(shape)             # numpy on static host values: fine
+    return jnp.ones(shape) * n + x
+
+
+pure_jit = jax.jit(pure)

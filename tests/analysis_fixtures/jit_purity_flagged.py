@@ -1,0 +1,20 @@
+# timcheck fixture (AST-only): every jit-purity rule fires inside a
+# function reachable from a jax.jit site.
+
+STATE = {"calls": 0}
+
+
+def helper(x):
+    print("tracing", x)               # print
+    y = jnp.dot(x, x)
+    z = np.sum(y)                     # numpy-on-traced (y is tainted)
+    r = random.random()               # host-random
+    return y * r + z
+
+
+def step(x):
+    STATE["calls"] += 1               # closure-mutation
+    return helper(x)
+
+
+step_jit = jax.jit(step)

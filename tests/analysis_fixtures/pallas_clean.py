@@ -1,0 +1,23 @@
+# timcheck fixture (AST-only): a fully consistent pallas_call site —
+# nothing may flag.
+
+TIMCHECK_VMEM = {
+    "symbols": {},
+    "budgets": {"_ok_kernel": 2 ** 20},
+}
+
+
+def _ok_kernel(x_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...] + acc_ref[...]
+
+
+def ok_launch(x):
+    return pl.pallas_call(
+        _ok_kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((128, 256), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((128, 256), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((512, 1024), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((128, 256), jnp.float32)],
+        compiler_params=compiler_params(("parallel", "arbitrary")),
+    )(x)

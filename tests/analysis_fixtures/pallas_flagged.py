@@ -1,0 +1,42 @@
+# timcheck fixture (AST-only): one pallas_call site violating every
+# pallas-contract rule at once.
+
+TIMCHECK_VMEM = {
+    "symbols": {},
+    "budgets": {"_bad_kernel": 2 ** 10, "_sem_kernel": 2 ** 20},
+}
+
+
+def _bad_kernel(x_ref, o_ref, acc):        # 3 refs, launch supplies 4
+    o_ref[...] = x_ref[...]
+
+
+def bad_launch(x):
+    return pl.pallas_call(
+        _bad_kernel,
+        grid=(4, 4),
+        in_specs=[
+            pl.BlockSpec((128, 192), lambda i: (i, 0)),    # arity 1 != 2
+            pl.BlockSpec((128,), lambda i, j: (i, j)),     # rank 1, ret 2
+        ],
+        out_specs=pl.BlockSpec((128, 192), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((512, 768), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((128, 192), jnp.float32)],
+    )(x)
+
+
+def _sem_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def sem_launch(x):
+    # dimension_semantics has 3 entries for a rank-2 grid
+    return pl.pallas_call(
+        _sem_kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((128, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((512, 512), jnp.float32),
+        compiler_params=compiler_params(
+            ("parallel", "parallel", "arbitrary")),
+    )(x)

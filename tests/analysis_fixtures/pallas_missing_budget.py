@@ -1,0 +1,16 @@
+# timcheck fixture (AST-only): pallas_call with no TIMCHECK_VMEM
+# declaration anywhere in the module.
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((128,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((128,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((512,), jnp.float32),
+    )(x)

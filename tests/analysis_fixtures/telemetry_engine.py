@@ -1,0 +1,7 @@
+# timcheck fixture (AST-only), virtual path serve/engine.py: the
+# stats() emitter the telemetry checker cross-checks.
+
+
+class ServeEngine:
+    def stats(self):
+        return {"steps": 1, "output_tokens": 2, "mystery_key": 3}

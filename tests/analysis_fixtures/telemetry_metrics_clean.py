@@ -1,0 +1,5 @@
+# timcheck fixture (AST-only), virtual path serve/metrics.py: an exact
+# partition of the keys the paired engine/traffic fixtures emit.
+
+COUNTERS = frozenset({"steps", "output_tokens", "mystery_key"})
+GAUGES = frozenset({"queue_depth"})

@@ -1,0 +1,5 @@
+# timcheck fixture (AST-only), virtual path serve/metrics.py:
+# "steps" is double-classified, "ghost_counter" is stale.
+
+COUNTERS = frozenset({"steps", "output_tokens", "ghost_counter"})
+GAUGES = frozenset({"queue_depth", "steps"})

@@ -1,0 +1,8 @@
+# timcheck fixture (AST-only), virtual path sim/traffic.py: the
+# harness-side snapshot keys.
+
+
+def run_trace(engine):
+    snap = engine.stats()
+    snap["queue_depth"] = 0
+    return snap

@@ -1,6 +1,5 @@
 """Attention substrate: chunked-vs-full equivalence, GQA, RoPE, decode,
 mixed chunked-prefill (per-slot offsets)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -9,7 +9,6 @@ regression fails locally before it reaches CI.
 import os
 import sys
 
-import pytest
 
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _REPO)

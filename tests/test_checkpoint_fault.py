@@ -1,13 +1,11 @@
 """Fault tolerance: checkpoint atomicity/retention/async, auto-resume,
 preemption, straggler detection, elastic restart."""
 import os
-import shutil
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.train.checkpoint import (CheckpointManager, latest_step,
                                     list_steps, restore_pytree, save_pytree)

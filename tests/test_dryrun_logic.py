@@ -9,7 +9,7 @@ import tempfile
 import jax
 import pytest
 
-from repro.configs import ARCH_NAMES, get_config
+from repro.configs import get_config
 from repro.configs.base import SHAPES
 
 

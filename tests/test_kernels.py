@@ -1,12 +1,11 @@
 """Pallas kernel sweeps vs the pure-jnp oracles (interpret mode on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.ternary import ENCODINGS, TernaryScales, quantize_act_ternary
-from repro.core.weights import TernaryWeight, ternarize_weight
+from repro.core.ternary import ENCODINGS, quantize_act_ternary
+from repro.core.weights import ternarize_weight
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(2)

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.distrib.grad_compress import (compress_decompress,
                                          init_error_buffers)

@@ -26,7 +26,6 @@ asserted **bit-exact**:
   * ``normalize=False`` flash partials with a single chunk equal
     ``distrib/decode_attn._local_partial`` (the lse-merge oracle).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -34,7 +33,7 @@ import pytest
 from repro.kernels.paged_attention import (paged_attention_pallas,
                                            paged_decode_attention_pallas,
                                            paged_mixed_attention_pallas)
-from repro.nn.attention import kv_dequantize, mixed_attention
+from repro.nn.attention import mixed_attention
 
 B, H, HK, D = 2, 4, 2, 8
 S_MAX = 128

@@ -7,7 +7,7 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     ASYMMETRIC, ENCODINGS, EXACT, NOISY, SATURATING, SYMMETRIC, UNWEIGHTED,
-    TernaryScales, TimConfig, bitserial_matmul, bitplanes, block_counts,
+    TernaryScales, bitserial_matmul, bitplanes, block_counts,
     dequantize, fake_quant_act_unsigned, fake_ternary, fake_ternary_act,
     pack2b, quantize_act_ternary, quantize_act_unsigned, ternarize,
     ternary_sparsity, tim_matmul_reference, tim_matvec, unpack2b,

@@ -1,0 +1,227 @@
+"""Self-tests for the timcheck static-analysis suite (ISSUE-7).
+
+Three layers:
+
+  * fixture tests — each checker demonstrated against minimal flagged
+    and clean snippets (tests/analysis_fixtures/), fed through the
+    same SourceFile entry points CI uses, under virtual hot-path
+    names;
+  * the acceptance criteria — the repo tree is clean TODAY (pragmas
+    included), and deleting the ``allow[d2h]`` pragma on engine.py's
+    accounted fetch makes the pass fail;
+  * CLI behavior — exit 1 on a seeded violation, exit 0 clean, valid
+    ``--json`` reports.
+"""
+import json
+import os
+
+from repro.analysis import (host_sync, jit_purity, pallas_contracts,
+                            telemetry)
+from repro.analysis.base import (SourceFile, load_repo, pragma_findings,
+                                 run_all)
+from repro.analysis.check import main as check_main
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "analysis_fixtures")
+
+
+def _fixture(name: str, virtual_path: str) -> SourceFile:
+    with open(os.path.join(FIXTURES, name)) as f:
+        return SourceFile(virtual_path, f.read())
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------------------ host-sync
+
+
+def test_host_sync_flags_every_rule():
+    sf = _fixture("host_sync_flagged.py", "serve/fixture.py")
+    findings = host_sync.check([sf])
+    assert _rules(findings) == {"device-get", "sync-method",
+                                "scalar-coercion", "np-materialize"}
+    assert sum(1 for f in findings if f.rule == "sync-method") == 2
+    # findings carry clickable positions
+    assert all(f.path == "serve/fixture.py" and f.line > 0
+               for f in findings)
+
+
+def test_host_sync_clean_fixture_passes():
+    sf = _fixture("host_sync_clean.py", "serve/fixture.py")
+    assert host_sync.check([sf]) == []
+    # ... and its pragma was actually consumed, not ignored
+    assert pragma_findings([sf]) == []
+
+
+def test_host_sync_scopes_to_hot_path_packages():
+    # the same violations under launch/ (offline tooling) don't flag
+    sf = _fixture("host_sync_flagged.py", "launch/fixture.py")
+    assert host_sync.check([sf]) == []
+
+
+# ------------------------------------------------------------ jit-purity
+
+
+def test_jit_purity_flags_every_rule():
+    sf = _fixture("jit_purity_flagged.py", "serve/fixture.py")
+    findings = jit_purity.check([sf])
+    assert _rules(findings) == {"print", "numpy-on-traced",
+                                "host-random", "closure-mutation"}
+
+
+def test_jit_purity_clean_fixture_passes():
+    # Pallas ref mutation through entry params + numpy on static
+    # values must NOT flag
+    sf = _fixture("jit_purity_clean.py", "serve/fixture.py")
+    assert jit_purity.check([sf]) == []
+
+
+def test_jit_purity_requires_reachability():
+    # the flagged fixture's effects live in functions reachable from
+    # jax.jit; with the jit site removed nothing is analyzed
+    with open(os.path.join(FIXTURES, "jit_purity_flagged.py")) as f:
+        text = f.read().replace("step_jit = jax.jit(step)", "")
+    sf = SourceFile("serve/fixture.py", text)
+    assert jit_purity.check([sf]) == []
+
+
+# -------------------------------------------------------- pallas-contract
+
+
+def test_pallas_flags_every_rule():
+    sf = _fixture("pallas_flagged.py", "kernels/fixture.py")
+    findings = pallas_contracts.check([sf])
+    assert {"index-map-arity", "block-rank", "kernel-arity",
+            "lane-alignment", "vmem-budget",
+            "grid-semantics"} <= _rules(findings)
+
+
+def test_pallas_missing_budget_flags():
+    sf = _fixture("pallas_missing_budget.py", "kernels/fixture.py")
+    assert "missing-budget" in _rules(pallas_contracts.check([sf]))
+
+
+def test_pallas_clean_fixture_passes():
+    sf = _fixture("pallas_clean.py", "kernels/fixture.py")
+    assert pallas_contracts.check([sf]) == []
+
+
+def test_pallas_scopes_to_kernels_package():
+    sf = _fixture("pallas_flagged.py", "serve/fixture.py")
+    assert pallas_contracts.check([sf]) == []
+
+
+# ------------------------------------------------------------- telemetry
+
+
+def _telemetry_files(metrics_fixture):
+    return [
+        _fixture(metrics_fixture, "serve/metrics.py"),
+        _fixture("telemetry_engine.py", "serve/engine.py"),
+        _fixture("telemetry_traffic.py", "sim/traffic.py"),
+    ]
+
+
+def test_telemetry_flags_drift():
+    findings = telemetry.check(
+        _telemetry_files("telemetry_metrics_flagged.py"))
+    assert _rules(findings) == {"double-classified", "unclassified-key",
+                                "stale-registry-entry"}
+    assert any("mystery_key" in f.message for f in findings)
+    assert any("ghost_counter" in f.message for f in findings)
+
+
+def test_telemetry_clean_partition_passes():
+    assert telemetry.check(
+        _telemetry_files("telemetry_metrics_clean.py")) == []
+
+
+# -------------------------------------------------------------- pragmas
+
+
+def test_bad_pragmas_flagged():
+    sf = SourceFile("serve/fixture.py", "\n".join([
+        "x = 1  # timcheck: allow[d2h]",           # no reason
+        "y = 2  # timcheck: allow[warp-speed] why",  # unknown rule
+    ]))
+    rules = _rules(pragma_findings([sf]))
+    assert rules == {"bad-pragma"}
+
+
+def test_unused_pragma_flagged():
+    sf = SourceFile("serve/fixture.py",
+                    "# timcheck: allow[d2h] nothing here needs it\n"
+                    "x = 1\n")
+    host_sync.check([sf])
+    assert _rules(pragma_findings([sf])) == {"unused-pragma"}
+
+
+# -------------------------------------------- acceptance: the repo tree
+
+
+def test_repo_tree_is_clean():
+    """`python -m repro.analysis.check` exits zero on the tree as
+    committed — every sanctioned transfer carries its pragma."""
+    findings = run_all(load_repo())
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_engine_pragma_deletion_fails():
+    """Acceptance criterion: deleting the allow[d2h] pragma on the
+    engine's ONE accounted fetch makes the pass fail."""
+    repo = os.path.dirname(HERE)
+    path = os.path.join(repo, "src", "repro", "serve", "engine.py")
+    with open(path) as f:
+        text = f.read()
+    marker = "# timcheck: allow[d2h] the ONE accounted fetch"
+    assert marker in text, "engine.py lost its accounted-fetch pragma"
+    doctored = "\n".join(
+        line for line in text.splitlines() if marker not in line)
+    sf = SourceFile("serve/engine.py", doctored)
+    findings = host_sync.check([sf])
+    assert any(f.rule == "device-get" and "device_get" in f.message
+               for f in findings)
+    # and the flagged line is the fetch itself
+    flagged_lines = {doctored.splitlines()[f.line - 1] for f in findings}
+    assert any("the ONE d2h fetch" in ln for ln in flagged_lines)
+
+
+# ------------------------------------------------------------------ CLI
+
+
+def _seeded_root(tmp_path, violating: bool):
+    pkg = tmp_path / "src" / "repro"
+    (pkg / "serve").mkdir(parents=True)
+    body = ("def f(x):\n"
+            "    return jax.device_get(x)\n" if violating else
+            "def f(x):\n"
+            "    return x\n")
+    (pkg / "serve" / "mod.py").write_text(body)
+    return str(tmp_path)
+
+
+def test_cli_exits_nonzero_on_seeded_violation(tmp_path, capsys):
+    rc = check_main(["--root", _seeded_root(tmp_path, violating=True)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "[host-sync/device-get]" in out
+
+
+def test_cli_exits_zero_when_clean(tmp_path, capsys):
+    rc = check_main(["--root", _seeded_root(tmp_path, violating=False)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "0 findings" in out
+
+
+def test_cli_json_report(tmp_path, capsys):
+    rc = check_main(["--json", "--root",
+                     _seeded_root(tmp_path, violating=True)])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert report["files_scanned"] == 1
+    assert report["counts"].get("host-sync/device-get") == 1
+    f = report["findings"][0]
+    assert {"checker", "rule", "path", "line", "message"} <= set(f)

@@ -243,6 +243,56 @@ def test_counter_deltas_counters_vs_gauges():
     assert [r["step"] for r in d] == [1, 2, 3]            # gauge: raw
 
 
+def test_counter_deltas_strict_registry():
+    # ISSUE-7 satellite: the old code passed any non-int value through
+    # as a gauge, so a typo'd or unclassified key silently corrupted
+    # the rate streams.  Routing is now strict against the
+    # COUNTERS/GAUGES partition.
+    with pytest.raises(KeyError, match="neither COUNTERS nor GAUGES"):
+        metrics.counter_deltas([{"scheduled_tokenz": 10}])
+    # a declared counter carrying a non-integer value is a type error,
+    # not a silent pass-through
+    with pytest.raises(TypeError, match="non-integer"):
+        metrics.counter_deltas([{"scheduled_tokens": 10.5}])
+    # the registry is a partition: no key is classified twice, and the
+    # engine's stats() keys are all classified
+    assert not (metrics.COUNTERS & metrics.GAUGES)
+    eng = _engine()
+    snap = eng.stats()
+    declared = metrics.COUNTERS | metrics.GAUGES
+    assert set(snap) <= declared
+    d = metrics.counter_deltas([snap, snap])
+    assert all(d[1][k] == 0 for k in snap if k in metrics.COUNTERS)
+    assert all(d[1][k] == snap[k] for k in snap if k in metrics.GAUGES)
+
+
+def test_bursty_replay_under_transfer_guard():
+    # ISSUE-7 satellite, the runtime complement to the host-sync lint:
+    # a bursty shared-prefix replay runs with implicit device->host
+    # transfers DISALLOWED.  jax.transfer_guard_device_to_host blocks
+    # implicit d2h (e.g. np.asarray over a jax.Array) but exempts
+    # explicit jax.device_get — which is exactly the engine's ONE
+    # accounted fetch per step — so the guard passing proves every
+    # hot-path transfer goes through the accounted fetch.  The default
+    # pool keeps preemption idle: the swap-out path's np.asarray fetch
+    # is accounted separately (swap_d2h_fetches) but is implicit, so a
+    # swap under the guard would (correctly) trip it.
+    eng = _engine()
+    tcfg = TrafficConfig(seed=9, n_requests=6, process="bursty",
+                         rate=0.6, prompt_len=(4, 20), max_new=(1, 4),
+                         shared_frac=0.5, prefix_len=(16, 16),
+                         vocab_size=_setup()["cfg"].vocab_size)
+    trace = generate_trace(tcfg)
+    with jax.transfer_guard_device_to_host("disallow"):
+        res = run_trace(eng, trace)
+    assert res.digest()["requests_finished"] == 6
+    # every step's sample readback went through the accounted fetch
+    # (idle steps — nothing scheduled yet — skip the fetch entirely)
+    snap = eng.stats()
+    assert 0 < snap["d2h_fetches"] <= eng.iters
+    assert snap["swap_d2h_fetches"] == 0
+
+
 def test_drift_detector_flags_sustained_not_spike():
     flat = [10.0] * 40
     # a single 5x spike: the trailing MEDIAN never moves
