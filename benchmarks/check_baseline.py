@@ -66,6 +66,21 @@ PAGED_BASELINE = os.path.join(
 SERVING_BASELINE = os.path.join(
     os.path.dirname(os.path.abspath(__file__)),
     "baselines", "serving_baseline.csv")
+# token-packed serving rows (serving_bench.serving_packed_rows): they
+# carry columns the padded rows predate (grid_tokens,
+# padding_efficiency), so — same discipline again — they gate in
+# their own CSV and the tracked serving_baseline.csv stays
+# byte-identical
+SERVING_PACKED_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "baselines", "serving_packed_baseline.csv")
+# opt-in wall-clock RATE band for the packed rows' coarse
+# steps_per_sec (higher is better — the band inverts): recorded, like
+# kernel_bench_wallclock.csv, only on the fixed runner class that
+# enforces it
+SERVING_WALLCLOCK_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "baselines", "serving_wallclock_baseline.csv")
 
 
 def wallclock_enabled() -> bool:
@@ -200,6 +215,50 @@ def compare_wallclock(rows: List[Dict],
     return problems
 
 
+def rate_view(rows: List[Dict]) -> List[Dict]:
+    """Keep only case + the ``steps_per_sec`` rate column."""
+    return [{"case": r["case"], "steps_per_sec": r["steps_per_sec"]}
+            for r in rows if r.get("steps_per_sec") is not None]
+
+
+def compare_wallclock_rates(rows: List[Dict],
+                            baseline_path: str = SERVING_WALLCLOCK_BASELINE,
+                            tol: float = 0.5) -> List[str]:
+    """Tolerance-band check of RATE columns (empty = pass).
+
+    Rates are higher-is-better, so the band inverts relative to
+    :func:`compare_wallclock`: a rate regresses when current <
+    baseline / (1 + tol); getting faster never fails."""
+    if not os.path.exists(baseline_path):
+        return [f"wall-clock rate baseline missing: {baseline_path} "
+                f"(run with BENCH_WALLCLOCK=1 --update to create it)"]
+    base = _load_csv(baseline_path)
+    got = {r["case"]: r for r in rate_view(rows)}
+    problems = []
+    for case, brow in base.items():
+        if case not in got:
+            problems.append(f"wall-clock rate: missing timed row {case}")
+            continue
+        for col, bval in brow.items():
+            if col == "case" or bval in ("", None):
+                continue
+            gval = got[case].get(col)
+            if gval in ("", None):
+                problems.append(f"wall-clock rate: {case}.{col} not "
+                                f"timed (baseline {bval}/s)")
+                continue
+            b, g = float(bval), float(gval)
+            if g < b / (1.0 + tol):
+                problems.append(
+                    f"wall-clock rate regression {case}.{col}: "
+                    f"{g:.2f}/s < {b:.2f}/s / (1 + {tol:g})")
+    for case in got:
+        if case not in base:
+            problems.append(f"wall-clock rate: unrecorded timed row "
+                            f"{case} (run BENCH_WALLCLOCK=1 --update)")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--update", action="store_true",
@@ -218,8 +277,12 @@ def main(argv=None) -> int:
     # timings (interpret-mode kernel) are printed, never compared, and
     # they stay out of the wall-clock band entirely
     paged = paged_attention_rows(timed=args.exercise)
-    from benchmarks.serving_bench import serving_rows
+    from benchmarks.serving_bench import (serving_packed_rows,
+                                          serving_rows)
     serving = serving_rows(timed=args.exercise)
+    # packed rows are timed under the wall-clock band too: their
+    # steps_per_sec rate is the one serving number it gates
+    packed = serving_packed_rows(timed=args.exercise or wallclock)
     if wallclock:
         # min over repetitions stabilizes the quick-mode timings enough
         # to gate on (single-shot quick timings vary several x)
@@ -227,13 +290,15 @@ def main(argv=None) -> int:
             [full] + [bench(timed=True, quick=True)
                       for _ in range(wallclock_reps() - 1)])
     if args.exercise or wallclock:
-        for r in full + paged + serving:
-            us = {k: v for k, v in r.items() if k.endswith("_us")}
+        for r in full + paged + serving + packed:
+            us = {k: v for k, v in r.items() if k.endswith("_us")
+                  or k == "steps_per_sec"}
             if us:
                 print(f"[exercise] {r['case']}: {us}")
     rows = deterministic_view(full)
     paged_rows = deterministic_view(paged)
     serving_csv_rows = deterministic_view(serving)
+    packed_csv_rows = deterministic_view(packed)
 
     if args.update:
         _rows_to_csv(rows, BASELINE)
@@ -244,28 +309,41 @@ def main(argv=None) -> int:
         _rows_to_csv(serving_csv_rows, SERVING_BASELINE)
         print(f"[check_baseline] wrote {SERVING_BASELINE} "
               f"({len(serving_csv_rows)} rows)")
+        _rows_to_csv(packed_csv_rows, SERVING_PACKED_BASELINE)
+        print(f"[check_baseline] wrote {SERVING_PACKED_BASELINE} "
+              f"({len(packed_csv_rows)} rows)")
         if wallclock:
             wrows = wallclock_view(full)
             _rows_to_csv(wrows, WALLCLOCK_BASELINE)
             print(f"[check_baseline] wrote {WALLCLOCK_BASELINE} "
                   f"({len(wrows)} timed rows)")
+            rrows = rate_view(packed)
+            _rows_to_csv(rrows, SERVING_WALLCLOCK_BASELINE)
+            print(f"[check_baseline] wrote {SERVING_WALLCLOCK_BASELINE} "
+                  f"({len(rrows)} timed rows)")
         return 0
 
     problems = compare_against_baseline(rows)
     problems += compare_against_baseline(paged_rows, PAGED_BASELINE)
     problems += compare_against_baseline(serving_csv_rows,
                                          SERVING_BASELINE)
+    problems += compare_against_baseline(packed_csv_rows,
+                                         SERVING_PACKED_BASELINE)
     if wallclock:
-        # serving rows stay out of the band (their *_us are whole-trace
-        # replays, not kernel timings) — analytic gate only
+        # padded serving rows stay out of the band (their *_us are
+        # whole-trace replays, not kernel timings) — analytic gate
+        # only; the packed rows gate their coarse steps_per_sec RATE
         problems += compare_wallclock(full, tol=wallclock_tolerance())
+        problems += compare_wallclock_rates(packed,
+                                            tol=wallclock_tolerance())
     if problems:
         for p in problems:
             print(f"[check_baseline] FAIL: {p}", file=sys.stderr)
         return 1
     gate = " + wall-clock band" if wallclock else ""
     print(f"[check_baseline] OK: {len(rows)} + {len(paged_rows)} "
-          f"(paged-attention) + {len(serving_csv_rows)} (serving) "
+          f"(paged-attention) + {len(serving_csv_rows)} (serving) + "
+          f"{len(packed_csv_rows)} (packed serving) "
           f"rows match the baselines" + gate)
     return 0
 

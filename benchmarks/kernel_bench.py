@@ -58,9 +58,11 @@ def _time(fn, *args, iters=20, warmup=3) -> float:
 
 
 def deterministic_view(rows: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
-    """Strip the machine-dependent wall-clock (``*_us``) columns; what
-    remains is the analytic baseline tracked in CSV."""
-    return [{k: v for k, v in r.items() if not k.endswith("_us")}
+    """Strip the machine-dependent wall-clock columns (``*_us`` plus
+    the serving rows' ``steps_per_sec`` rate); what remains is the
+    analytic baseline tracked in CSV."""
+    return [{k: v for k, v in r.items()
+             if not (k.endswith("_us") or k == "steps_per_sec")}
             for r in rows]
 
 

@@ -130,6 +130,13 @@ def roofline_row(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
     step_time = max(terms.values())
 
     mf = model_flops(cell["arch"], cell["shape"], cell["shape"])
+    if cell.get("scheduled_tokens"):
+        # mixed cells report BOTH the launched grid and the scheduled
+        # token count; useful work is priced from the cell's own
+        # scheduled_tokens — the padded (slots, chunk) grid only
+        # inflates the lowered HLO term, it never adds useful FLOPs.
+        mf = 2.0 * arch_params(cell["arch"])["active"] \
+            * cell["scheduled_tokens"]
     mf_dev = mf / n_dev
     useful_frac = mf_dev / flops_dev if flops_dev else 0.0
     # roofline fraction: useful model FLOP/s achieved at the bound vs peak
@@ -148,6 +155,16 @@ def roofline_row(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
         "temp_gb_per_dev": mem.get("temp_size_in_bytes", 0) / 2**30,
         "wire_mb_per_dev": wire / 2**20,
     }
+    if "grid_tokens" in cell:
+        # mixed cells: scheduled vs launched-grid accounting.  The
+        # padding_efficiency (< 1 on the padded step, ~1 on the
+        # token-packed step) is the fraction of grid rows doing real
+        # work — the same digest serve/metrics.py reports live.
+        grid = cell["grid_tokens"]
+        row["sched_tokens"] = cell.get("scheduled_tokens", 0)
+        row["grid_tokens"] = grid
+        row["padding_efficiency"] = \
+            row["sched_tokens"] / grid if grid else 0.0
     if "prefix_hit_rate" in cell:
         # paged mixed cell: the grid (and so every lowered term) is
         # identical to the unpaged one — the win is useful work (the

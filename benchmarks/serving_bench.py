@@ -25,13 +25,25 @@ Rows:
     (slots + chunk = 10): the continuous-batching knob's TTFT/TPOT
     trade-off, gated so a scheduler change that shifts the curve shows
     up as a baseline diff.
+  * ``serve_packed_*`` (``serving_packed_rows``) — the token-packed
+    engine (``packed=True``): the same traces through the flattened
+    ``(total_tokens,)`` step, with ``grid_tokens`` /
+    ``padding_efficiency`` columns gated in their own CSV
+    (serving_packed_baseline.csv).  The decode-heavy row asserts the
+    headline payoff: ``grid_tokens`` within 2x of
+    ``scheduled_tokens`` in steady state (the padded grid sits at
+    slots*chunk/step regardless of load).
 
 Wall-clock enters only as ``*_us`` columns (replay wall time and
 us/step) when ``timed=True`` — printed by ``check_baseline
 --exercise``, stripped by ``deterministic_view`` before gating, and
 deliberately NOT part of the BENCH_WALLCLOCK band (a whole-trace
 replay is far noisier than a kernel microbench; see docs/serving.md
-§benchmark gates).
+§benchmark gates).  The one exception is the coarse ``steps_per_sec``
+rate (whole-replay steps / wall seconds) on the packed rows: with
+``BENCH_WALLCLOCK=1`` it gates against
+serving_wallclock_baseline.csv as a RATE (regression = slower steps,
+i.e. current < baseline / (1 + tol)).
 """
 from __future__ import annotations
 
@@ -63,34 +75,37 @@ SMALL_POOL_TRAFFIC = dict(seed=11, n_requests=12, process="bursty",
                           max_new=(4, 8), n_prefix_pools=1,
                           shared_frac=0.5, prefix_len=(16, 16))
 
-# ONE compiled step shared across every engine in the bench (fixed
-# (slots, chunk) shape; jax.jit keys the pool shapes internally) —
-# per-engine closures would recompile identical HLO per row
+# ONE compiled step per layout (padded / packed) shared across every
+# engine in the bench (fixed (slots, chunk) shape; jax.jit keys the
+# pool and packed-bucket shapes internally) — per-engine closures
+# would recompile identical HLO per row
 _SHARED: Dict[str, Any] = {}
 
 
 def _engine(num_blocks=None, preempt: str = "auto",
-            prefix_reuse: Any = "auto", token_budget=None):
+            prefix_reuse: Any = "auto", token_budget=None,
+            packed: bool = False):
     from repro.sim.traffic import smoke_engine
     eng, _ = smoke_engine(ARCH, slots=SLOTS, max_len=MAX_LEN,
                           block_size=BLOCK_SIZE, chunk=CHUNK,
                           num_blocks=num_blocks, preempt=preempt,
                           prefix_reuse=prefix_reuse,
-                          token_budget=token_budget)
-    if "step" not in _SHARED:
-        _SHARED["step"] = eng._step
+                          token_budget=token_budget, packed=packed)
+    key = "packed_step" if packed else "step"
+    if key not in _SHARED:
+        _SHARED[key] = eng._step
         _SHARED["copy"] = eng._copy_step
     else:
-        eng._step = _SHARED["step"]
+        eng._step = _SHARED[key]
         eng._copy_step = _SHARED["copy"]
     return eng
 
 
 def _row(case: str, traffic_kw: Dict[str, Any], timed: bool,
-         **engine_kw) -> Dict[str, Any]:
+         packed: bool = False, **engine_kw) -> Dict[str, Any]:
     from repro.sim.traffic import (TrafficConfig, generate_trace,
                                    run_trace)
-    eng = _engine(**engine_kw)
+    eng = _engine(packed=packed, **engine_kw)
     tcfg = TrafficConfig(vocab_size=eng.cfg.vocab_size, **traffic_kw)
     trace = generate_trace(tcfg)
     t0 = time.perf_counter()
@@ -106,6 +121,12 @@ def _row(case: str, traffic_kw: Dict[str, Any], timed: bool,
         "token_budget": eng.token_budget,
     }
     row.update(res.summary())
+    if not packed:
+        # the grid/padding accounting postdates the tracked
+        # serving_baseline.csv — keep the legacy rows byte-identical
+        # and gate those columns on the serve_packed_* rows only
+        row.pop("grid_tokens", None)
+        row.pop("padding_efficiency", None)
     # sustained-drift verdicts are part of the gated row: a scheduler
     # change that makes queue depth or rolling TTFT p99 drift under the
     # fixed workload flips these bits
@@ -115,6 +136,9 @@ def _row(case: str, traffic_kw: Dict[str, Any], timed: bool,
     if timed:
         row["trace_wall_us"] = wall * 1e6
         row["per_step_us"] = wall * 1e6 / max(res.steps, 1)
+        # coarse throughput RATE for the opt-in wall-clock band
+        # (higher is better; stripped by deterministic_view)
+        row["steps_per_sec"] = res.steps / wall if wall > 0 else 0.0
     return row
 
 
@@ -142,6 +166,41 @@ def serving_rows(timed: bool = False) -> List[Dict[str, Any]]:
     return rows
 
 
+# decode-heavy steady state for the token-packed payoff gate: short
+# prompts admitted quickly, then long decode phases where every slot
+# contributes exactly one token per step — the padded grid still
+# launches slots*chunk rows, the packed step's bucket hugs the
+# scheduled count
+DECODE_HEAVY_TRAFFIC = dict(seed=13, n_requests=16, process="poisson",
+                            rate=0.6, prompt_len=(4, 8),
+                            max_new=(8, 14), n_prefix_pools=1,
+                            shared_frac=0.0, prefix_len=(4, 4))
+
+
+def serving_packed_rows(timed: bool = False) -> List[Dict[str, Any]]:
+    """Token-packed engine rows (serving_packed_baseline.csv): same
+    deterministic digests as :func:`serving_rows` plus the
+    ``grid_tokens`` / ``padding_efficiency`` columns the padded rows
+    predate.  The decode-heavy row enforces the headline payoff."""
+    rows = [
+        _row("serve_packed_bursty_shared", HEADLINE_TRAFFIC, timed,
+             packed=True),
+        _row("serve_packed_smallpool_auto", SMALL_POOL_TRAFFIC, timed,
+             packed=True, num_blocks=SMALL_POOL),
+        _row("serve_packed_decode_heavy", DECODE_HEAVY_TRAFFIC, timed,
+             packed=True),
+    ]
+    dh = rows[-1]
+    # the acceptance gate: decode-heavy steady state launches at most
+    # 2x the scheduled tokens (bucketing rounds up to powers of two)
+    if dh["grid_tokens"] > 2 * dh["scheduled_tokens"]:
+        raise AssertionError(
+            f"packed step lost its payoff: grid_tokens "
+            f"{dh['grid_tokens']} > 2x scheduled_tokens "
+            f"{dh['scheduled_tokens']} on the decode-heavy trace")
+    return rows
+
+
 def main() -> int:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -149,7 +208,9 @@ def main() -> int:
                     help="also report replay wall time (*_us, printed "
                          "only — never gated)")
     args = ap.parse_args()
-    for r in serving_rows(timed=args.timed):
+    rows = serving_rows(timed=args.timed) \
+        + serving_packed_rows(timed=args.timed)
+    for r in rows:
         print(f"== {r['case']} ==")
         for k, v in r.items():
             if k != "case":

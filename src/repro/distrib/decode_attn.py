@@ -228,6 +228,28 @@ def sharded_paged_mixed_attention(q, k_pool, v_pool, block_tables,
                      out_specs=P())(*args)
 
 
+def sharded_packed_mixed_attention(q, k_pool, v_pool, block_tables,
+                                   seg_ids, kv_valid_len,
+                                   mesh: Mesh, block_axis: str = "data",
+                                   q_offset: Optional[jax.Array] = None,
+                                   impl: str = "auto",
+                                   chunk_kv: int = 1024):
+    """Token-packed variant of ``sharded_paged_mixed_attention``: T
+    single-token queries (T, 1, H, D) with per-token ``seg_ids`` naming
+    each token's slot in the (slots, nblk) block table.  The per-B
+    contract of the paged path already generalizes to B = T — this
+    wrapper just gathers each token's table row (bucket-padding rows,
+    seg -1, clamp to slot 0 and are masked by their zero validity
+    length) and delegates, so the compaction, lse merge, and both
+    ``impl`` routes are shared, not re-implemented."""
+    nslots = block_tables.shape[0]
+    seg = jnp.clip(seg_ids, 0, nslots - 1).astype(jnp.int32)
+    return sharded_paged_mixed_attention(
+        q, k_pool, v_pool, block_tables[seg], kv_valid_len, mesh,
+        block_axis=block_axis, q_offset=q_offset, impl=impl,
+        chunk_kv=chunk_kv)
+
+
 def sharded_decode_attention(q, k_cache, v_cache, cache_len,
                              mesh: Mesh, seq_axis: str = "data"):
     """One-token decode (Sq == 1) against a sequence-sharded cache."""

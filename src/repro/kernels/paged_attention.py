@@ -43,6 +43,10 @@ Variants
 * ``paged_decode_attention_pallas`` — the S == 1 decode special case;
   skips the causal term entirely (the last token's causality is implied
   by ``kv_valid_len``, exactly the classic-decode contract).
+* ``paged_packed_attention_pallas`` — the token-packed serving layout:
+  T single-token queries with per-token ``seg_ids``; the block table
+  stays per-SLOT and the index map resolves ``tbl[seg[t], j]`` (a
+  second SMEM read), so packing never materializes a per-token table.
 * int8 KV: pass ``k_scale``/``v_scale`` pools — codes and their
   per-(token, head) scales are gathered by the same index map and
   dequantized in-VMEM (``codes * scale -> compute dtype``), matching
@@ -87,9 +91,13 @@ TIMCHECK_VMEM = {
 
 def _paged_attn_kernel(*args, nc: int, cb: int, bs: int, sq: int,
                        gsq: int, causal: bool, quant: bool,
-                       compacted: bool, normalize: bool, dequant_dtype):
+                       compacted: bool, normalize: bool, dequant_dtype,
+                       packed: bool = False):
+    # packed: a 6th scalar-prefetch operand (per-token segment IDs)
+    # rides along for the index maps only — the body never reads it
+    # (vlen/qoff are already per-B = per-token)
     tbl_ref, lblk_ref, sel_ref, vlen_ref, qoff_ref = args[:5]
-    idx = 5
+    idx = 6 if packed else 5
     q_ref, k_ref, v_ref = args[idx:idx + 3]
     idx += 3
     if quant:
@@ -315,6 +323,115 @@ def paged_mixed_attention_pallas(q, k_pool, v_pool, block_tables,
         q, k_pool, v_pool, block_tables, kv_valid_len,
         q_offset=q_offset, chunk_kv=chunk_kv, k_scale=k_scale,
         v_scale=v_scale, causal=True, interpret=interpret)
+
+
+def paged_packed_attention_pallas(
+        q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+        block_tables: jax.Array, seg_ids: jax.Array,
+        kv_valid_len: jax.Array, *,
+        q_offset: jax.Array,
+        chunk_kv: int = 1024,
+        k_scale: Optional[jax.Array] = None,
+        v_scale: Optional[jax.Array] = None,
+        interpret: Optional[bool] = None):
+    """Packed-query paged attention: block tables index per-SEGMENT.
+
+    The token-packed serving layout — q: (T, 1, H, D) single-token
+    queries, ``block_tables`` the un-gathered PER-SLOT (slots,
+    max_blocks) table, ``seg_ids`` (T,) the slot each token reads
+    (out-of-range entries — bucket padding — are clamped host-side and
+    masked by ``kv_valid_len == 0``).  ``kv_valid_len`` / ``q_offset``
+    are per-token (T,).
+
+    Same kernel body as ``_paged_attn_kernel`` (vlen/qoff are already
+    per-grid-row, so at B = T they are simply per-token); the only new
+    machinery is a 6th scalar-prefetch operand and an index map that
+    resolves ``tbl[seg[t], c*cb + i]`` — two SMEM reads per grid step,
+    so no (T, max_blocks) gathered table ever exists in HBM.  Grid
+    (T, Hk, nc, cb); VMEM per cell is the mixed kernel's at Sq = 1
+    (gsq = G), i.e. strictly under the ``TIMCHECK_VMEM`` budget.
+
+    Returns (T, 1, H, D).
+    """
+    b, sq, h, d = q.shape
+    assert sq == 1, q.shape
+    nb, bs, hk = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    assert h % hk == 0, (h, hk)
+    g = h // hk
+    gsq = g * sq
+    quant = k_scale is not None
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    assert chunk_kv % bs == 0, (chunk_kv, bs)
+    cb = chunk_kv // bs
+    nslots, nblk = block_tables.shape
+    pad = (-nblk) % cb
+    tbl = jnp.clip(block_tables, 0, nb - 1).astype(jnp.int32)
+    if pad:  # padded entries masked positionally via kv_valid_len
+        tbl = jnp.pad(tbl, ((0, 0), (0, pad)))
+    nc = (nblk + pad) // cb
+    lblk = jnp.zeros((1, 1), jnp.int32)       # unused (entry == block)
+    sel = jnp.zeros((1, 1), jnp.int32)
+
+    qg = q.reshape(b, sq, hk, g, d).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(b, hk, gsq, d).astype(jnp.float32) * (d ** -0.5)
+    vlen = jnp.asarray(kv_valid_len, jnp.int32).reshape(b)
+    qoff = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    seg = jnp.clip(seg_ids, 0, nslots - 1).astype(jnp.int32)
+
+    def _tbl_idx(bb, hh, c, i, tbl_r, lblk_r, sel_r, vlen_r, qoff_r,
+                 seg_r):
+        return (tbl_r[seg_r[bb], c * cb + i], 0, hh, 0)
+
+    def _scale_idx(bb, hh, c, i, tbl_r, lblk_r, sel_r, vlen_r, qoff_r,
+                   seg_r):
+        return (tbl_r[seg_r[bb], c * cb + i], 0, hh)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, gsq, d), lambda bb, hh, c, i, *_: (bb, hh, 0, 0)),
+        pl.BlockSpec((1, bs, 1, d), _tbl_idx),
+        pl.BlockSpec((1, bs, 1, d), _tbl_idx),
+    ]
+    inputs = [qg, k_pool, v_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, 1), _scale_idx),
+                     pl.BlockSpec((1, bs, 1), _scale_idx)]
+        inputs += [k_scale, v_scale]
+
+    o_spec = pl.BlockSpec((1, 1, gsq, d), lambda bb, hh, c, i, *_:
+                          (bb, hh, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((b, hk, gsq, d), q.dtype)
+
+    kernel = functools.partial(
+        _paged_attn_kernel, nc=nc, cb=cb, bs=bs, sq=sq, gsq=gsq,
+        causal=True, quant=quant, compacted=False,
+        normalize=True, dequant_dtype=q.dtype, packed=True)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(b, hk, nc, cb),
+        in_specs=in_specs,
+        out_specs=o_spec,
+        scratch_shapes=[
+            pltpu.VMEM((gsq, cb * bs), jnp.float32),   # assembled scores
+            pltpu.VMEM((cb * bs, d), jnp.float32),     # assembled V chunk
+            pltpu.VMEM((gsq, 1), jnp.float32),         # running max
+            pltpu.VMEM((gsq, 1), jnp.float32),         # running sum
+            pltpu.VMEM((gsq, d), jnp.float32),         # accumulator
+        ])
+
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=compiler_params(
+            ("parallel", "parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(tbl, lblk, sel, vlen, qoff, seg, *inputs)
+
+    o = outs.reshape(b, hk, g, sq, d).transpose(0, 3, 1, 2, 4)
+    return o.reshape(b, sq, h, d)
 
 
 def paged_decode_attention_pallas(q, k_pool, v_pool, block_tables,

@@ -35,8 +35,8 @@ from repro.nn.linear import (dense_apply, dense_init, dense_specs,
 from repro.nn.mlp import mlp_apply, mlp_init, mlp_specs
 from repro.nn.module import subkey
 from repro.nn.moe import moe_apply, moe_init, moe_specs
-from repro.nn.ssm import (mamba_apply, mamba_init, mamba_init_cache,
-                          mamba_specs)
+from repro.nn.ssm import (mamba_apply, mamba_apply_packed, mamba_init,
+                          mamba_init_cache, mamba_specs)
 
 Params = Dict[str, Any]
 
@@ -115,7 +115,8 @@ _kv_dequantize = attn.kv_dequantize
 
 def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
                       cache, cache_len, media, cross: bool,
-                      n_new=None, block_tables=None, slot_map=None):
+                      n_new=None, block_tables=None, slot_map=None,
+                      seg_ids=None):
     b, s, _ = x.shape
     hd, h, hk = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     pol = cfg.ternary
@@ -184,11 +185,17 @@ def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
                 cap = cache["k"].shape[0] * cache["k"].shape[1]
                 pos = slot_map
             else:
-                smax = cache["k"].shape[1]
-                cap = b * smax
+                # token-packed (seg_ids): B = T tokens scatter into
+                # their SEGMENT's cache row, not row b — the cache
+                # keeps (slots, S_max) rows while the grid is (T, 1)
+                nrows, smax = cache["k"].shape[0], cache["k"].shape[1]
+                cap = nrows * smax
                 row = cache_len[:, None] + col
-                pos = jnp.where(row < smax,
-                                jnp.arange(b)[:, None] * smax + row, cap)
+                if seg_ids is not None:
+                    rid = jnp.clip(seg_ids, 0, nrows - 1)[:, None]
+                else:
+                    rid = jnp.arange(b)[:, None]
+                pos = jnp.where(row < smax, rid * smax + row, cap)
             widx = jnp.where(col < nn_[:, None], pos, cap).reshape(-1)
 
             def scatter(pool, vals):
@@ -224,11 +231,19 @@ def _attn_block_apply(p, x, cfg: ArchConfig, positions, mode: str,
                 new_cache = {"k": scatter(cache["k"], k),
                              "v": scatter(cache["v"], v)}
                 kd, vd = new_cache["k"], new_cache["v"]
-            o = attn.mixed_attention(q, kd, vd, cache_len + nn_,
-                                     cache_len,
-                                     chunk_kv=cfg.attn_chunk_kv,
-                                     block_tables=block_tables,
-                                     **scale_kw)
+            if seg_ids is not None:
+                # token-packed: per-token validity/offset; bucket
+                # padding rides along with kv_valid_len == 0
+                o = attn.packed_mixed_attention(
+                    q, kd, vd, seg_ids, cache_len + nn_, cache_len,
+                    chunk_kv=cfg.attn_chunk_kv,
+                    block_tables=block_tables, **scale_kw)
+            else:
+                o = attn.mixed_attention(q, kd, vd, cache_len + nn_,
+                                         cache_len,
+                                         chunk_kv=cfg.attn_chunk_kv,
+                                         block_tables=block_tables,
+                                         **scale_kw)
 
     o = o.reshape(b, s, h * hd)
     o = ternary_dense_apply(p["o"], o, pol, cd)
@@ -279,17 +294,25 @@ def _block_specs(cfg: ArchConfig, spec: BlockSpec):
 
 def _block_apply(p, x, cfg: ArchConfig, spec: BlockSpec, positions,
                  mode, cache, cache_len, media, n_new=None,
-                 block_tables=None, slot_map=None):
+                 block_tables=None, slot_map=None, seg_ids=None):
     aux = jnp.zeros((), jnp.float32)
     if spec.mixer in ("attn", "cross_attn"):
         x, new_cache = _attn_block_apply(
             p, x, cfg, positions, mode, cache, cache_len, media,
-            spec.mixer == "cross_attn", n_new, block_tables, slot_map)
+            spec.mixer == "cross_attn", n_new, block_tables, slot_map,
+            seg_ids)
     else:
         h_in = _norm_apply(cfg, p["ln1"], x)
         mcache = cache if (cache and "ssm" in cache) else None
-        y, new_mcache = mamba_apply(p["mamba"], h_in, cfg.mamba, cfg.ternary,
-                                    cfg.cdtype, mcache, n_new=n_new)
+        if seg_ids is not None and mcache is not None:
+            # token-packed: per-slot recurrent state keyed by segment
+            y, new_mcache = mamba_apply_packed(
+                p["mamba"], h_in, cfg.mamba, cfg.ternary, cfg.cdtype,
+                mcache, seg_ids, n_new)
+        else:
+            y, new_mcache = mamba_apply(p["mamba"], h_in, cfg.mamba,
+                                        cfg.ternary, cfg.cdtype, mcache,
+                                        n_new=n_new)
         x = x + y.astype(x.dtype)
         new_cache = new_mcache if new_mcache is not None else cache
 
@@ -381,7 +404,8 @@ def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
             cache_len: Optional[jax.Array] = None,
             n_new: Optional[jax.Array] = None,
             block_tables: Optional[jax.Array] = None,
-            slot_map: Optional[jax.Array] = None
+            slot_map: Optional[jax.Array] = None,
+            seg_ids: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (hidden (B,S,d), new_caches (or None), moe_aux_loss).
 
@@ -401,6 +425,17 @@ def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
     Logical semantics (positions, causality, validity) are unchanged —
     paged and contiguous mixed steps are bit-identical.  Mamba conv/ssm
     recurrent state stays per-slot (it is O(1) per slot, not per-token).
+
+    Token-packed serving ('mixed' + ``seg_ids``): the batch is a flat
+    (T, 1) token buffer — B = total_tokens, S = 1 — and ``seg_ids``
+    ((T,) int32) names the slot each token belongs to (out-of-range
+    values mark bucket padding).  ``cache_len``/``n_new`` become
+    per-TOKEN (T,) arrays (the token's write position and 1/0
+    real-or-padding flag); attention routes through
+    ``packed_mixed_attention`` and mamba state gathers/scatters at
+    segment boundaries.  Per-token math is the padded grid's exactly
+    (same masks, same chunk boundaries), so greedy decoding is
+    token-for-token identical — docs/serving.md §token-packed.
     """
     from repro.distrib.sharding import hint_constrain
 
@@ -425,7 +460,7 @@ def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
             x, nc, aux = _block_apply(
                 period_params[f"b{j}"], x, cfg, spec, positions, mode,
                 blk_cache, cache_len, media, n_new, block_tables,
-                slot_map)
+                slot_map, seg_ids)
             x = hint_constrain(x, ("batch", "seq", None))
             new_caches[f"b{j}"] = nc if nc is not None else {}
             aux_total = aux_total + aux

@@ -330,6 +330,67 @@ def mixed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                              k_scale=k_scale, v_scale=v_scale, impl=impl)
 
 
+def packed_mixed_attention(q: jax.Array, k_cache: jax.Array,
+                           v_cache: jax.Array, seg_ids: jax.Array,
+                           kv_valid_len: jax.Array, q_offset: jax.Array,
+                           chunk_kv: int = 1024,
+                           block_tables: Optional[jax.Array] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
+                           impl: str = "auto") -> jax.Array:
+    """Token-packed mixed attention: T independent single-token queries.
+
+    The flattened serving layout — q is ``(T, 1, H, D)`` where T is the
+    bucketed ``total_tokens`` of one engine iteration and ``seg_ids``
+    (T,) names the slot each token belongs to (-1 / any out-of-range
+    value for bucket padding).  ``kv_valid_len`` / ``q_offset`` are
+    per-TOKEN (T,): token t attends causally over positions ``[0,
+    kv_valid_len[t])`` of segment ``seg_ids[t]``'s cache from position
+    ``q_offset[t]``.  Padding tokens ride along with ``kv_valid_len ==
+    0`` (fully masked rows stay finite in the shared scan) and their
+    outputs are discarded by the caller.
+
+    Because every query is its own batch row, this is exactly
+    ``mixed_attention`` at B = T, S = 1 against a per-token cache view —
+    same masks, same chunk boundaries, same shared scan body — so each
+    token's output is bit-identical to the padded ``(slots, chunk)``
+    grid's value for that token (the parity-oracle relationship
+    ``tests/test_attention.py`` pins).
+
+    Contiguous caches: ``k_cache``/``v_cache`` are (slots, S_max, Hk,
+    D) and each token's view is its segment's row.  Paged caches:
+    they are global block pools and ``block_tables`` is the PER-SLOT
+    (slots, max_blocks) table — the XLA oracle gathers each token's
+    table row up front, the Pallas route ships the un-gathered table
+    plus ``seg_ids`` to the packed-query kernel, which resolves
+    ``tbl[seg[t], j]`` in the scalar-prefetch index map (no (T,
+    max_blocks) gather ever exists in HBM).
+    """
+    nslots = (block_tables.shape[0] if block_tables is not None
+              else k_cache.shape[0])
+    seg = jnp.clip(seg_ids, 0, nslots - 1).astype(jnp.int32)
+    if block_tables is None:
+        assert k_scale is None and v_scale is None
+        return chunked_attention(q, k_cache[seg], v_cache[seg],
+                                 causal=True, chunk_kv=chunk_kv,
+                                 q_offset=q_offset,
+                                 kv_valid_len=kv_valid_len)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        from repro.kernels.paged_attention import \
+            paged_packed_attention_pallas
+        return paged_packed_attention_pallas(
+            q, k_cache, v_cache, block_tables, seg, kv_valid_len,
+            q_offset=q_offset, chunk_kv=chunk_kv, k_scale=k_scale,
+            v_scale=v_scale)
+    # XLA oracle: per-token table rows through the shared paged scan
+    return _paged_chunked_attention(q, k_cache, v_cache,
+                                    block_tables[seg], True, chunk_kv,
+                                    q_offset, kv_valid_len, k_scale,
+                                    v_scale, impl="xla")
+
+
 def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
     """Encoder-decoder attention (VLM image tokens): never causal."""

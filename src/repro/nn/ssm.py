@@ -268,6 +268,88 @@ def mamba_apply(p, x, cfg: MambaConfig, policy: TernaryPolicy,
     return out, new_cache
 
 
+def mamba_apply_packed(p, x, cfg: MambaConfig, policy: TernaryPolicy,
+                       compute_dtype=jnp.bfloat16,
+                       cache: Optional[dict] = None,
+                       seg_ids: Optional[jax.Array] = None,
+                       n_new: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, dict]:
+    """Token-packed mamba2 step: T single-token updates against
+    per-SLOT recurrent state.
+
+    The flattened serving layout — x: (T, 1, d) where ``seg_ids`` (T,)
+    names the slot each token belongs to and ``n_new`` (T,) in {0, 1}
+    marks bucket padding (0).  The cache holds PER-SLOT state
+    ({'conv': (slots, W-1, C), 'ssm': (slots, H, P, N)}); a lax.scan
+    over the T tokens gathers each token's segment state, applies one
+    conv tap-sum + SSD decode step, and scatters the new state back —
+    so a segment's tokens compose in flat-buffer order exactly like
+    the padded chunk did.  Padding tokens take identity steps: their
+    dt is zeroed (decay 1, update 0) and the conv-state slice at
+    ``n_new == 0`` re-selects the old state rows, so the clamped
+    segment's state is rewritten unchanged.
+
+    The conv taps sum in the same index order as ``_causal_conv`` over
+    bit-identical input rows, so conv outputs match the padded grid
+    exactly; the SSD update is ``ssd_decode_step``'s math applied
+    per token — the same recurrence the chunked dual form computes,
+    composed one token at a time.
+    """
+    t, s, _ = x.shape
+    assert s == 1, x.shape
+    assert cache is not None and seg_ids is not None and n_new is not None
+    di, n, nh, hp = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    nslots = cache["conv"].shape[0]
+    seg = jnp.clip(seg_ids, 0, nslots - 1).astype(jnp.int32)
+    f32 = jnp.float32
+
+    z = ternary_dense_apply(p["z_proj"], x, policy, compute_dtype)
+    xi = ternary_dense_apply(p["x_proj"], x, policy, compute_dtype)
+    bc = ternary_dense_apply(p["bc_proj"], x, policy, compute_dtype)
+    dt = ternary_dense_apply(p["dt_proj"], x, policy, compute_dtype)
+    dt = jax.nn.softplus(dt.astype(f32)
+                         + p["dt_bias"].astype(f32))             # (T,1,H)
+    valid = jnp.arange(s)[None, :] < n_new[:, None]              # (T,1)
+    dt = dt * valid[..., None]
+
+    conv_in = jnp.concatenate([xi, bc], axis=-1)                 # (T,1,C)
+    w = p["conv_w"].astype(compute_dtype)
+    cbias = p["conv_b"].astype(compute_dtype)
+    a = -jnp.exp(p["A_log"].astype(f32))
+    width = cfg.conv_width
+
+    def body(carry, inp):
+        conv_st, ssm_st = carry
+        ci, dt1, seg_t, nn_t = inp               # (1,C), (H,), (), ()
+        xp = jnp.concatenate([conv_st[seg_t].astype(ci.dtype), ci],
+                             axis=0)             # (W, C)
+        y = sum(xp[i:i + 1] * w[i] for i in range(width))
+        co = jax.nn.silu((y + cbias).astype(f32)).astype(ci.dtype)
+        new_cs = jax.lax.dynamic_slice_in_dim(xp, nn_t, width - 1, 0)
+        xi1, bc1 = co[0, :di], co[0, di:]
+        b1, c1 = bc1[:n].astype(f32), bc1[n:].astype(f32)
+        xh1 = xi1.reshape(nh, hp)
+        dec = jnp.exp(a * dt1)                                   # (H,)
+        upd = jnp.einsum("n,hp->hpn", b1,
+                         xh1.astype(f32) * dt1[:, None])
+        h_new = ssm_st[seg_t] * dec[..., None, None] + upd
+        y1 = jnp.einsum("hpn,n->hp", h_new, c1)
+        conv_st = conv_st.at[seg_t].set(new_cs.astype(conv_st.dtype))
+        ssm_st = ssm_st.at[seg_t].set(h_new)
+        return (conv_st, ssm_st), (y1.astype(ci.dtype), xh1)
+
+    (new_conv, new_ssm), (ys, xhs) = jax.lax.scan(
+        body, (cache["conv"], cache["ssm"]),
+        (conv_in, dt[:, 0], seg, n_new.astype(jnp.int32)))
+
+    y = ys + xhs.astype(ys.dtype) * p["D"].astype(ys.dtype)[:, None]
+    y = y.reshape(t, s, di)
+    y = rmsnorm_apply(p["norm"], y)
+    y = y * jax.nn.silu(z.astype(f32)).astype(y.dtype)
+    out = ternary_dense_apply(p["out_proj"], y, policy, compute_dtype)
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
 def mamba_init_cache(cfg: MambaConfig, batch: int, dtype=jnp.bfloat16):
     return {
         "conv": jnp.zeros((batch, cfg.conv_width - 1,

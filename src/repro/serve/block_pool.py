@@ -172,6 +172,22 @@ class BlockPool:
         self.refcount[bid] += 1
         return bid
 
+    def revive(self, bid: int) -> bool:
+        """Re-acquire a specific released block WITHOUT recycling it:
+        refcount 0 -> 1, contents intact.  The queued release entry
+        goes stale exactly as in ``lookup`` (skipped at pop via the
+        refcount check, or via the release generation once the block
+        is released again).  Returns False when the block holds a live
+        reference (someone allocated or revived it first).  Used by the
+        serving engine's tail-donation cache to pin a finished
+        request's partial tail block for the duration of a
+        copy-on-write read — partial tails carry no chain hash, so
+        ``lookup`` cannot revive them."""
+        if self.refcount[bid] != 0:
+            return False
+        self.refcount[bid] += 1
+        return True
+
     def register(self, bid: int, h: bytes) -> None:
         """Publish a completed block's chain hash.  First writer wins:
         if the hash is already mapped (a concurrent identical prefill),

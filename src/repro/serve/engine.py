@@ -284,6 +284,46 @@ def make_paged_unified_step(cfg: ArchConfig):
     return paged_step
 
 
+def make_packed_unified_step(cfg: ArchConfig):
+    """The token-packed engine step: the unified mixed prefill/decode
+    step expressed over a flat ``(total_tokens, 1)`` buffer instead of
+    the padded ``(slots, chunk)`` grid.
+
+    ``positions``/``n_new`` are per-TOKEN (T,) arrays (the token's
+    cache write offset and its 1/0 real-or-padding flag), ``seg_ids``
+    (T,) names each token's slot, ``slot_map`` (T, 1) its physical
+    write position, and ``last_idx`` (slots,) the flat index of each
+    slot's LAST scheduled token — the step gathers those rows
+    device-side so the returned logits keep the padded step's
+    (slots, vocab) shape and the host bookkeeping (one d2h fetch of
+    ``slots`` sampled tokens) is unchanged.  Rows of slots that
+    scheduled nothing point at index 0; the host ignores them.
+
+    Per-token math is the padded grid's exactly (docs/serving.md
+    §token-packed), so greedy outputs are token-for-token identical —
+    the padded step stays on as the parity oracle.
+    """
+    def packed_step(params, batch, caches, positions, n_new, seg_ids,
+                    block_tables, slot_map, last_idx):
+        fwd_batch = {"tokens": batch["tokens"]}
+        if "media" in batch:
+            # cross-attention needs per-ROW media: gather each token's
+            # slot media device-side (padding rows read slot 0 and are
+            # discarded by the last_idx gather)
+            nslots = block_tables.shape[0]
+            fwd_batch["media"] = batch["media"][
+                jnp.clip(seg_ids, 0, nslots - 1)]
+        hidden, caches, _ = tfm.forward(
+            params, cfg, fwd_batch, mode="mixed", caches=caches,
+            cache_len=positions, n_new=n_new,
+            block_tables=block_tables, slot_map=slot_map,
+            seg_ids=seg_ids)
+        last = hidden[last_idx]                     # (slots, 1, d)
+        lg = tfm.logits(params, cfg, last)
+        return lg[:, 0], caches
+    return packed_step
+
+
 def copy_kv_block(caches, src, dst):
     """Copy one physical KV block (every layer-period, K and V and any
     scales) — the copy-on-write primitive behind partial-tail prefix
@@ -463,7 +503,8 @@ class ServeEngine:
                  oversize: str = "error", chunk: int = 16,
                  token_budget: Optional[int] = None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 prefix_reuse: Any = "auto", preempt: str = "auto"):
+                 prefix_reuse: Any = "auto", preempt: str = "auto",
+                 packed: bool = False):
         assert oversize in ("error", "truncate"), oversize
         assert chunk >= 1, chunk
         assert preempt in ("auto", "swap", "recompute", "none"), preempt
@@ -568,6 +609,16 @@ class ServeEngine:
         self.prefix_hit_tokens = 0
         self.scheduled_prefill_tokens = 0
         self.scheduled_tokens = 0
+        # device-grid rows actually launched (padded: slots*chunk per
+        # step; packed: the power-of-two token bucket) — the
+        # denominator of metrics.summarize()'s padding_efficiency
+        self.grid_tokens = 0
+        # finished-request partial-tail donations (satellite of the
+        # token-packed PR): bid -> (chain tuple, tail-token tuple).
+        # Each entry holds one pool reference so the block survives
+        # release and future admissions can copy-on-write from it;
+        # entries are dropped (oldest first) under pool pressure.
+        self._tail_cache: Dict[int, Tuple[tuple, tuple]] = {}
         # preemption/swap state: admission order (victim choice is
         # youngest first), the host-side swap arena (uid -> saved KV
         # blocks + resume prompt), and the per-slot first-sample
@@ -612,13 +663,17 @@ class ServeEngine:
                 (batch_slots, cfg.n_media_tokens, cfg.media_dim),
                 np.float32)
 
-        def _counted(params, batch, caches, cache_len, n_new,
-                     block_tables, slot_map):
+        self.packed = bool(packed)
+        # one step fn per layout; the wrapper signature is shared (the
+        # layout-specific operands ride in *sched, after the donated
+        # caches at position 2)
+        inner = (make_packed_unified_step(cfg) if self.packed
+                 else make_paged_unified_step(cfg))
+
+        def _counted(params, batch, caches, *sched):
             # timcheck: allow[impure] trace-time shape-count telemetry
-            self.n_step_compiles += 1          # trace-time: counts shapes
-            return make_paged_unified_step(cfg)(
-                params, batch, caches, cache_len, n_new, block_tables,
-                slot_map)
+            self.n_step_compiles += 1      # trace-time: counts shapes
+            return inner(params, batch, caches, *sched)
 
         self._step = jax.jit(_counted, donate_argnums=(2,))
         self._copy_step = _copy_kv_block_jit
@@ -686,31 +741,91 @@ class ServeEngine:
 
     def _match_partial_tail(self, chain: List[bytes], tokens: np.ndarray,
                             matched: int):
-        """Extend a full-block match into a live slot's partially
-        filled tail block.  Returns (src_bid, n_tokens): the physical
-        block to copy-on-write from and how many of its leading tokens
-        match (0 = no match)."""
+        """Extend a full-block match into a partially filled tail block
+        — a LIVE slot's current tail, or a tail a finished request
+        donated to ``_tail_cache`` on release.  Returns (src_bid,
+        n_tokens, donated): the physical block to copy-on-write from,
+        how many of its leading tokens match (0 = no match), and
+        whether the winner is a donated tail — in which case it has
+        been revived out of the pool's free queue (a transient
+        reference the caller must drop once the copy lands)."""
         bs = self.block_size
         jb = matched // bs
         limit = len(tokens) - 1 - matched   # last token must be computed
         if limit <= 0:
-            return -1, 0
-        best_bid, best_l = -1, 0
+            return -1, 0, False
+
+        def overlap(tail):
+            l = 0
+            for a, b in zip(tokens[matched:matched + limit], tail):
+                if int(a) != int(b):
+                    break
+                l += 1
+            return l
+
+        best_bid, best_l, best_donated = -1, 0, False
         for s in self._active_slots():
             f = len(self.slot_hist[s])
             if f // bs != jb or f % bs == 0:
                 continue                     # no partial tail at block jb
             if self.slot_chain[s] != chain:
                 continue                     # different history below jb
-            tail = self.slot_hist[s][jb * bs:f]
-            l = 0
-            for a, b in zip(tokens[matched:matched + limit], tail):
-                if int(a) != int(b):
-                    break
-                l += 1
+            l = overlap(self.slot_hist[s][jb * bs:f])
             if l > best_l:
                 best_bid, best_l = int(self.block_tables[s, jb]), l
-        return best_bid, best_l
+                best_donated = False
+        # donated tails from finished requests: tuple equality of the
+        # full-block chain implies the donor's tail sits at the same
+        # block index jb, so only the token overlap needs checking
+        for bid, (tchain, tail) in self._tail_cache.items():
+            if tchain != tuple(chain):
+                continue
+            l = overlap(tail)
+            if l > best_l:
+                best_bid, best_l, best_donated = bid, l, True
+        if best_donated and not self.pool.revive(best_bid):
+            # recycled under us (defensive: _alloc_block invalidates
+            # entries eagerly, so this should be unreachable)
+            self._tail_cache.pop(best_bid, None)
+            return -1, 0, False
+        return best_bid, best_l, best_donated
+
+    def _donate_tail(self, i: int):
+        """Record a finishing slot's partially filled tail block as a
+        copy-on-write donor.  Full blocks stay matchable through the
+        pool's hash cache after release, but a partial tail has no
+        chain hash — without donation its tokens are always recomputed
+        by the next identical prompt.  Donations are METADATA ONLY: no
+        pool reference is held, the block is released exactly as
+        before, and the entry dies the moment the pool recycles its
+        block (``_alloc_block``) — so the cache never perturbs
+        allocation order, occupancy, eviction, or preemption.  A
+        matched entry is revived out of the free queue only for the
+        duration of the copy-on-write (``BlockPool.revive``).  Bounded:
+        oldest entries are dropped at the cap (pure bookkeeping — no
+        block is freed or retained either way)."""
+        cl = int(self.cache_len[i])
+        if cl % self.block_size == 0:
+            return                           # no partial tail
+        bid = int(self.block_tables[i, cl // self.block_size])
+        self._tail_cache.pop(bid, None)      # re-donation replaces
+        while len(self._tail_cache) >= max(2 * self.slots, 2):
+            del self._tail_cache[next(iter(self._tail_cache))]
+        self._tail_cache[bid] = (
+            tuple(self.slot_chain[i]),
+            tuple(self.slot_hist[i][(cl // self.block_size)
+                                    * self.block_size:cl]))
+
+    def _alloc_block(self) -> Optional[int]:
+        """``pool.try_allocate`` + tail-cache invalidation: recycling a
+        block makes any donation riding on it stale (its KV is about
+        to be overwritten), so the entry dies with the allocation.
+        Allocation behavior itself is untouched — donations hold no
+        references."""
+        bid = self.pool.try_allocate()
+        if bid is not None:
+            self._tail_cache.pop(bid, None)
+        return bid
 
     def _cow_block(self, slot: int, jb: int, src: int) -> int:
         """Copy-on-write: deep-copy physical block ``src`` into a
@@ -721,7 +836,7 @@ class ServeEngine:
         tests/test_prefix_reuse.py).  Returns -1 (no copy, the tokens
         are simply recomputed) when an undersized pool has no block to
         spare — admission never preempts for a mere optimization."""
-        dst = self.pool.try_allocate()
+        dst = self._alloc_block()
         if dst is None:
             return -1
         self.caches = self._copy_step(self.caches, np.int32(src),
@@ -798,10 +913,14 @@ class ServeEngine:
                 matched -= self.block_size
                 cow_take, cow_release = self.block_size - 1, cow_src
             elif self.prefix_reuse and res is None:
-                # the donor slot's own reference protects the source
+                # a live donor slot's own reference protects the
+                # source; a donated tail arrives revived — queue its
+                # transient reference for release after the copy
                 # (resumed requests restore from the arena instead)
-                cow_src, cow_take = self._match_partial_tail(
+                cow_src, cow_take, donated = self._match_partial_tail(
                     chain, tokens_in, matched)
+                if donated:
+                    cow_release = cow_src
 
             self.slot_req[slot] = req
             self.slot_prompt[slot] = tokens_in
@@ -854,7 +973,7 @@ class ServeEngine:
             take = min(covered, (jb + 1) * bs) - jb * bs
             if take <= 0 or matched + take > cap:
                 break
-            bid = self.pool.try_allocate()
+            bid = self._alloc_block()
             if bid is None:
                 break                 # recompute the rest instead
             vals = jax.tree_util.tree_map(jnp.asarray, swap.pop(jb))
@@ -975,7 +1094,7 @@ class ServeEngine:
         prefill requester, no eligible victim remained."""
         need = -(-upto_len // self.block_size)
         while self.slot_nblocks[i] < need:
-            bid = self.pool.try_allocate()
+            bid = self._alloc_block()
             if bid is None:
                 if self.preempt == "none":
                     return False      # never evict anyone; caller shrinks
@@ -1099,6 +1218,9 @@ class ServeEngine:
             self.finished.append(req)
             self.slot_req[i] = None
             self.slot_prompt[i] = None
+            if self.prefix_reuse:
+                # before release: reads the slot's table/history state
+                self._donate_tail(i)
             self._release_slot(i)
 
     def _register_completed(self, i: int, old_len: int, new_len: int):
@@ -1126,12 +1248,9 @@ class ServeEngine:
         tokens, n_new, slot_map, decode_slots, finishing = self._schedule()
         if not n_new.any():
             return
-        batch = {"tokens": jnp.asarray(tokens)}
-        if self.cfg.n_media_tokens:
-            if self._media_dirty:
-                self._media_dev = jnp.asarray(self._media_host)
-                self._media_dirty = False
-            batch["media"] = self._media_dev
+        if self.cfg.n_media_tokens and self._media_dirty:
+            self._media_dev = jnp.asarray(self._media_host)
+            self._media_dirty = False
         if self._dirty_slots:
             if self._tables_dev is None or \
                     len(self._dirty_slots) > self.slots // 2:
@@ -1142,11 +1261,27 @@ class ServeEngine:
                         self._tables_dev, np.int32(i),
                         jnp.asarray(self.block_tables[i]))
             self._dirty_slots.clear()
-        lg, self.caches = self._step(self.params, batch, self.caches,
-                                     jnp.asarray(self.cache_len),
-                                     jnp.asarray(n_new),
-                                     self._tables_dev,
-                                     jnp.asarray(slot_map))
+        if self.packed:
+            (flat, seg, pos, nn, smap, last_idx, bucket) = \
+                self._flatten_grid(tokens, n_new, slot_map)
+            batch = {"tokens": jnp.asarray(flat)}
+            if self.cfg.n_media_tokens:
+                batch["media"] = self._media_dev
+            lg, self.caches = self._step(
+                self.params, batch, self.caches, jnp.asarray(pos),
+                jnp.asarray(nn), jnp.asarray(seg), self._tables_dev,
+                jnp.asarray(smap), jnp.asarray(last_idx))
+            self.grid_tokens += bucket
+        else:
+            batch = {"tokens": jnp.asarray(tokens)}
+            if self.cfg.n_media_tokens:
+                batch["media"] = self._media_dev
+            lg, self.caches = self._step(self.params, batch, self.caches,
+                                         jnp.asarray(self.cache_len),
+                                         jnp.asarray(n_new),
+                                         self._tables_dev,
+                                         jnp.asarray(slot_map))
+            self.grid_tokens += self.slots * self.chunk
         # host-side bookkeeping: lengths advance by exactly what was
         # scheduled — no device round-trip
         old_len = self.cache_len.copy()
@@ -1187,6 +1322,42 @@ class ServeEngine:
             req.out_tokens.append(int(toks[i]))   # first generated token
             req.token_steps.append(this_step)
             self._finish_check(i)
+
+    def _flatten_grid(self, tokens: np.ndarray, n_new: np.ndarray,
+                      slot_map: np.ndarray):
+        """Flatten ``_schedule()``'s padded (slots, chunk) grid into the
+        token-packed layout: scheduled tokens concatenated slot-major
+        into a (T, 1) buffer with per-token segment ids, cache
+        positions, 1/0 validity, and physical write targets, plus the
+        flat index of each slot's last scheduled token (for the
+        device-side logits gather).  T is bucketed up to the next power
+        of two so the jit zoo stays at most log2(slots * chunk) + 1
+        entries per engine; padding rows carry seg -1 / n_new 0 /
+        position 0 and write to the out-of-bounds sentinel (dropped by
+        the scatter, masked by the attention's validity lengths).
+        """
+        total = int(n_new.sum())
+        bucket = 1 << max(0, total - 1).bit_length()
+        oob = self.pool.num_blocks * self.block_size
+        flat = np.zeros((bucket, 1), np.int32)
+        seg = np.full((bucket,), -1, np.int32)
+        pos = np.zeros((bucket,), np.int32)
+        nn = np.zeros((bucket,), np.int32)
+        smap = np.full((bucket, 1), oob, np.int32)
+        last_idx = np.zeros((self.slots,), np.int32)
+        t = 0
+        for i in range(self.slots):
+            k = int(n_new[i])
+            if not k:
+                continue      # unscheduled slot: last_idx 0, ignored
+            flat[t:t + k, 0] = tokens[i, :k]
+            seg[t:t + k] = i
+            pos[t:t + k] = int(self.cache_len[i]) + np.arange(k)
+            nn[t:t + k] = 1
+            smap[t:t + k, 0] = slot_map[i, :k]
+            last_idx[i] = t + k - 1
+            t += k
+        return flat, seg, pos, nn, smap, last_idx, bucket
 
     def _progress_signature(self) -> Tuple[int, ...]:
         """Monotone counters that MUST move if an iteration did real
@@ -1284,6 +1455,7 @@ class ServeEngine:
             "steps": self.iters,
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "scheduled_tokens": self.scheduled_tokens,
+            "grid_tokens": self.grid_tokens,
             "scheduled_prefill_tokens": self.scheduled_prefill_tokens,
             "admitted_prompt_tokens": self.admitted_prompt_tokens,
             "blocks_in_use": self.pool.blocks_in_use,
@@ -1336,6 +1508,11 @@ class ServeEngine:
             if cl % self.block_size:
                 tail = int(self.block_tables[i, cl // self.block_size])
                 assert self.pool.refcount[tail] == 1, (i, tail)
+        # tail donations are metadata only — they hold no references,
+        # so the slot tables alone must account for every refcount;
+        # every cached entry's block must still be free (revive-able)
+        for bid in self._tail_cache:
+            assert counts[bid] == 0, (bid, counts[bid])
         assert (self.pool.refcount == counts).all(), \
             (self.pool.refcount, counts)
         if self._last_slot_map is not None:

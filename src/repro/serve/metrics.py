@@ -60,7 +60,7 @@ import numpy as np
 # cross-checks both sets against the emitters in CI — adding a metric
 # without classifying it here fails loudly at both layers.
 COUNTERS = frozenset({
-    "steps", "prefix_hit_tokens", "scheduled_tokens",
+    "steps", "prefix_hit_tokens", "scheduled_tokens", "grid_tokens",
     "scheduled_prefill_tokens", "admitted_prompt_tokens", "evictions",
     "preemptions", "swapped_out_blocks", "swapped_in_blocks",
     "swapped_in_tokens", "swap_d2h_fetches", "recompute_tokens",
@@ -292,11 +292,18 @@ def summarize(requests: Iterable[Any], snapshots: Sequence[Dict[str, Any]],
                     [s[gauge] for s in snapshots], f"{gauge}_",
                     ndigits=ndigits))
         final = snapshots[-1]
-        for k in ("scheduled_tokens", "scheduled_prefill_tokens",
-                  "prefix_hit_tokens", "preemptions",
-                  "swapped_out_blocks", "swapped_in_tokens",
-                  "recompute_tokens", "truncated_requests",
-                  "output_tokens", "evictions"):
+        for k in ("scheduled_tokens", "grid_tokens",
+                  "scheduled_prefill_tokens", "prefix_hit_tokens",
+                  "preemptions", "swapped_out_blocks",
+                  "swapped_in_tokens", "recompute_tokens",
+                  "truncated_requests", "output_tokens", "evictions"):
             if k in final:
                 out[k] = int(final[k])
+        # padding efficiency: fraction of launched device-grid rows
+        # that carried a real token (1.0 = perfectly packed; the
+        # padded (slots, chunk) grid sits near scheduled/(slots*chunk))
+        if final.get("grid_tokens"):
+            out["padding_efficiency"] = round(
+                int(final["scheduled_tokens"])
+                / int(final["grid_tokens"]), ndigits)
     return out

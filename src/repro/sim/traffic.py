@@ -265,7 +265,7 @@ def smoke_engine(arch: str = "granite-34b", slots: int = 2,
                  num_blocks: Optional[int] = None,
                  preempt: str = "auto", prefix_reuse="auto",
                  token_budget: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0, packed: bool = False):
     """A small ternarized engine for harness smokes/benches (smoke
     config: tiny dims, real scheduler/pool/kernel paths)."""
     import jax
@@ -279,7 +279,7 @@ def smoke_engine(arch: str = "granite-34b", slots: int = 2,
                        chunk=chunk, block_size=block_size,
                        num_blocks=num_blocks, preempt=preempt,
                        prefix_reuse=prefix_reuse,
-                       token_budget=token_budget), cfg
+                       token_budget=token_budget, packed=packed), cfg
 
 
 def main(argv=None) -> int:

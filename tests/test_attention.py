@@ -94,6 +94,93 @@ def test_mixed_attention_single_token_equals_decode():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+# ---------------------------------------------------------------------------
+# Token-packed (segment-ID) parity matrix: packed_mixed_attention's
+# (T, 1) single-token queries vs the padded (slots, chunk) grid of
+# mixed_attention, on the contiguous and the paged (XLA-oracle)
+# routes.  Offsets straddle the KV-chunk/block boundaries +-1;
+# packings cover decode-only, prefill-only, mixed, the single-segment
+# degenerate case, and bucket-padding rows (seg -1).  Same chunk
+# boundaries => the same _online_softmax_scan reduction order, so the
+# comparison is bit-identical, not approximate.
+# ---------------------------------------------------------------------------
+
+_SMAX, _CKV, _BS = 40, 16, 8
+
+# per slot: (cache offset, new tokens); offsets sit at block (8) and
+# KV-chunk (16) boundaries and one off either side
+_PACKINGS = {
+    "decode_only": ([7, 8, 9, 15, 16, 17], [1, 1, 1, 1, 1, 1]),
+    "prefill_only": ([0, 7, 9, 16], [8, 8, 8, 8]),
+    "mixed": ([7, 16, 31, 0, 15], [1, 4, 1, 8, 2]),
+    "single_segment": ([5], [3]),
+}
+
+
+def _packed_layout(offs, n_new, pad_to=None):
+    """The engine's flat layout for a padded grid: per-token segment
+    ids / validity lengths / offsets plus (slot, column) provenance."""
+    seg, vlen, qoff, where = [], [], [], []
+    for i, (o, n) in enumerate(zip(offs, n_new)):
+        for j in range(n):
+            seg.append(i)
+            vlen.append(o + j + 1)
+            qoff.append(o + j)
+            where.append((i, j))
+    while pad_to is not None and len(seg) < pad_to:
+        seg.append(-1)
+        vlen.append(0)
+        qoff.append(0)
+        where.append(None)
+    return (jnp.asarray(seg, jnp.int32), jnp.asarray(vlen, jnp.int32),
+            jnp.asarray(qoff, jnp.int32), where)
+
+
+@pytest.mark.parametrize("route", ["contiguous", "paged"])
+@pytest.mark.parametrize("packing", sorted(_PACKINGS))
+def test_packed_matches_padded_mixed(route, packing):
+    from repro.nn.attention import packed_mixed_attention
+    offs, n_new = _PACKINGS[packing]
+    slots, chunk, h, hk, d = len(offs), max(n_new), 4, 2, 16
+    q, k, v = _qkv(slots, chunk, _SMAX, h, hk, d)
+    vlen_slot = jnp.asarray(offs, jnp.int32) + jnp.asarray(n_new,
+                                                           jnp.int32)
+    qoff_slot = jnp.asarray(offs, jnp.int32)
+
+    tables = None
+    if route == "paged":
+        # identity paging: block j of slot i -> pool block i*nblk + j,
+        # so the pool is the contiguous cache reshaped to blocks
+        nblk = _SMAX // _BS
+        k = k.reshape(slots * nblk, _BS, hk, d)
+        v = v.reshape(slots * nblk, _BS, hk, d)
+        tables = jnp.arange(slots * nblk,
+                            dtype=jnp.int32).reshape(slots, nblk)
+
+    padded = mixed_attention(q, k, v, vlen_slot, qoff_slot,
+                             chunk_kv=_CKV, block_tables=tables,
+                             impl="xla")
+    # bucket-pad the flat buffer past the scheduled tokens, engine
+    # style: seg -1 rows must not perturb the real rows
+    total = sum(n_new)
+    seg, vlen, qoff, where = _packed_layout(offs, n_new,
+                                            pad_to=total + 3)
+    q_flat = jnp.stack([q[i, j] if w is not None else jnp.zeros_like(
+        q[0, 0]) for w in where for i, j in [w or (0, 0)]])[:, None]
+    packed = packed_mixed_attention(q_flat, k, v, seg, vlen, qoff,
+                                    chunk_kv=_CKV, block_tables=tables,
+                                    impl="xla")
+    for t, w in enumerate(where):
+        if w is None:
+            continue
+        i, j = w
+        np.testing.assert_array_equal(np.asarray(packed[t, 0]),
+                                      np.asarray(padded[i, j]),
+                                      err_msg=f"{packing}/{route} "
+                                              f"token {t} (slot {i},"
+                                              f" col {j})")
+
+
 def test_cross_attention_ignores_causality():
     q, k, v = _qkv(1, 8, 20, 4, 4, 8)
     got = cross_attention(q, k, v)

@@ -116,6 +116,33 @@ _SCRIPT = textwrap.dedent("""
                                rtol=2e-5, atol=2e-5)
     print("sharded_paged_kernel ok")
 
+    # --- token-PACKED sharded attention: (T, 1) single-token queries
+    # with segment ids against the same sharded pool; each real token
+    # must match the padded mixed path row it came from, and padding
+    # rows (seg -1) must not perturb anything ------------------------------
+    from repro.distrib.decode_attn import sharded_packed_mixed_attention
+    seg, vlen, qoff, where = [], [], [], []
+    for i in range(B):
+        for j in range(int(nnew[i])):
+            seg.append(i); vlen.append(int(offs[i]) + j + 1)
+            qoff.append(int(offs[i]) + j); where.append((i, j))
+    seg += [-1]; vlen += [0]; qoff += [0]; where += [None]  # bucket pad
+    q_flat = jnp.stack([qm[i, j] if w is not None else
+                        jnp.zeros_like(qm[0, 0])
+                        for w in where for i, j in [w or (0, 0)]])[:, None]
+    got_f = sharded_packed_mixed_attention(
+        q_flat, pk, pv, tbl, jnp.asarray(seg, jnp.int32),
+        jnp.asarray(vlen, jnp.int32), mesh, block_axis="model",
+        q_offset=jnp.asarray(qoff, jnp.int32))
+    for t, w in enumerate(where):
+        if w is None:
+            continue
+        i, j = w
+        np.testing.assert_allclose(np.asarray(got_f[t, 0]),
+                                   np.asarray(want_p[i, j]),
+                                   rtol=2e-5, atol=2e-5)
+    print("sharded_packed_mixed_attention ok")
+
     # --- row-parallel matmul ---------------------------------------------
     from repro.distrib.collectives import (allgather_matmul_overlapped,
                                            rowparallel_matmul)
@@ -184,6 +211,7 @@ def test_multidevice_distribution():
     assert "sharded_mixed_attention ok" in proc.stdout
     assert "sharded_paged_mixed_attention ok" in proc.stdout
     assert "sharded_paged_kernel ok" in proc.stdout
+    assert "sharded_packed_mixed_attention ok" in proc.stdout
     assert "rowparallel_matmul ok" in proc.stdout
     assert "allgather_matmul_overlapped ok" in proc.stdout
     assert "pipeline_apply ok" in proc.stdout

@@ -144,6 +144,40 @@ def test_paged_gather_pricing_in_roofline_row():
         assert r["gather_bytes_saved"] == 2 * r["kv_bytes_logical"]
 
 
+def test_mixed_cell_priced_from_scheduled_not_grid_tokens():
+    """The roofline row prices a mixed cell's useful work from the
+    cell's reported scheduled_tokens — NOT the padded (slots, chunk)
+    grid it also reports — and surfaces the padding accounting."""
+    from benchmarks.roofline import arch_params, roofline_row
+    sc = SHAPES["mixed_32k"]
+    sched = sc.global_batch - 1 + sc.chunk
+    grid = sc.global_batch * sc.chunk
+    cell = {
+        "status": "ok", "arch": "granite-34b", "shape": "mixed_32k",
+        "mesh": "16x16", "variant": "baseline", "n_devices": 256,
+        "hlo": {"dot_flops": 1e12, "total_wire_bytes": 1e6},
+        "memory": {"argument_size_in_bytes": 10 ** 9,
+                   "output_size_in_bytes": 10 ** 8},
+        "grid_tokens": grid,
+        "scheduled_tokens": sched,
+    }
+    row = roofline_row(cell)
+    assert row["sched_tokens"] == sched
+    assert row["grid_tokens"] == grid
+    assert abs(row["padding_efficiency"] - sched / grid) < 1e-12
+    act = arch_params("granite-34b")["active"]
+    want = 2.0 * act * sched / 256
+    assert abs(row["model_flops_per_dev"] - want) / want < 1e-9
+    # a cell whose scheduler packed FEWER tokens than the canonical
+    # fill must price cheaper useful work — not the grid-sized (or
+    # static-shape) constant
+    cell2 = dict(cell, scheduled_tokens=sched - 50)
+    row2 = roofline_row(cell2)
+    want2 = 2.0 * act * (sched - 50) / 256
+    assert abs(row2["model_flops_per_dev"] - want2) / want2 < 1e-9
+    assert row2["model_flops_per_dev"] < row["model_flops_per_dev"]
+
+
 def test_weight_stream_summary_math():
     from repro.launch.hlo_analysis import weight_stream_summary
     rep = {"weight_bytes_resident": 1000,

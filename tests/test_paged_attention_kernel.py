@@ -194,6 +194,53 @@ def test_decode_variant_drops_causal_bit_exact(kv):
     np.testing.assert_array_equal(np.asarray(causal), np.asarray(dec))
 
 
+def test_packed_query_variant_matches_oracle(kv):
+    """The token-packed (T, 1) entry point: seg_ids index the block
+    table per token instead of per slot-row.  Each real token must
+    match the packed XLA oracle within the cross-program bound, and
+    appending bucket-padding rows (seg -1, vlen 0) must leave the real
+    rows bit-identical — padding is dead weight, not a perturbation."""
+    from repro.kernels.paged_attention import paged_packed_attention_pallas
+    from repro.nn.attention import packed_mixed_attention
+    k, v = kv
+    rng = np.random.default_rng(29)
+    offs, n_new = [17, 63], [5, 3]
+    seg, vlen, qoff = [], [], []
+    for i, (o, n) in enumerate(zip(offs, n_new)):
+        for j in range(n):
+            seg.append(i)
+            vlen.append(o + j + 1)
+            qoff.append(o + j)
+    t = len(seg)
+    q_flat = jnp.asarray(rng.normal(size=(t, 1, H, D)).astype(np.float32))
+    pk, pv, tables = _pool_from_contiguous(k, v, 16, 27)
+    seg_j = jnp.asarray(seg, jnp.int32)
+    vlen_j = jnp.asarray(vlen, jnp.int32)
+    qoff_j = jnp.asarray(qoff, jnp.int32)
+
+    want = packed_mixed_attention(q_flat, pk, pv, seg_j, vlen_j, qoff_j,
+                                  chunk_kv=32, block_tables=tables,
+                                  impl="xla")
+    got = paged_packed_attention_pallas(q_flat, pk, pv, tables, seg_j,
+                                        vlen_j, q_offset=qoff_j,
+                                        chunk_kv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_ULP_TOL)
+
+    pad = 3
+    got_pad = paged_packed_attention_pallas(
+        jnp.concatenate([q_flat, jnp.zeros((pad, 1, H, D),
+                                           q_flat.dtype)]),
+        pk, pv, tables,
+        jnp.concatenate([seg_j, jnp.full((pad,), -1, jnp.int32)]),
+        jnp.concatenate([vlen_j, jnp.zeros((pad,), jnp.int32)]),
+        q_offset=jnp.concatenate([qoff_j, jnp.zeros((pad,),
+                                                    jnp.int32)]),
+        chunk_kv=32)
+    np.testing.assert_array_equal(np.asarray(got_pad[:t]),
+                                  np.asarray(got))
+
+
 def test_partials_match_local_partial_oracle(kv):
     """normalize=False with ONE chunk: the un-normalized (o, m, l)
     partials must match distrib/decode_attn._local_partial — what the

@@ -12,6 +12,11 @@ Acceptance contract:
     admission must be DEEP-COPIED before the newcomer writes into it —
     sharing it in place corrupts the donor's later decode reads (this
     test fails on that implementation; see the BuggyShare subclass);
+  * partial-tail sharing survives the donor FINISHING: a finished
+    request's tail block is donated to the engine's tail cache
+    (metadata only — no reference held, so pool behavior is
+    unperturbed), stays matchable for copy-on-write, and the entry is
+    invalidated the moment the pool recycles its block for real work;
   * everything is freed at drain and the block-pool invariants hold.
 """
 import jax
@@ -82,7 +87,8 @@ def test_shared_system_prompt_end_to_end(setup):
     # blocks — it scheduled exactly plen - hit tokens, fewer than cold
     second_prefill = eng.scheduled_prefill_tokens - cold_prefill
     assert second_prefill == len(p2) - 32 < len(p2)
-    # drained: every block released (hashed ones stay cached, not live)
+    # drained: every block released (hashed full blocks stay cached,
+    # not live; tail donations hold no references)
     assert eng.stats()["blocks_in_use"] == 0
     assert eng.stats()["blocks_cached"] > 0
 
@@ -128,6 +134,61 @@ def test_concurrent_partial_tail_match_uses_cow(setup):
     assert done[1].prefix_hit_tokens == BS + 4
     assert done[0].out_tokens == want_a    # donor never corrupted
     assert done[1].out_tokens == want_b
+
+
+def test_finished_request_tail_donation(setup):
+    """Partial-tail sharing must survive the donor FINISHING: before
+    the tail cache, only full (hashed) blocks stayed matchable after
+    release, so a resubmitted prompt recomputed its whole tail.  Now
+    the finished request donates its partial tail block and the second
+    admission copy-on-writes all but the last prompt token from it."""
+    cfg, params = setup
+    rng = np.random.default_rng(35)
+    p = rng.integers(1, cfg.vocab_size, BS + 6).astype(np.int32)
+    want = reference_rollout(params, cfg, p, 3, MAX_LEN)
+
+    eng = _engine(cfg, params, chunk=32)
+    eng.submit(Request(uid=0, prompt=p, max_new_tokens=3))
+    done = _run(eng)
+    assert done[0].out_tokens == want
+    assert len(eng._tail_cache) == 1          # donated on finish
+
+    eng.submit(Request(uid=1, prompt=p, max_new_tokens=3))
+    done = _run(eng)
+    assert done[1].out_tokens == want
+    # block 0 by hash + 5 of the 6 tail tokens via the donated block's
+    # CoW (the last prompt token is always recomputed for logits)
+    assert done[1].prefix_hit_tokens == BS + 5
+
+
+def test_tail_cache_invalidated_when_block_recycled(setup):
+    """Donations hold no pool reference: the donated block sits in the
+    free queue like any released block, and the moment real work
+    recycles it the cache entry dies (matching it afterwards would
+    copy overwritten KV).  Pool behavior — allocation order, occupancy,
+    preemption — is untouched by the cache's existence."""
+    cfg, params = setup
+    rng = np.random.default_rng(36)
+    eng = _engine(cfg, params, slots=1, num_blocks=5)
+    for uid in range(2):
+        p = rng.integers(1, cfg.vocab_size, BS + 2).astype(np.int32)
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=2))
+        _run(eng)
+    assert len(eng._tail_cache) == 2
+    assert eng.stats()["blocks_in_use"] == 0     # metadata only
+    first, second = eng._tail_cache.values()
+    # the free queue (FIFO) holds one never-used block and then the two
+    # donated tails in donation order; a request needing two fresh
+    # blocks recycles the FIRST donation's block and leaves the second
+    # (it finishes block-aligned, so it donates nothing itself)
+    p2 = rng.integers(1, cfg.vocab_size, 2 * BS).astype(np.int32)
+    eng.submit(Request(uid=2, prompt=p2, max_new_tokens=1))
+    done = _run(eng)
+    assert done[2].done and not done[2].truncated
+    survivors = list(eng._tail_cache.values())
+    assert first not in survivors                # recycled -> stale
+    assert second in survivors                   # untouched
+    assert eng.stats()["preemptions"] == 0
 
 
 def test_forced_prefix_reuse_rejected_on_recurrent_stack():

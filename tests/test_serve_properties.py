@@ -88,21 +88,24 @@ def _setup():
         base = np.random.default_rng(2024).integers(
             1, cfg.vocab_size, MAX_LEN - 2).astype(np.int32)
         _STATE.update(cfg=cfg, params=params, base=base, refs={},
-                      step=None, copy=None)
+                      steps={})
     return _STATE
 
 
-def _fresh_engine(state, greedy, **kw):
+def _fresh_engine(state, greedy, packed=False, **kw):
     eng = ServeEngine(state["params"], state["cfg"], batch_slots=SLOTS,
                       max_len=MAX_LEN, chunk=CHUNK,
-                      block_size=BLOCK_SIZE, greedy=greedy, **kw)
-    # share ONE compiled step across examples (fixed shapes): per-engine
-    # jit closures would recompile identical HLO every example (the
-    # small-pool profile's pool shape gets its own cache entry)
-    if state["step"] is None:
-        state["step"], state["copy"] = eng._step, eng._copy_step
+                      block_size=BLOCK_SIZE, greedy=greedy,
+                      packed=packed, **kw)
+    # share ONE compiled step per layout across examples (fixed
+    # shapes): per-engine jit closures would recompile identical HLO
+    # every example (the small-pool profile's pool shape — and each
+    # packed token bucket — gets its own cache entry inside the shared
+    # jit callable)
+    if packed not in state["steps"]:
+        state["steps"][packed] = (eng._step, eng._copy_step)
     else:
-        eng._step, eng._copy_step = state["step"], state["copy"]
+        eng._step, eng._copy_step = state["steps"][packed]
     return eng
 
 
@@ -167,7 +170,8 @@ def _run_stream(state, eng, stream, seed, greedy):
         iters += 1
         assert iters < 500
 
-    # invariant 5: drained — every block released, hash maps consistent
+    # invariant 5: drained — every block released (tail donations are
+    # metadata only and hold no pool references)
     st_ = eng.stats()
     assert st_["blocks_in_use"] == 0
     eng.validate()
@@ -205,6 +209,22 @@ def test_engine_invariants_over_random_streams(stream, seed, greedy):
     assert eng.stats()["preemptions"] == 0
     assert eng.scheduled_prefill_tokens + eng.prefix_hit_tokens \
         == sum(len(r.prompt) for r in reqs)
+    _check_packed_parity(state, reqs, stream, seed, greedy)
+
+
+def _check_packed_parity(state, reqs, stream, seed, greedy, **engine_kw):
+    """Tentpole parity oracle: replay the same stream through a
+    token-packed engine and require greedy outputs token-for-token
+    identical to the padded (slots, chunk) step's — plus the packed
+    grid never launching MORE rows than the padded one would have."""
+    if not greedy:
+        return
+    eng = _fresh_engine(state, True, packed=True, **engine_kw)
+    preqs = _run_stream(state, eng, stream, seed, True)
+    assert [r.out_tokens for r in preqs] == [r.out_tokens for r in reqs]
+    st_ = eng.stats()
+    assert st_["grid_tokens"] <= st_["steps"] * SLOTS * CHUNK
+    assert st_["grid_tokens"] >= st_["scheduled_tokens"]
 
 
 # pool below the full-batch floor (SLOTS * (MAX_LEN/BS) + 1 = 9): the
@@ -221,7 +241,10 @@ def test_small_pool_preemption_invariants(stream, seed, greedy, mode):
     state = _setup()
     eng = _fresh_engine(state, greedy, num_blocks=6, preempt=mode,
                         prefix_reuse=(mode != "swap"))
-    _run_stream(state, eng, stream, seed, greedy)
+    reqs = _run_stream(state, eng, stream, seed, greedy)
+    _check_packed_parity(state, reqs, stream, seed, greedy,
+                         num_blocks=6, preempt=mode,
+                         prefix_reuse=(mode != "swap"))
 
 
 # bursty-trace profile: the traffic harness's MMPP arrival schedule
@@ -236,30 +259,42 @@ def test_bursty_trace_replay_invariants(seed, greedy):
     from repro.sim.traffic import TrafficConfig, generate_trace
     state = _setup()
     cfg = state["cfg"]
-    eng = _fresh_engine(state, greedy)
     tcfg = TrafficConfig(seed=seed, n_requests=5, process="bursty",
                          rate=0.5, prompt_len=(1, MAX_LEN - 2),
                          max_new=(1, 3), vocab_size=cfg.vocab_size)
     trace = generate_trace(tcfg)
-    reqs = [Request(uid=a.uid, prompt=a.prompt.copy(),
-                    max_new_tokens=a.max_new_tokens) for a in trace]
-    pending = list(zip(trace, reqs))[::-1]
-    iters = 0
-    while pending or eng.queue or eng._active_slots():
-        while pending and pending[-1][0].time <= eng.iters:
-            eng.submit(pending.pop()[1])
-        _step_checked(eng)
-        iters += 1
-        assert iters < 2000
 
-    st_ = eng.stats()
-    assert st_["blocks_in_use"] == 0                     # invariant 5
-    eng.validate()
-    assert st_["scheduled_prefill_tokens"] + st_["prefix_hit_tokens"] \
-        + st_["swapped_in_tokens"] == st_["admitted_prompt_tokens"]
-    assert all(r.done for r in reqs)                     # invariant 7
-    _check_lifecycle(reqs)
+    def replay(packed):
+        eng = _fresh_engine(state, greedy, packed=packed)
+        reqs = [Request(uid=a.uid, prompt=a.prompt.copy(),
+                        max_new_tokens=a.max_new_tokens) for a in trace]
+        pending = list(zip(trace, reqs))[::-1]
+        iters = 0
+        while pending or eng.queue or eng._active_slots():
+            while pending and pending[-1][0].time <= eng.iters:
+                eng.submit(pending.pop()[1])
+            _step_checked(eng)
+            iters += 1
+            assert iters < 2000
+
+        st_ = eng.stats()
+        assert st_["blocks_in_use"] == 0                 # invariant 5
+        eng.validate()
+        assert st_["scheduled_prefill_tokens"] \
+            + st_["prefix_hit_tokens"] + st_["swapped_in_tokens"] \
+            == st_["admitted_prompt_tokens"]
+        assert all(r.done for r in reqs)                 # invariant 7
+        _check_lifecycle(reqs)
+        if greedy:
+            for r in reqs:
+                assert r.out_tokens == _reference(
+                    state, r.prompt, len(r.out_tokens)), r.uid
+        return reqs
+
+    reqs = replay(packed=False)
     if greedy:
-        for r in reqs:
-            assert r.out_tokens == _reference(state, r.prompt,
-                                              len(r.out_tokens)), r.uid
+        # tentpole parity oracle: the packed step replays the same
+        # trace token-for-token
+        preqs = replay(packed=True)
+        assert [r.out_tokens for r in preqs] \
+            == [r.out_tokens for r in reqs]
