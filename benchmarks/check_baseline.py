@@ -74,6 +74,13 @@ SERVING_BASELINE = os.path.join(
 SERVING_PACKED_BASELINE = os.path.join(
     os.path.dirname(os.path.abspath(__file__)),
     "baselines", "serving_packed_baseline.csv")
+# parallel-sampling rows (serving_bench.serving_nsample_rows): sampled
+# engines (Request(n=4) sibling groups + width-2 beam) with the
+# ISSUE-9 counters (sibling_requests / beam_forks / masked_tokens) as
+# gated columns — own CSV, older baselines stay byte-identical
+SERVING_NSAMPLE_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "baselines", "serving_nsample_baseline.csv")
 # opt-in wall-clock RATE band for the packed rows' coarse
 # steps_per_sec (higher is better — the band inverts): recorded, like
 # kernel_bench_wallclock.csv, only on the fixed runner class that
@@ -277,12 +284,15 @@ def main(argv=None) -> int:
     # timings (interpret-mode kernel) are printed, never compared, and
     # they stay out of the wall-clock band entirely
     paged = paged_attention_rows(timed=args.exercise)
-    from benchmarks.serving_bench import (serving_packed_rows,
+    from benchmarks.serving_bench import (serving_nsample_rows,
+                                          serving_packed_rows,
                                           serving_rows)
     serving = serving_rows(timed=args.exercise)
     # packed rows are timed under the wall-clock band too: their
     # steps_per_sec rate is the one serving number it gates
     packed = serving_packed_rows(timed=args.exercise or wallclock)
+    # nsample rows: analytic gate only (like the padded serving rows)
+    nsample = serving_nsample_rows(timed=args.exercise)
     if wallclock:
         # min over repetitions stabilizes the quick-mode timings enough
         # to gate on (single-shot quick timings vary several x)
@@ -290,7 +300,7 @@ def main(argv=None) -> int:
             [full] + [bench(timed=True, quick=True)
                       for _ in range(wallclock_reps() - 1)])
     if args.exercise or wallclock:
-        for r in full + paged + serving + packed:
+        for r in full + paged + serving + packed + nsample:
             us = {k: v for k, v in r.items() if k.endswith("_us")
                   or k == "steps_per_sec"}
             if us:
@@ -299,6 +309,7 @@ def main(argv=None) -> int:
     paged_rows = deterministic_view(paged)
     serving_csv_rows = deterministic_view(serving)
     packed_csv_rows = deterministic_view(packed)
+    nsample_csv_rows = deterministic_view(nsample)
 
     if args.update:
         _rows_to_csv(rows, BASELINE)
@@ -312,6 +323,9 @@ def main(argv=None) -> int:
         _rows_to_csv(packed_csv_rows, SERVING_PACKED_BASELINE)
         print(f"[check_baseline] wrote {SERVING_PACKED_BASELINE} "
               f"({len(packed_csv_rows)} rows)")
+        _rows_to_csv(nsample_csv_rows, SERVING_NSAMPLE_BASELINE)
+        print(f"[check_baseline] wrote {SERVING_NSAMPLE_BASELINE} "
+              f"({len(nsample_csv_rows)} rows)")
         if wallclock:
             wrows = wallclock_view(full)
             _rows_to_csv(wrows, WALLCLOCK_BASELINE)
@@ -329,6 +343,8 @@ def main(argv=None) -> int:
                                          SERVING_BASELINE)
     problems += compare_against_baseline(packed_csv_rows,
                                          SERVING_PACKED_BASELINE)
+    problems += compare_against_baseline(nsample_csv_rows,
+                                         SERVING_NSAMPLE_BASELINE)
     if wallclock:
         # padded serving rows stay out of the band (their *_us are
         # whole-trace replays, not kernel timings) — analytic gate
@@ -343,7 +359,8 @@ def main(argv=None) -> int:
     gate = " + wall-clock band" if wallclock else ""
     print(f"[check_baseline] OK: {len(rows)} + {len(paged_rows)} "
           f"(paged-attention) + {len(serving_csv_rows)} (serving) + "
-          f"{len(packed_csv_rows)} (packed serving) "
+          f"{len(packed_csv_rows)} (packed serving) + "
+          f"{len(nsample_csv_rows)} (nsample serving) "
           f"rows match the baselines" + gate)
     return 0
 

@@ -33,6 +33,15 @@ Rows:
     headline payoff: ``grid_tokens`` within 2x of
     ``scheduled_tokens`` in steady state (the padded grid sits at
     slots*chunk/step regardless of load).
+  * ``serve_nsample_*`` / ``serve_beam_w2`` (``serving_nsample_rows``)
+    — the parallel-sampling mix (half the arrivals are
+    ``Request(n=4)``; the beam row runs width 2): sampled engines
+    (``greedy=False``), gated in serving_nsample_baseline.csv with the
+    sampling counters (``sibling_requests`` / ``beam_forks`` /
+    ``masked_tokens``) as columns.  Every row asserts the share-then-
+    fork contract in-line: each sibling's whole prompt prefix-hits
+    (one prefill per group), prompt-token accounting closes, and the
+    pool drains clean.
 
 Wall-clock enters only as ``*_us`` columns (replay wall time and
 us/step) when ``timed=True`` — printed by ``check_baseline
@@ -84,13 +93,14 @@ _SHARED: Dict[str, Any] = {}
 
 def _engine(num_blocks=None, preempt: str = "auto",
             prefix_reuse: Any = "auto", token_budget=None,
-            packed: bool = False):
+            packed: bool = False, greedy: bool = True):
     from repro.sim.traffic import smoke_engine
     eng, _ = smoke_engine(ARCH, slots=SLOTS, max_len=MAX_LEN,
                           block_size=BLOCK_SIZE, chunk=CHUNK,
                           num_blocks=num_blocks, preempt=preempt,
                           prefix_reuse=prefix_reuse,
-                          token_budget=token_budget, packed=packed)
+                          token_budget=token_budget, packed=packed,
+                          greedy=greedy)
     key = "packed_step" if packed else "step"
     if key not in _SHARED:
         _SHARED[key] = eng._step
@@ -102,7 +112,8 @@ def _engine(num_blocks=None, preempt: str = "auto",
 
 
 def _row(case: str, traffic_kw: Dict[str, Any], timed: bool,
-         packed: bool = False, **engine_kw) -> Dict[str, Any]:
+         packed: bool = False, stats_keys=(), check=None,
+         **engine_kw) -> Dict[str, Any]:
     from repro.sim.traffic import (TrafficConfig, generate_trace,
                                    run_trace)
     eng = _engine(packed=packed, **engine_kw)
@@ -111,6 +122,8 @@ def _row(case: str, traffic_kw: Dict[str, Any], timed: bool,
     t0 = time.perf_counter()
     res = run_trace(eng, trace)
     wall = time.perf_counter() - t0
+    if check is not None:
+        check(eng, res)
     row: Dict[str, Any] = {
         "case": case,
         "process": tcfg.process,
@@ -133,6 +146,11 @@ def _row(case: str, traffic_kw: Dict[str, Any], timed: bool,
     for metric in ("queue_depth", "ttft_p99"):
         rep = res.drift(metric)
         row[f"drift_{metric}_flagged"] = int(rep.flagged)
+    # opt-in counters that postdate summarize()'s fixed final-counter
+    # list (which keeps the legacy CSVs byte-identical) — the nsample
+    # rows gate the sampling/beam/prefix-share story through these
+    for k in stats_keys:
+        row[k] = int(eng.stats()[k])
     if timed:
         row["trace_wall_us"] = wall * 1e6
         row["per_step_us"] = wall * 1e6 / max(res.steps, 1)
@@ -201,6 +219,78 @@ def serving_packed_rows(timed: bool = False) -> List[Dict[str, Any]]:
     return rows
 
 
+# parallel-sampling mix (ISSUE-9): half the arrivals ask for
+# Request(n=4) — one prefill feeds four sibling decodes that share
+# every full prompt block by refcount and CoW-fork at the first
+# divergent token.  Poisson at a calm rate over the default (ample)
+# pool: zero preemptions, so each sibling's whole-prompt chain-hash
+# hit is exact and the prefix accounting below is deterministic.
+NSAMPLE_TRAFFIC = dict(seed=17, n_requests=12, process="poisson",
+                       rate=0.5, prompt_len=(8, 24), max_new=(2, 5),
+                       n_prefix_pools=2, shared_frac=0.5,
+                       prefix_len=(16, 16), n_sample=4,
+                       nsample_frac=0.5)
+# beam width 2 == SLOTS: one group owns the batch while it runs
+BEAM_TRAFFIC = dict(seed=17, n_requests=8, process="poisson",
+                    rate=0.5, prompt_len=(8, 24), max_new=(2, 5),
+                    n_prefix_pools=2, shared_frac=0.5,
+                    prefix_len=(16, 16), n_sample=2,
+                    nsample_frac=0.5, sample_mode="beam")
+
+
+def _nsample_check(eng, res):
+    """The in-row acceptance gates for the sampled rows: siblings'
+    prompts fully prefix-hit (one prefill per group), the prompt-token
+    accounting closes, and the pool drains clean."""
+    st = eng.stats()
+    assert st["blocks_in_use"] == 0, "blocks leaked at drain"
+    assert st["scheduled_prefill_tokens"] + st["prefix_hit_tokens"] \
+        + st["swapped_in_tokens"] == st["admitted_prompt_tokens"], \
+        "prompt-token accounting does not close"
+    sibs = [r for r in res.requests if r.sample_index > 0]
+    assert sibs, "nsample trace produced no sibling requests"
+    assert all(r.done for r in res.requests), "undrained requests"
+    for r in sibs:
+        # the share unit is a full prompt block: every sibling hits at
+        # least all of them (block-aligned prompts hit plen - 1 — the
+        # last token is always recomputed for logits)
+        floor = min((len(r.prompt) // BLOCK_SIZE) * BLOCK_SIZE,
+                    len(r.prompt) - 1)
+        assert r.prefix_hit_tokens >= floor, \
+            (r.uid, r.sample_index, r.prefix_hit_tokens, len(r.prompt))
+    # and the sharing must actually fire, not just hold vacuously
+    assert any(r.prefix_hit_tokens >= BLOCK_SIZE for r in sibs)
+
+
+def serving_nsample_rows(timed: bool = False) -> List[Dict[str, Any]]:
+    """Parallel-sampling rows (serving_nsample_baseline.csv): the
+    ``Request(n=4)`` mix through the padded and packed engines plus a
+    width-2 beam row, with the sampling counters gated as columns.
+    ``_nsample_check`` enforces the share-then-fork contract inside
+    every row before it is emitted."""
+    keys = ("admitted_prompt_tokens", "sibling_requests", "beam_forks",
+            "masked_tokens")
+    rows = [
+        _row("serve_nsample_shared", NSAMPLE_TRAFFIC, timed,
+             greedy=False, stats_keys=keys, check=_nsample_check),
+        _row("serve_nsample_packed", NSAMPLE_TRAFFIC, timed,
+             packed=True, greedy=False, stats_keys=keys,
+             check=_nsample_check),
+        _row("serve_beam_w2", BEAM_TRAFFIC, timed, greedy=False,
+             stats_keys=keys, check=_nsample_check),
+    ]
+    # the fork machinery must actually fire: siblings admitted on the
+    # n=4 rows, CoW forks on the beam row
+    assert rows[0]["sibling_requests"] > 0
+    assert rows[2]["beam_forks"] > 0
+    # padded and packed replay the same trace: identical request-level
+    # digests (the padded/packed parity property, at bench scale)
+    for k in ("requests", "requests_finished", "output_tokens",
+              "sibling_requests", "admitted_prompt_tokens"):
+        assert rows[0][k] == rows[1][k], (k, rows[0][k], rows[1][k])
+    return rows
+
+
 def main() -> int:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -209,7 +299,8 @@ def main() -> int:
                          "only — never gated)")
     args = ap.parse_args()
     rows = serving_rows(timed=args.timed) \
-        + serving_packed_rows(timed=args.timed)
+        + serving_packed_rows(timed=args.timed) \
+        + serving_nsample_rows(timed=args.timed)
     for r in rows:
         print(f"== {r['case']} ==")
         for k, v in r.items():

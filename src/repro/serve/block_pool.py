@@ -146,6 +146,18 @@ class BlockPool:
         assert self.refcount[bid] >= 1, bid
         self.refcount[bid] += 1
 
+    def incref_all(self, bids: Sequence[int]) -> None:
+        """Bump every block in ``bids`` by one reference — the sibling/
+        beam fork path: a child sequence adopts its parent's full
+        (immutable) blocks wholesale, so the engine shares them by
+        refcount in one call instead of copying KV.  All-or-nothing by
+        the same live-reference precondition as ``incref`` (parent
+        tables only ever hold live blocks)."""
+        for bid in bids:
+            assert self.refcount[bid] >= 1, bid
+        for bid in bids:
+            self.refcount[bid] += 1
+
     def decref(self, bid: int) -> None:
         assert self.refcount[bid] >= 1, bid
         self.refcount[bid] -= 1

@@ -69,7 +69,7 @@ admission skips the prefill FLOPs entirely.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -398,13 +398,100 @@ def greedy_token(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-def sample_token(logits: jax.Array, key, temperature: float = 1.0
+def sample_token(logits: jax.Array, key=None, temperature: float = 1.0
                  ) -> jax.Array:
+    """Sample (or argmax) the next token.  Key consumption is EXPLICIT
+    and identical across code paths: greedy routing (``temperature <=
+    0``) takes ``key=None`` and consumes nothing, sampling requires a
+    key — passing a key that would be silently dropped (the old
+    callsite split the engine stream per step even on the greedy path)
+    raises instead of desynchronizing the caller's stream."""
     if temperature <= 0:
+        if key is not None:
+            raise ValueError(
+                "sample_token with temperature <= 0 is greedy and "
+                "consumes no PRNG key; pass key=None — key consumption "
+                "must be explicit and identical across code paths")
         return greedy_token(logits)
+    if key is None:
+        raise ValueError(
+            "sample_token with temperature > 0 draws from the PRNG "
+            "stream and requires a key")
     return jax.random.categorical(
         key, logits.astype(jnp.float32) / temperature, axis=-1
     ).astype(jnp.int32)
+
+
+def derive_sample_key(base_key, uid, sample_index, token_index):
+    """The per-request counter-based PRNG stream (the ISSUE-9 headline
+    bugfix): every sampled token draws from
+    ``fold_in(fold_in(fold_in(base, uid), sample_index), token_index)``
+    — a pure function of request identity and position, NOT of slot
+    occupancy, step count, or scheduling order.  Sampled rollouts are
+    therefore bit-replayable: the same seed reproduces the same
+    continuation whether the request runs alone or in a full batch,
+    across preemption/resume, and across the padded and token-packed
+    engines (which produce bit-identical logits)."""
+    k = jax.random.fold_in(base_key, uid)
+    k = jax.random.fold_in(k, sample_index)
+    return jax.random.fold_in(k, token_index)
+
+
+def apply_token_masks(logits: jax.Array, mask: jax.Array) -> jax.Array:
+    """Guided decoding: constrain per-slot logits to a COMPACT
+    allowed-token buffer.  ``mask`` is (slots, mask_width) int32 of
+    allowed token ids padded with -1; a row of all -1 means
+    unconstrained.  Nothing of shape (slots, vocab) is ever shipped
+    host->device — the scatter to vocab width happens device-side."""
+    vocab = logits.shape[-1]
+
+    def row(lg_row, mask_row):
+        valid = mask_row >= 0
+        ids = jnp.clip(mask_row, 0, vocab - 1)
+        # .max accumulates safely over the duplicate index the clip of
+        # the -1 padding creates (its False can never hide a True)
+        keep = jnp.zeros((vocab,), bool).at[ids].max(valid)
+        masked = jnp.where(keep, lg_row, jnp.float32(-1e30))
+        return jnp.where(valid.any(), masked, lg_row)
+
+    return jax.vmap(row)(logits.astype(jnp.float32), mask)
+
+
+def make_sample_fn(temperature: float, topk: int):
+    """Build the jitted per-slot sampling tail: compact-mask
+    application, per-request ``derive_sample_key`` streams, categorical
+    (or argmax) selection, and — when ``topk`` > 0 — the top-k
+    log-prob candidates the host-side beam bookkeeping consumes.
+    Everything runs device-side off the step's (slots, vocab) logits;
+    the host fetches the result in the step's ONE accounted d2h."""
+    def sample_fn(lg, base_key, ids, mask):
+        lgm = apply_token_masks(lg, mask)
+        if temperature <= 0:
+            toks = sample_token(lgm, None, temperature)
+        else:
+            keys = jax.vmap(derive_sample_key,
+                            in_axes=(None, 0, 0, 0))(
+                base_key, ids[:, 0], ids[:, 1], ids[:, 2])
+            toks = jax.vmap(
+                lambda k, l: sample_token(l, k, temperature))(keys, lgm)
+        if topk:
+            lp = jax.nn.log_softmax(lgm, axis=-1)
+            cand_lp, cand_ids = jax.lax.top_k(lp, topk)
+            return toks, cand_ids.astype(jnp.int32), cand_lp
+        return toks
+    return sample_fn
+
+
+# one compiled sampler per (temperature, topk) shared across every
+# engine in the process (same discipline as _copy_kv_block_jit)
+_SAMPLER_JITS: Dict[Tuple[float, int], Any] = {}
+
+
+def _get_sampler(temperature: float, topk: int):
+    key = (float(temperature), int(topk))
+    if key not in _SAMPLER_JITS:
+        _SAMPLER_JITS[key] = jax.jit(make_sample_fn(*key))
+    return _SAMPLER_JITS[key]
 
 
 # ---------------------------------------------------------------------------
@@ -432,6 +519,28 @@ class Request:
     # these; -1 / empty until the events happen.
     submit_step: int = -1
     token_steps: List[int] = dataclasses.field(default_factory=list)
+    # parallel sampling: submit with n > 1 and the engine expands the
+    # request into n sibling sequences sharing the same uid (and all
+    # full prompt blocks, by refcount — ONE prefill serves all n).
+    # ``sample_mode='independent'`` draws each sibling from its own
+    # counter-based PRNG stream (keyed by sample_index);
+    # ``sample_mode='beam'`` runs width-n beam search with host-side
+    # bookkeeping over the same CoW fork mechanism (cum_logprob is the
+    # running hypothesis score).  The submitted parent never enters the
+    # queue itself — its expanded children are linked in ``siblings``
+    # and finish independently (per-sibling out_tokens / token_steps /
+    # truncated).
+    n: int = 1
+    sample_mode: str = "independent"
+    sample_index: int = 0
+    siblings: Optional[List["Request"]] = None
+    cum_logprob: float = 0.0
+    # guided decoding: callback(out_tokens) -> allowed token ids for
+    # the NEXT sampled position (None/absent = unconstrained).  Applied
+    # device-side via a compact (slots, mask_width) buffer — never a
+    # (slots, vocab) host->device ship.
+    allowed_tokens: Optional[Callable[[List[int]], Optional[Sequence[int]]]] \
+        = None
 
     @property
     def first_token_step(self) -> int:
@@ -504,7 +613,8 @@ class ServeEngine:
                  token_budget: Optional[int] = None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefix_reuse: Any = "auto", preempt: str = "auto",
-                 packed: bool = False):
+                 packed: bool = False, temperature: float = 1.0,
+                 mask_width: int = 8):
         assert oversize in ("error", "truncate"), oversize
         assert chunk >= 1, chunk
         assert preempt in ("auto", "swap", "recompute", "none"), preempt
@@ -518,7 +628,16 @@ class ServeEngine:
         self.token_budget = (batch_slots + self.chunk
                              if token_budget is None else token_budget)
         assert self.token_budget >= 1, token_budget
-        self.key = jax.random.PRNGKey(seed)
+        assert temperature > 0 or greedy, (
+            "temperature <= 0 is spelled greedy=True", temperature)
+        self.temperature = float(temperature)
+        assert mask_width >= 1, mask_width
+        self.mask_width = int(mask_width)
+        # per-request counter-based PRNG: sampling derives every key as
+        # fold_in(base, uid, sample_index, token_index) — no engine
+        # stream state exists, so sampled outputs are independent of
+        # slot occupancy, scheduling order, and preemption history
+        self._base_key = jax.random.PRNGKey(seed)
 
         # NOT clamped to max_len: a block larger than the cache just
         # leaves its tail unused, whereas silently shrinking block_size
@@ -625,7 +744,9 @@ class ServeEngine:
         # suppression flag for resumed-mid-decode refills
         self._admit_seq = 0
         self.slot_seq = np.zeros((batch_slots,), np.int64)
-        self._resume: Dict[int, Dict[str, Any]] = {}
+        # keyed by (uid, sample_index): siblings share uid but preempt
+        # and resume independently
+        self._resume: Dict[Tuple[int, int], Dict[str, Any]] = {}
         self._skip_sample = np.zeros((batch_slots,), bool)
         self.preemptions = 0
         self.swapped_out_blocks = 0
@@ -634,6 +755,13 @@ class ServeEngine:
         self.recompute_tokens = 0
         self.admitted_prompt_tokens = 0
         self.swap_d2h_fetches = 0
+        # parallel sampling / guided decoding telemetry
+        self.sibling_requests = 0    # sample_index>0 admissions
+        self.beam_forks = 0          # beam hypothesis adoptions (CoW)
+        self.masked_tokens = 0       # sampled positions with a mask row
+        # live beam groups: uid -> the n sibling Requests (host-side
+        # beam bookkeeping; removed when every sibling finishes)
+        self._beam_groups: Dict[int, List[Request]] = {}
         # roofline crossover inputs: ~2*N FLOPs per recomputed token vs
         # a host-link round trip of the blocks' KV bytes (total, not
         # MoE-active, params — conservative toward swapping)
@@ -690,12 +818,36 @@ class ServeEngine:
                 f"capacity max_len={self.max_len}; resubmit a shorter "
                 f"prompt or construct the engine with "
                 f"oversize='truncate'")
+        if req.sample_mode not in ("independent", "beam"):
+            raise ValueError(f"unknown sample_mode {req.sample_mode!r}")
+        if req.n < 1:
+            raise ValueError(f"Request.n must be >= 1, got {req.n}")
+        if req.sample_mode == "beam":
+            if self.greedy and req.n > 1:
+                raise ValueError(
+                    "beam search scores log-probs from the sampler — "
+                    "construct the engine with greedy=False")
+            if req.n > self.slots:
+                raise ValueError(
+                    f"beam width {req.n} exceeds batch_slots="
+                    f"{self.slots}: every live hypothesis needs a slot "
+                    f"for synchronized expansion")
+        if req.n > 1:
+            # expand into n sibling sequences sharing the uid; the
+            # parent itself never enters the queue — callers read
+            # results off req.siblings
+            kids = [dataclasses.replace(
+                req, sample_index=s, siblings=None,
+                out_tokens=[], token_steps=[]) for s in range(req.n)]
+            req.siblings = kids
+            if req.sample_mode == "beam":
+                self._beam_groups[req.uid] = kids
+            for kid in kids:
+                kid.submit_step = self.iters
+                self.queue.append(kid)
+            return
         req.submit_step = self.iters     # lifecycle: arrival stamp
         self.queue.append(req)
-
-    def _next_key(self):
-        self.key, k = jax.random.split(self.key)
-        return k
 
     def _active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
@@ -868,7 +1020,21 @@ class ServeEngine:
         for slot in range(self.slots):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
-            res = self._resume.get(self.queue[0].uid)
+            head = self.queue[0]
+            res = self._resume.get((head.uid, head.sample_index))
+            # sibling deferral (Request(n>1)): a sibling waits until
+            # its leader (the same-uid slot admitted first) finishes
+            # prefilling and registers the prompt's full blocks — then
+            # THIS sibling's admission finds them all via the normal
+            # chain-hash match and shares them by refcount, so the
+            # prompt is prefilled exactly once.  FIFO order preserved:
+            # we stall admission rather than skip over the sibling.
+            if head.sample_index > 0 and res is None and any(
+                    self.slot_req[s] is not None
+                    and self.slot_req[s].uid == head.uid
+                    and self.slot_fill[s] < len(self.slot_prompt[s])
+                    for s in range(self.slots)):
+                break
             # admission gate: one allocatable block is enough to make
             # progress (a chunk shrinks to the blocks it can get);
             # admitting into a zero-free pool would only preempt
@@ -879,9 +1045,11 @@ class ServeEngine:
                 break     # wait for a block instead of thrashing; FIFO
             req = self.queue.pop(0)
             if res is not None:
-                del self._resume[req.uid]
+                del self._resume[(req.uid, req.sample_index)]
                 tokens_in = res["prompt"]     # <= max_len by invariant
             else:
+                if req.sample_index > 0:
+                    self.sibling_requests += 1
                 tokens_in = req.prompt
                 if len(tokens_in) > self.max_len:
                     # oversize == 'truncate' (submit rejected it
@@ -1064,7 +1232,7 @@ class ServeEngine:
                 swap[jb] = jax.tree_util.tree_map(
                     lambda a, p=pos: a[:, p], fetched)
             self.swapped_out_blocks += len(own)
-        self._resume[req.uid] = {
+        self._resume[(req.uid, req.sample_index)] = {
             "prompt": eff, "decoding": bool(out), "covered": covered,
             "swap": swap,
         }
@@ -1222,6 +1390,9 @@ class ServeEngine:
                 # before release: reads the slot's table/history state
                 self._donate_tail(i)
             self._release_slot(i)
+            group = self._beam_groups.get(req.uid)
+            if group is not None and all(k.done for k in group):
+                del self._beam_groups[req.uid]
 
     def _register_completed(self, i: int, old_len: int, new_len: int):
         """Publish the chain hash of every block slot i completed this
@@ -1300,16 +1471,43 @@ class ServeEngine:
             if self.prefix_reuse:
                 self._register_completed(i, int(old_len[i]),
                                          int(old_len[i]) + t)
-        toks_dev = (greedy_token(lg) if self.greedy
-                    else sample_token(lg, self._next_key()))
+        # rows that consume a token this step (token_index for the
+        # per-request PRNG stream is len(out_tokens) BEFORE any append)
+        sample_rows = decode_slots + [i for i in finishing
+                                      if not self._skip_sample[i]]
+        beam_rows = [i for i in sample_rows
+                     if self.slot_req[i].sample_mode == "beam"]
+        use_sampler = ((not self.greedy) or bool(beam_rows) or any(
+            self.slot_req[i].allowed_tokens is not None
+            for i in sample_rows))
+        cand_ids = cand_lps = None
+        if not use_sampler:
+            out_dev = greedy_token(lg)
+        else:
+            ids, mask = self._sample_inputs(sample_rows)
+            topk = max((self.slot_req[i].n for i in beam_rows),
+                       default=0)
+            sampler = _get_sampler(
+                0.0 if self.greedy else self.temperature, topk)
+            out_dev = sampler(lg, self._base_key, jnp.asarray(ids),
+                              jnp.asarray(mask))
         # timcheck: allow[d2h] the ONE accounted fetch per step (d2h_fetches)
-        toks = np.asarray(jax.device_get(toks_dev))   # the ONE d2h fetch
+        fetched = jax.device_get(out_dev)             # the ONE d2h fetch
         self.d2h_fetches += 1
+        if isinstance(fetched, tuple):
+            toks, cand_ids, cand_lps = (np.asarray(a) for a in fetched)
+        else:
+            toks = np.asarray(fetched)
+        beam_decode = [i for i in decode_slots if i in beam_rows]
         for i in decode_slots:
+            if i in beam_decode:
+                continue
             req = self.slot_req[i]
             req.out_tokens.append(int(toks[i]))
             req.token_steps.append(this_step)
             self._finish_check(i)
+        if beam_decode:
+            self._beam_decode(beam_decode, cand_ids, cand_lps, this_step)
         for i in finishing:
             if self._skip_sample[i]:
                 # resumed-mid-decode refill: the "first generated"
@@ -1319,9 +1517,182 @@ class ServeEngine:
                 self._skip_sample[i] = False
                 continue
             req = self.slot_req[i]
-            req.out_tokens.append(int(toks[i]))   # first generated token
+            if req.sample_mode == "beam":
+                # beam root expansion: sibling s seeds its hypothesis
+                # with the s-th best first token (identical prompt =>
+                # identical logits across siblings, so this IS the
+                # joint top-n of the root)
+                req.out_tokens.append(int(cand_ids[i, req.sample_index]))
+                req.cum_logprob += float(cand_lps[i, req.sample_index])
+            else:
+                req.out_tokens.append(int(toks[i]))  # first generated
             req.token_steps.append(this_step)
             self._finish_check(i)
+
+    def _sample_inputs(self, sample_rows: List[int]
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side operands of the jitted sampler: per-slot PRNG
+        stream coordinates (uid, sample_index, token_index) and the
+        compact guided-decoding mask rows (-1-padded allowed token ids;
+        an all--1 row means unconstrained).  Rows not sampling this
+        step keep zeros/-1 — their lane's output is never read."""
+        ids = np.zeros((self.slots, 3), np.uint32)
+        mask = np.full((self.slots, self.mask_width), -1, np.int32)
+        for i in sample_rows:
+            req = self.slot_req[i]
+            ids[i] = (req.uid, req.sample_index, len(req.out_tokens))
+            if req.allowed_tokens is None:
+                continue
+            allowed = req.allowed_tokens(list(req.out_tokens))
+            if allowed is None:
+                continue
+            allowed = list(allowed)
+            if not allowed:
+                raise ValueError(
+                    f"allowed_tokens for uid={req.uid} returned an "
+                    f"empty set at position {len(req.out_tokens)} — "
+                    f"every continuation is forbidden; return None for "
+                    f"an unconstrained position instead")
+            if len(allowed) > self.mask_width:
+                raise ValueError(
+                    f"allowed_tokens returned {len(allowed)} ids > "
+                    f"mask_width={self.mask_width}; construct the "
+                    f"engine with a larger mask_width")
+            mask[i, :len(allowed)] = allowed
+            self.masked_tokens += 1
+        return ids, mask
+
+    # -- beam search (host-side bookkeeping over the CoW fork path) ---------
+
+    def _beam_decode(self, beam_slots: List[int], cand_ids: np.ndarray,
+                     cand_lps: np.ndarray, this_step: int):
+        """Advance every beam hypothesis that decoded this step.  A
+        group whose live siblings are ALL present expands jointly
+        (top-n over the union of candidates, slots reassigned to the
+        winners via refcount adoption + tail CoW); a partially present
+        group — siblings still queued, prefilling, or preempted —
+        self-extends each member with its own best token (still a
+        valid hypothesis; joint pruning resumes at the next
+        fully-present step)."""
+        by_uid: Dict[int, List[int]] = {}
+        for i in beam_slots:
+            by_uid.setdefault(self.slot_req[i].uid, []).append(i)
+        for uid, slots_ in by_uid.items():
+            group = self._beam_groups.get(uid)
+            live = [k for k in (group or []) if not k.done]
+            synced = group is not None and live and all(
+                any(self.slot_req[s] is k for s in slots_) for k in live)
+            if synced:
+                self._beam_expand(sorted(slots_), cand_ids, cand_lps,
+                                  this_step)
+            else:
+                self._beam_self_extend(slots_, cand_ids, cand_lps,
+                                       this_step)
+
+    def _beam_self_extend(self, slots_: List[int], cand_ids: np.ndarray,
+                          cand_lps: np.ndarray, this_step: int):
+        """Degraded (but always-correct) beam step: each present
+        hypothesis takes its own top-1 continuation, no cross-slot
+        reassignment."""
+        for i in slots_:
+            req = self.slot_req[i]
+            req.out_tokens.append(int(cand_ids[i, 0]))
+            req.cum_logprob += float(cand_lps[i, 0])
+            req.token_steps.append(this_step)
+            self._finish_check(i)
+
+    def _beam_expand(self, slots_: List[int], cand_ids: np.ndarray,
+                     cand_lps: np.ndarray, this_step: int):
+        """Synchronized joint expansion: rank the union of every live
+        hypothesis's top-n continuations by cumulative log-prob
+        (deduped by (hypothesis, token) signature — vital right after
+        root expansion, when clones would flood the pool with
+        duplicates) and reassign the group's slots to the winners.
+        Adoption reuses the prefix-sharing fork mechanism: the child
+        increfs the parent's full (immutable) blocks and deep-copies
+        only its partial tail block before either sequence writes
+        again — exactly ``_cow_block``'s donor-protection discipline.
+        """
+        k = len(slots_)
+        bs = self.block_size
+        # snapshot BEFORE any mutation: winners may adopt any parent
+        snap = {}
+        for i in slots_:
+            req = self.slot_req[i]
+            snap[i] = {
+                "out": list(req.out_tokens),
+                "steps": list(req.token_steps),
+                "lp": req.cum_logprob,
+                "hist": list(self.slot_hist[i]),
+                "chain": list(self.slot_chain[i]),
+                "cl": int(self.cache_len[i]),
+                "table": self.block_tables[i].copy(),
+                "nb": int(self.slot_nblocks[i]),
+            }
+        best: Dict[tuple, tuple] = {}
+        for i in slots_:
+            req = self.slot_req[i]
+            for j in range(req.n):
+                score = req.cum_logprob + float(cand_lps[i, j])
+                sig = (tuple(req.out_tokens), int(cand_ids[i, j]))
+                cur = best.get(sig)
+                if cur is None or score > cur[0] or \
+                        (score == cur[0] and (i, j) < (cur[1], cur[2])):
+                    best[sig] = (score, i, j, int(cand_ids[i, j]))
+        ranked = sorted(best.values(),
+                        key=lambda c: (-c[0], c[1], c[2]))[:k]
+        # a single parent already contributes n >= k distinct tokens,
+        # so ranked always covers the k live slots
+        assert len(ranked) == k, (len(ranked), k)
+        need = sum(1 for (score, p, j, tok), c in zip(ranked, slots_)
+                   if p != c and snap[p]["cl"] % bs)
+        if self.pool.blocks_free < need:
+            # not enough spare blocks for the tail copies: degrade to
+            # self-extension rather than preempting for an optimization
+            self._beam_self_extend(slots_, cand_ids, cand_lps, this_step)
+            return
+        # phase 1 — build every winner's table while ALL parents' own
+        # references are still live (a parent that loses its slot may
+        # itself be another winner's ancestor)
+        new_tables: Dict[int, Tuple[np.ndarray, int]] = {}
+        for (score, p, j, tok), c in zip(ranked, slots_):
+            if p == c:
+                continue
+            nfull = snap[p]["cl"] // bs
+            tail = snap[p]["cl"] % bs
+            table = np.full((self.max_blocks,), -1, np.int32)
+            table[:nfull] = snap[p]["table"][:nfull]
+            self.pool.incref_all([int(b) for b in table[:nfull]])
+            nb = nfull
+            if tail:
+                src = int(snap[p]["table"][nfull])
+                dst = self._alloc_block()
+                assert dst is not None    # pre-checked blocks_free
+                self.caches = self._copy_step(self.caches, np.int32(src),
+                                              np.int32(dst))
+                table[nfull] = dst
+                nb += 1
+            new_tables[c] = (table, nb)
+            self.beam_forks += 1
+        # phase 2 — release the losers' old references and install the
+        # winners' state
+        for (score, p, j, tok), c in zip(ranked, slots_):
+            if c in new_tables:
+                for jb in range(snap[c]["nb"]):
+                    self.pool.decref(int(snap[c]["table"][jb]))
+                table, nb = new_tables[c]
+                self.block_tables[c] = table
+                self.slot_nblocks[c] = nb
+                self._dirty_slots.add(c)
+                self.cache_len[c] = snap[p]["cl"]
+                self.slot_hist[c] = list(snap[p]["hist"])
+                self.slot_chain[c] = list(snap[p]["chain"])
+            req = self.slot_req[c]
+            req.out_tokens = snap[p]["out"] + [tok]
+            req.token_steps = snap[p]["steps"] + [this_step]
+            req.cum_logprob = score
+        for c in slots_:
+            self._finish_check(c)
 
     def _flatten_grid(self, tokens: np.ndarray, n_new: np.ndarray,
                       slot_map: np.ndarray):
@@ -1471,6 +1842,9 @@ class ServeEngine:
             "finished_requests": len(self.finished),
             "output_tokens": self.output_tokens,
             "d2h_fetches": self.d2h_fetches,
+            "sibling_requests": self.sibling_requests,
+            "beam_forks": self.beam_forks,
+            "masked_tokens": self.masked_tokens,
             "preempted_waiting": len(self._resume),
             "preemptable_pool": int(self.preemptable),
         }

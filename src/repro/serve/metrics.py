@@ -65,7 +65,7 @@ COUNTERS = frozenset({
     "preemptions", "swapped_out_blocks", "swapped_in_blocks",
     "swapped_in_tokens", "swap_d2h_fetches", "recompute_tokens",
     "truncated_requests", "finished_requests", "output_tokens",
-    "d2h_fetches",
+    "d2h_fetches", "sibling_requests", "beam_forks", "masked_tokens",
 })
 GAUGES = frozenset({
     "blocks_in_use", "blocks_cached", "preempted_waiting",
@@ -88,6 +88,16 @@ def percentile_digest(values: Sequence[float], prefix: str = "",
         out[f"{prefix}mean"] = -1.0
         return out
     arr = np.asarray(values, np.float64)
+    if not np.isfinite(arr).all():
+        # degenerate lifecycles (0/1-token requests, truncation mid
+        # first chunk) must be FILTERED by the caller (ttft_steps /
+        # tpot_steps return None there) — a NaN that reaches a digest
+        # would flow into CSV rows and the drift detector's medians
+        # without ever flagging, so refuse it loudly instead
+        raise ValueError(
+            f"percentile_digest({prefix or 'values'}) received "
+            f"non-finite samples: {arr[~np.isfinite(arr)][:4]}; drop "
+            f"degenerate requests before digesting")
     for q in qs:
         out[f"{prefix}p{q}"] = round(float(np.percentile(arr, q)), ndigits)
     out[f"{prefix}mean"] = round(float(arr.mean()), ndigits)
@@ -224,6 +234,16 @@ class MedianWindowDetector:
         self._n = 0
 
     def update(self, value: float) -> bool:
+        if not np.isfinite(value):
+            # np.median propagates NaN, and NaN comparisons are always
+            # False — a NaN sample would silently disarm the detector
+            # (baseline or current median poisoned, streak never
+            # advances).  Same contract as percentile_digest: the
+            # caller filters degenerate lifecycles.
+            raise ValueError(
+                f"MedianWindowDetector.update received non-finite "
+                f"sample {value!r}; filter degenerate requests "
+                f"upstream")
         self._n += 1
         self._tail.append(float(value))
         if self.baseline is None:

@@ -74,11 +74,23 @@ class TrafficConfig:
     shared_frac: float = 0.5     # fraction drawing from a shared pool
     prefix_len: Tuple[int, int] = (8, 16)      # pool prefix length range
     vocab_size: int = 512
+    # parallel sampling mix: ``nsample_frac`` of arrivals request
+    # ``n_sample`` sibling continuations (Request(n=...)); the rest
+    # stay n=1.  ``sample_mode`` rides to the engine unchanged.  With
+    # the default n_sample=1 NO extra rng draws happen, so every
+    # pre-existing trace (and its gated baseline CSV) is byte-stable.
+    n_sample: int = 1
+    nsample_frac: float = 0.0
+    sample_mode: str = "independent"
 
     def __post_init__(self):
         assert self.process in PROCESSES, self.process
         assert self.rate > 0 and self.n_requests >= 1
         assert 0.0 <= self.depth < 1.0, self.depth
+        assert self.n_sample >= 1, self.n_sample
+        assert 0.0 <= self.nsample_frac <= 1.0, self.nsample_frac
+        assert self.sample_mode in ("independent", "beam"), \
+            self.sample_mode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +101,8 @@ class Arrival:
     prompt: np.ndarray           # (plen,) int32
     max_new_tokens: int
     pool: int                    # shared-prefix pool id, -1 = disjoint
+    n: int = 1                   # sibling continuations (Request(n=...))
+    sample_mode: str = "independent"
 
 
 def _arrival_times(cfg: TrafficConfig, rng: np.random.Generator
@@ -148,11 +162,15 @@ def generate_trace(cfg: TrafficConfig) -> List[Arrival]:
             # whole prompts)
             k = min(len(prefixes[pool]), plen - 1)
             prompt[:k] = prefixes[pool][:k]
+        n = 1
+        if cfg.n_sample > 1:    # rng untouched for n_sample=1 traces
+            if float(rng.random()) < cfg.nsample_frac:
+                n = cfg.n_sample
         out.append(Arrival(
             uid=uid, time=float(t), prompt=prompt,
             max_new_tokens=int(rng.integers(cfg.max_new[0],
                                             cfg.max_new[1] + 1)),
-            pool=pool))
+            pool=pool, n=n, sample_mode=cfg.sample_mode))
     return out
 
 
@@ -219,7 +237,8 @@ def run_trace(engine, trace: Sequence[Arrival],
     from repro.serve.engine import Request
     if requests is None:
         requests = [Request(uid=a.uid, prompt=a.prompt.copy(),
-                            max_new_tokens=a.max_new_tokens)
+                            max_new_tokens=a.max_new_tokens,
+                            n=a.n, sample_mode=a.sample_mode)
                     for a in trace]
     assert len(requests) == len(trace)
     pending = sorted(zip(trace, requests), key=lambda p: (p[0].time,
@@ -256,7 +275,11 @@ def run_trace(engine, trace: Sequence[Arrival],
         else:
             stalled = 0
             sig = engine._progress_signature()
-    return TraceResult(requests=requests, snapshots=snapshots,
+    # n>1 submissions expand into sibling Requests engine-side; flatten
+    # so digests/goodput count every continuation (the parent shell of
+    # an expanded request never runs itself)
+    flat = [s for r in requests for s in (r.siblings or [r])]
+    return TraceResult(requests=flat, snapshots=snapshots,
                        steps=engine.iters - t0)
 
 
@@ -265,7 +288,8 @@ def smoke_engine(arch: str = "granite-34b", slots: int = 2,
                  num_blocks: Optional[int] = None,
                  preempt: str = "auto", prefix_reuse="auto",
                  token_budget: Optional[int] = None,
-                 seed: int = 0, packed: bool = False):
+                 seed: int = 0, packed: bool = False,
+                 greedy: bool = True, temperature: float = 1.0):
     """A small ternarized engine for harness smokes/benches (smoke
     config: tiny dims, real scheduler/pool/kernel paths)."""
     import jax
@@ -279,7 +303,9 @@ def smoke_engine(arch: str = "granite-34b", slots: int = 2,
                        chunk=chunk, block_size=block_size,
                        num_blocks=num_blocks, preempt=preempt,
                        prefix_reuse=prefix_reuse,
-                       token_budget=token_budget, packed=packed), cfg
+                       token_budget=token_budget, packed=packed,
+                       greedy=greedy, temperature=temperature,
+                       seed=seed), cfg
 
 
 def main(argv=None) -> int:

@@ -125,7 +125,7 @@ def test_swap_in_restores_bit_identical_kv(prompts):
                             np.asarray(eng.block_tables[0, :2]))
     eng._preempt(0)
     eng.validate()
-    arena = eng._resume[req.uid]
+    arena = eng._resume[(req.uid, req.sample_index)]
     assert sorted(arena["swap"]) == [0, 1] and arena["covered"] == 16
     # arena content == what was resident pre-preemption
     for jb in (0, 1):
@@ -175,6 +175,37 @@ def test_preempt_mid_decode_resumes_exactly(prompts, reference):
         assert len(req.out_tokens) == 6
         want = _run([prompts[0]], max_new=[6]).finished[0].out_tokens
         assert list(req.out_tokens) == list(want), (preempt, n0)
+
+
+def test_preempt_mid_decode_sampling_resumes_exactly(prompts):
+    """ISSUE-9 satellite: the same regression as above but SAMPLING
+    (greedy=False).  Under the old engine-global split-per-step key the
+    resumed continuation drew different keys (the preemption shifted
+    which step samples which token) and diverged; per-request
+    counter-based streams make the continuation a pure function of
+    (uid, sample_index, token_index), so preempt-and-resume reproduces
+    the unpreempted rollout bit-for-bit on both resume policies."""
+    params, cfg = _params()
+    want = None
+    for preempt in ("recompute", "swap"):
+        eng = ServeEngine(params, cfg, batch_slots=1, max_len=MAX_LEN,
+                          chunk=CHUNK, block_size=BS, preempt=preempt,
+                          greedy=False, seed=11)
+        req = Request(uid=0, prompt=prompts[0], max_new_tokens=6)
+        eng.submit(req)
+        for _ in range(4):            # prefill (2 steps) + 2 decodes
+            eng.step()
+        assert len(req.out_tokens) >= 2
+        eng._preempt(0)
+        eng.validate()
+        while eng.queue or eng._active_slots():
+            eng.step()
+            eng.validate()
+        assert len(req.out_tokens) == 6
+        if want is None:
+            want = _run([prompts[0]], max_new=[6], greedy=False,
+                        seed=11).finished[0].out_tokens
+        assert list(req.out_tokens) == list(want), preempt
 
 
 def test_swap_raises_on_recurrent_stack():

@@ -1,0 +1,366 @@
+"""Per-request PRNG streams + parallel sampling (ISSUE-9 tentpole).
+
+Acceptance contract:
+
+  * ``sample_token`` key consumption is explicit and identical across
+    code paths: greedy routing takes no key, sampling requires one —
+    the old callsite split the engine-global stream per step even on
+    the greedy path, so sampled outputs depended on slot occupancy;
+  * ``derive_sample_key`` is a pure function of (uid, sample_index,
+    token_index): sampled rollouts are bit-replayable alone vs in a
+    full batch, across the padded and token-packed engines, and across
+    preemption (tests/test_preemption.py holds that regression);
+  * ``Request(n=...)`` expands into n siblings sharing ALL full prompt
+    blocks by refcount — one prefill pass, n decodes, accounting
+    closes with every sibling's prompt (minus the always-recomputed
+    last token) served as prefix hits;
+  * the sibling fork is copy-on-write: sharing the tail block in place
+    corrupts the donor (the BuggyShare regression, sibling edition);
+  * beam mode: width-1 beam == greedy, width-n groups stay valid under
+    the pool invariants and finish; invalid submissions raise;
+  * guided decoding: ``allowed_tokens`` masks constrain every sampled
+    position device-side via the compact mask buffer; empty and
+    oversized mask rows raise.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.serve.engine import (Request, ServeEngine, derive_sample_key,
+                                sample_token, ternarize_model)
+
+MAX_LEN, BS, CHUNK = 32, 8, 8
+
+_STATE = {}
+
+
+def _params():
+    if not _STATE:
+        cfg = get_config("granite-34b", smoke=True)
+        _STATE["cfg"] = cfg
+        _STATE["params"] = ternarize_model(
+            tfm.init(cfg, jax.random.PRNGKey(0)), cfg)
+    return _STATE["params"], _STATE["cfg"]
+
+
+def _engine(slots=2, **kw):
+    params, cfg = _params()
+    kw.setdefault("greedy", False)
+    kw.setdefault("seed", 7)
+    return ServeEngine(params, cfg, batch_slots=slots, max_len=MAX_LEN,
+                       chunk=CHUNK, block_size=BS, **kw)
+
+
+def _drain(eng, max_iters=400):
+    it = 0
+    while eng.queue or eng._active_slots():
+        eng.step()
+        eng.validate()
+        it += 1
+        assert it < max_iters, "engine stopped making progress"
+    return {r.uid: r for r in eng.finished}
+
+
+def _prompt(rng, n):
+    _, cfg = _params()
+    return rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+
+
+# -- the key-stream contract (satellite 1) ---------------------------------
+
+def test_sample_token_key_consumption_is_explicit():
+    lg = jax.numpy.zeros((2, 16))
+    key = jax.random.PRNGKey(0)
+    # greedy routing consumes nothing — passing a key that would be
+    # silently dropped is the bug this contract forbids
+    with pytest.raises(ValueError, match="consumes no PRNG key"):
+        sample_token(lg, key, temperature=0.0)
+    with pytest.raises(ValueError, match="requires a key"):
+        sample_token(lg, None, temperature=1.0)
+    g = sample_token(lg, None, temperature=0.0)
+    s = sample_token(lg, key, temperature=1.0)
+    assert g.shape == s.shape == (2,)
+
+
+def test_derive_sample_key_is_positional():
+    base = jax.random.PRNGKey(3)
+    k = derive_sample_key(base, 5, 1, 9)
+    # deterministic replay
+    assert (np.asarray(k) == np.asarray(
+        derive_sample_key(base, 5, 1, 9))).all()
+    # every coordinate matters
+    for other in ((6, 1, 9), (5, 2, 9), (5, 1, 8)):
+        assert (np.asarray(k) != np.asarray(
+            derive_sample_key(base, *other))).any(), other
+
+
+def test_sampled_rollout_is_slot_occupancy_invariant():
+    """The headline bugfix: the same request samples the same tokens
+    alone and in a busy batch (old engine-global split-per-step keys
+    made the draw depend on what else was scheduled)."""
+    rng = np.random.default_rng(21)
+    target = _prompt(rng, 13)
+    filler = _prompt(rng, 19)
+    eng = _engine(slots=2)
+    eng.submit(Request(uid=1, prompt=target, max_new_tokens=6))
+    eng.submit(Request(uid=2, prompt=filler, max_new_tokens=6))
+    busy = _drain(eng)
+    solo_eng = _engine(slots=2)
+    solo_eng.submit(Request(uid=1, prompt=target.copy(),
+                            max_new_tokens=6))
+    solo = _drain(solo_eng)
+    assert list(busy[1].out_tokens) == list(solo[1].out_tokens)
+
+
+# -- Request(n=...) sibling admission (the tentpole) -----------------------
+
+def test_nsample_shares_prompt_blocks_one_prefill():
+    """n=4 siblings: one prefill pass, n-1 prompts fully hit (minus
+    the last token, always recomputed for logits), accounting closed,
+    everything freed at drain."""
+    rng = np.random.default_rng(8)
+    p = _prompt(rng, 2 * BS + 3)
+    eng = _engine(slots=4)
+    parent = Request(uid=5, prompt=p, max_new_tokens=5, n=4)
+    eng.submit(parent)
+    done = _drain(eng)
+    kids = parent.siblings
+    assert len(kids) == 4 and all(k.done for k in kids)
+    assert set(done) == {5} and len(eng.finished) == 4
+    # leader pays the prefill; every sibling shares all of it
+    assert kids[0].prefix_hit_tokens == 0
+    for k in kids[1:]:
+        assert k.prefix_hit_tokens == len(p) - 1, k.sample_index
+    st = eng.stats()
+    assert st["sibling_requests"] == 3
+    assert st["scheduled_prefill_tokens"] + st["prefix_hit_tokens"] \
+        + st["swapped_in_tokens"] == st["admitted_prompt_tokens"]
+    # one prefill pass: scheduled prefill covers the leader's prompt
+    # plus one recomputed last token per sibling, nothing more
+    assert st["scheduled_prefill_tokens"] == len(p) + 3
+    assert st["blocks_in_use"] == 0
+    # siblings draw from distinct streams: all four continuations
+    # cannot coincide
+    assert len({tuple(k.out_tokens) for k in kids}) > 1
+
+
+def test_nsample_matches_independent_submissions():
+    """n=2 is exactly two uid-sharing requests with sample_index 0/1 —
+    the counter-based streams make the equivalence bit-exact."""
+    rng = np.random.default_rng(9)
+    p = _prompt(rng, BS + 2)
+    eng = _engine(slots=2)
+    parent = Request(uid=3, prompt=p, max_new_tokens=4, n=2)
+    eng.submit(parent)
+    _drain(eng)
+    eng2 = _engine(slots=2)
+    a = Request(uid=3, prompt=p.copy(), max_new_tokens=4)
+    b = Request(uid=3, prompt=p.copy(), max_new_tokens=4,
+                sample_index=1)
+    eng2.submit(a)
+    eng2.submit(b)
+    _drain(eng2)
+    assert [list(k.out_tokens) for k in parent.siblings] == \
+        [list(a.out_tokens), list(b.out_tokens)]
+
+
+def test_nsample_packed_parity():
+    """Padded and token-packed engines produce bit-identical sibling
+    rollouts (the parity the per-request streams unlock for sampling)."""
+    rng = np.random.default_rng(10)
+    p = _prompt(rng, BS + 5)
+    outs = []
+    for packed in (False, True):
+        eng = _engine(slots=4, packed=packed)
+        parent = Request(uid=2, prompt=p.copy(), max_new_tokens=5, n=4)
+        eng.submit(parent)
+        _drain(eng)
+        outs.append([list(k.out_tokens) for k in parent.siblings])
+    assert outs[0] == outs[1]
+
+
+class BuggyShare(ServeEngine):
+    """The sibling-fork regression target: share the matched tail
+    block in place instead of deep-copying it (identical to the
+    tests/test_prefix_reuse.py subclass — siblings fork through the
+    same ``_cow_block`` discipline)."""
+
+    def _cow_block(self, slot, jb, src):
+        self.pool.incref(src)
+        self.block_tables[slot, jb] = src
+        self.slot_nblocks[slot] = jb + 1
+        return src
+
+
+def test_sibling_fork_cow_regression_corrupts_donor():
+    """Without the deep copy, the sibling's writes land in the
+    LEADER's tail block: the sibling lags one position behind, so
+    each of its decode writes clobbers the KV the leader wrote there a
+    step earlier (its own, different, sampled token).  The regression
+    pins the corruption at the byte level, like the swap bit-identity
+    test: fetch the leader's tail block from a BuggyShare engine and
+    from the real engine at the same step and require them to differ —
+    and require the real engine's leader to still match a solo run
+    token-for-token (occupancy invariance survives forking)."""
+    from repro.serve.engine import fetch_kv_blocks
+    params, cfg = _params()
+    rng = np.random.default_rng(34)
+    p = rng.integers(1, cfg.vocab_size, BS + 4).astype(np.int32)
+
+    def fork_run(cls):
+        eng = cls(params, cfg, batch_slots=2, max_len=MAX_LEN,
+                  chunk=CHUNK, block_size=BS, greedy=False, seed=7)
+        parent = Request(uid=0, prompt=p.copy(), max_new_tokens=8, n=2)
+        eng.submit(parent)
+        for _ in range(4):   # leader prefill+decode, sibling forked
+            eng.step()
+        tail = fetch_kv_blocks(
+            eng.caches, np.asarray([int(eng.block_tables[0, 1])]))
+        return eng, parent, jax.tree_util.tree_leaves(tail)
+
+    bug_eng, bug_parent, bug_tail = fork_run(BuggyShare)
+    good_eng, good_parent, good_tail = fork_run(ServeEngine)
+    # both engines shared the prompt (the fork really happened) ...
+    assert bug_parent.siblings[1].prefix_hit_tokens == len(p) - 1
+    assert good_parent.siblings[1].prefix_hit_tokens == len(p) - 1
+    # ... but BuggyShare aliased the tail in place (one table entry,
+    # refcount 2) where the real engine deep-copied it
+    assert int(bug_eng.block_tables[0, 1]) == \
+        int(bug_eng.block_tables[1, 1])
+    assert int(good_eng.block_tables[0, 1]) != \
+        int(good_eng.block_tables[1, 1])
+    # the donor's tail KV bytes are corrupted by the sibling's writes
+    assert any(
+        np.abs(np.asarray(a, np.float32)
+               - np.asarray(b, np.float32)).max() > 0
+        for a, b in zip(bug_tail, good_tail))
+
+    # and the REAL engine's leader still reproduces the solo rollout
+    solo_eng = _engine(slots=2)
+    solo = Request(uid=0, prompt=p.copy(), max_new_tokens=8)
+    solo_eng.submit(solo)
+    _drain(solo_eng)
+    _drain(good_eng)
+    assert list(good_parent.siblings[0].out_tokens) == \
+        list(solo.out_tokens)
+
+
+# -- beam mode -------------------------------------------------------------
+
+def test_beam_of_one_equals_greedy():
+    rng = np.random.default_rng(12)
+    p = _prompt(rng, 10)
+    greedy_eng = _engine(slots=2, greedy=True)
+    g = Request(uid=1, prompt=p.copy(), max_new_tokens=6)
+    greedy_eng.submit(g)
+    _drain(greedy_eng)
+    beam_eng = _engine(slots=2)
+    b = Request(uid=1, prompt=p.copy(), max_new_tokens=6,
+                sample_mode="beam")
+    beam_eng.submit(b)
+    _drain(beam_eng)
+    assert list(b.out_tokens) == list(g.out_tokens)
+
+
+def test_beam_width_two_invariants():
+    rng = np.random.default_rng(13)
+    p = _prompt(rng, BS + 6)
+    eng = _engine(slots=4)
+    parent = Request(uid=4, prompt=p, max_new_tokens=6, n=2,
+                     sample_mode="beam")
+    eng.submit(parent)
+    _drain(eng)
+    kids = parent.siblings
+    assert all(k.done for k in kids)
+    assert all(len(k.out_tokens) == 6 for k in kids)
+    # surviving hypotheses are distinct and carry real scores
+    assert tuple(kids[0].out_tokens) != tuple(kids[1].out_tokens)
+    assert all(np.isfinite(k.cum_logprob) and k.cum_logprob < 0.0
+               for k in kids)
+    assert eng._beam_groups == {}           # group cleaned at finish
+    st = eng.stats()
+    assert st["beam_forks"] > 0             # reassignment CoW happened
+    assert st["blocks_in_use"] == 0
+
+
+def test_beam_submit_validation():
+    rng = np.random.default_rng(14)
+    p = _prompt(rng, 6)
+    eng = _engine(slots=2, greedy=True)
+    with pytest.raises(ValueError, match="greedy=False"):
+        eng.submit(Request(uid=1, prompt=p, max_new_tokens=2, n=2,
+                           sample_mode="beam"))
+    eng2 = _engine(slots=2)
+    with pytest.raises(ValueError, match="batch_slots"):
+        eng2.submit(Request(uid=1, prompt=p, max_new_tokens=2, n=3,
+                            sample_mode="beam"))
+    with pytest.raises(ValueError, match="sample_mode"):
+        eng2.submit(Request(uid=1, prompt=p, max_new_tokens=2,
+                            sample_mode="nucleus"))
+    with pytest.raises(ValueError, match="n must be"):
+        eng2.submit(Request(uid=1, prompt=p, max_new_tokens=2, n=0))
+
+
+# -- guided decoding (logit-mask hook) -------------------------------------
+
+def test_allowed_tokens_constrains_every_position():
+    rng = np.random.default_rng(15)
+    p = _prompt(rng, 9)
+    allowed = [3, 7, 11]
+    eng = _engine(slots=2)
+    req = Request(uid=6, prompt=p, max_new_tokens=6,
+                  allowed_tokens=lambda out: allowed)
+    eng.submit(req)
+    _drain(eng)
+    assert all(t in allowed for t in req.out_tokens), req.out_tokens
+    assert eng.stats()["masked_tokens"] == 6
+
+
+def test_allowed_tokens_none_means_unconstrained():
+    """A callback returning None leaves the position unconstrained —
+    and the rollout matches a mask-free engine bit-for-bit (masking
+    rides the same sampler, it must not perturb the PRNG stream)."""
+    rng = np.random.default_rng(16)
+    p = _prompt(rng, 9)
+    eng = _engine(slots=2)
+    req = Request(uid=6, prompt=p, max_new_tokens=5,
+                  allowed_tokens=lambda out: None)
+    eng.submit(req)
+    _drain(eng)
+    bare_eng = _engine(slots=2)
+    bare = Request(uid=6, prompt=p.copy(), max_new_tokens=5)
+    bare_eng.submit(bare)
+    _drain(bare_eng)
+    assert list(req.out_tokens) == list(bare.out_tokens)
+    assert eng.stats()["masked_tokens"] == 0
+
+
+def test_allowed_tokens_greedy_engine():
+    """Masks also apply on a greedy engine (argmax over the masked
+    logits) — structured output without sampling."""
+    rng = np.random.default_rng(17)
+    p = _prompt(rng, 9)
+    allowed = [2, 5]
+    eng = _engine(slots=2, greedy=True)
+    req = Request(uid=6, prompt=p, max_new_tokens=4,
+                  allowed_tokens=lambda out: allowed)
+    eng.submit(req)
+    _drain(eng)
+    assert all(t in allowed for t in req.out_tokens), req.out_tokens
+
+
+def test_mask_width_overflow_and_empty_raise():
+    rng = np.random.default_rng(18)
+    p = _prompt(rng, 9)
+    eng = _engine(slots=2, mask_width=2)
+    eng.submit(Request(uid=1, prompt=p, max_new_tokens=2,
+                       allowed_tokens=lambda out: [1, 2, 3]))
+    with pytest.raises(ValueError, match="mask_width"):
+        _drain(eng)
+    eng2 = _engine(slots=2)
+    eng2.submit(Request(uid=1, prompt=p.copy(), max_new_tokens=2,
+                        allowed_tokens=lambda out: []))
+    with pytest.raises(ValueError, match="empty"):
+        _drain(eng2)

@@ -298,3 +298,59 @@ def test_bursty_trace_replay_invariants(seed, greedy):
         preqs = replay(packed=True)
         assert [r.out_tokens for r in preqs] \
             == [r.out_tokens for r in reqs]
+
+
+# sampled-stream profile (ISSUE-9): seeded NON-greedy streams with
+# n ∈ {1, 2, 4} sibling fan-out over shared prefixes.  Per-request
+# counter-based PRNG streams make every sampled token a pure function
+# of (uid, sample_index, token_index) — independent of slot occupancy
+# and of the grid layout — so the padded-vs-packed parity oracle
+# extends from greedy to sampled rollouts.  validate() after every
+# step holds refcount == table-multiplicity under sibling sharing;
+# drain holds all-blocks-freed and closed token accounting.
+_SAMPLED_REQUEST = st.tuples(st.booleans(), st.integers(1, MAX_LEN - 2),
+                             st.integers(1, 3), st.integers(0, 2),
+                             st.sampled_from((1, 2, 4)))
+
+
+@settings(max_examples=max(1, MAX_EXAMPLES // 5), derandomize=True,
+          deadline=None)
+@given(st.lists(_SAMPLED_REQUEST, min_size=1, max_size=3),
+       st.integers(0, 2 ** 20))
+def test_sampled_stream_padded_packed_parity(stream, seed):
+    state = _setup()
+    cfg = state["cfg"]
+
+    def run(packed):
+        eng = _fresh_engine(state, greedy=False, packed=packed)
+        rng = np.random.default_rng(seed)
+        parents = []
+        for uid, (shared, plen, max_new, gap, n) in enumerate(stream):
+            prompt = (state["base"][:plen].copy() if shared else
+                      rng.integers(1, cfg.vocab_size,
+                                   plen).astype(np.int32))
+            req = Request(uid=uid, prompt=prompt,
+                          max_new_tokens=max_new, n=n)
+            parents.append(req)
+            eng.submit(req)
+            for _ in range(gap):                # interleaved arrivals
+                _step_checked(eng)
+        iters = 0
+        while eng.queue or eng._active_slots():
+            _step_checked(eng)
+            iters += 1
+            assert iters < 800
+        st_ = eng.stats()
+        assert st_["blocks_in_use"] == 0         # all freed at drain
+        eng.validate()
+        assert st_["scheduled_prefill_tokens"] \
+            + st_["prefix_hit_tokens"] + st_["swapped_in_tokens"] \
+            == st_["admitted_prompt_tokens"]
+        assert st_["sibling_requests"] == sum(
+            r.n - 1 for r in parents)
+        flat = [s for r in parents for s in (r.siblings or [r])]
+        assert all(r.done for r in flat)
+        _check_lifecycle(flat)
+        return [list(s.out_tokens) for s in flat]
+
+    assert run(packed=False) == run(packed=True)

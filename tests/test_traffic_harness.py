@@ -321,6 +321,70 @@ def test_percentile_digest_and_lifecycle_math():
     assert req.first_token_step == 5
 
 
+def test_degenerate_requests_yield_none_not_nan():
+    """ISSUE-9 satellite: 0-token and 1-token lifecycles (a request
+    truncated mid first chunk, or still waiting in the queue) must
+    surface as ``None`` from ttft/tpot — NOT as NaN/inf samples — so
+    ``request_digest`` filters them and emits -1.0 sentinels."""
+    zero = Request(uid=0, prompt=np.ones(4, np.int32),
+                   max_new_tokens=3)           # never scheduled
+    assert metrics.ttft_steps(zero) is None
+    assert metrics.tpot_steps(zero) is None
+    one = Request(uid=1, prompt=np.ones(4, np.int32), max_new_tokens=1)
+    one.submit_step = 0
+    one.token_steps = [3]
+    assert metrics.ttft_steps(one) == 4
+    assert metrics.tpot_steps(one) is None     # < 2 tokens: no gap
+    d = metrics.request_digest([zero, one])
+    assert d["requests"] == 2
+    assert d["ttft_steps_p99"] == 4.0          # the one real sample
+    assert d["tpot_steps_p99"] == -1.0         # sentinel, never NaN
+    assert all(np.isfinite(v) for v in d.values())
+
+
+def test_percentile_digest_refuses_non_finite():
+    """NaN/inf samples mean a degenerate request leaked past the
+    ttft/tpot None-filter; the digest must refuse loudly instead of
+    flowing NaN into CSV rows."""
+    for bad in ([1.0, float("nan")], [float("inf")], [2.0, -np.inf]):
+        with pytest.raises(ValueError, match="non-finite"):
+            metrics.percentile_digest(bad, "x_")
+    # empty stays the sentinel path, not an error
+    assert metrics.percentile_digest([], "x_")["x_mean"] == -1.0
+
+
+def test_drift_detector_refuses_non_finite():
+    """A NaN sample would poison the window medians and silently
+    disarm the detector (NaN comparisons are always False) — update()
+    must raise instead, and the detector must stay usable after."""
+    det = metrics.MedianWindowDetector(window=4, patience=2)
+    for v in (1.0, 1.0, 1.0, 1.0):
+        det.update(v)
+    with pytest.raises(ValueError, match="non-finite"):
+        det.update(float("nan"))
+    with pytest.raises(ValueError, match="non-finite"):
+        det.update(float("inf"))
+    # still armed: sustained 3x drift flags as usual
+    flagged = [det.update(3.0) for _ in range(4)]
+    assert det.flagged and any(flagged)
+
+
+def test_counter_deltas_covers_sampling_counters():
+    """The ISSUE-9 stats() keys are registered as COUNTERS and diff
+    like any monotone total (no KeyError, no gauge pass-through)."""
+    for k in ("sibling_requests", "beam_forks", "masked_tokens"):
+        assert k in metrics.COUNTERS and k not in metrics.GAUGES
+    snaps = [{"sibling_requests": 3, "beam_forks": 0,
+              "masked_tokens": 4},
+             {"sibling_requests": 3, "beam_forks": 2,
+              "masked_tokens": 10}]
+    d = metrics.counter_deltas(snaps)
+    assert d[0] == {"sibling_requests": 3, "beam_forks": 0,
+                    "masked_tokens": 4}
+    assert d[1] == {"sibling_requests": 0, "beam_forks": 2,
+                    "masked_tokens": 6}
+
+
 # ------------------------------------------------- constants hoist
 
 
