@@ -81,6 +81,15 @@ SERVING_PACKED_BASELINE = os.path.join(
 SERVING_NSAMPLE_BASELINE = os.path.join(
     os.path.dirname(os.path.abspath(__file__)),
     "baselines", "serving_nsample_baseline.csv")
+# self-speculative decoding rows (serving_bench.serving_spec_rows):
+# int2-draft / int4-target engines with the ISSUE-10 counters
+# (draft/accepted/rejected/bonus tokens, spec_acceptance_rate) as
+# gated columns, paired with their non-spec comparison rows so the
+# step-count win is tracked as data — own CSV, older baselines stay
+# byte-identical
+SERVING_SPEC_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "baselines", "serving_spec_baseline.csv")
 # opt-in wall-clock RATE band for the packed rows' coarse
 # steps_per_sec (higher is better — the band inverts): recorded, like
 # kernel_bench_wallclock.csv, only on the fixed runner class that
@@ -286,13 +295,18 @@ def main(argv=None) -> int:
     paged = paged_attention_rows(timed=args.exercise)
     from benchmarks.serving_bench import (serving_nsample_rows,
                                           serving_packed_rows,
-                                          serving_rows)
+                                          serving_rows,
+                                          serving_spec_rows)
     serving = serving_rows(timed=args.exercise)
     # packed rows are timed under the wall-clock band too: their
     # steps_per_sec rate is the one serving number it gates
     packed = serving_packed_rows(timed=args.exercise or wallclock)
     # nsample rows: analytic gate only (like the padded serving rows)
     nsample = serving_nsample_rows(timed=args.exercise)
+    # spec rows: analytic gate only — their in-row asserts (draft
+    # accounting identity, acceptance >= 0.5, step win vs non-spec)
+    # run before any row is emitted
+    spec = serving_spec_rows(timed=args.exercise)
     if wallclock:
         # min over repetitions stabilizes the quick-mode timings enough
         # to gate on (single-shot quick timings vary several x)
@@ -300,7 +314,7 @@ def main(argv=None) -> int:
             [full] + [bench(timed=True, quick=True)
                       for _ in range(wallclock_reps() - 1)])
     if args.exercise or wallclock:
-        for r in full + paged + serving + packed + nsample:
+        for r in full + paged + serving + packed + nsample + spec:
             us = {k: v for k, v in r.items() if k.endswith("_us")
                   or k == "steps_per_sec"}
             if us:
@@ -310,6 +324,7 @@ def main(argv=None) -> int:
     serving_csv_rows = deterministic_view(serving)
     packed_csv_rows = deterministic_view(packed)
     nsample_csv_rows = deterministic_view(nsample)
+    spec_csv_rows = deterministic_view(spec)
 
     if args.update:
         _rows_to_csv(rows, BASELINE)
@@ -326,6 +341,9 @@ def main(argv=None) -> int:
         _rows_to_csv(nsample_csv_rows, SERVING_NSAMPLE_BASELINE)
         print(f"[check_baseline] wrote {SERVING_NSAMPLE_BASELINE} "
               f"({len(nsample_csv_rows)} rows)")
+        _rows_to_csv(spec_csv_rows, SERVING_SPEC_BASELINE)
+        print(f"[check_baseline] wrote {SERVING_SPEC_BASELINE} "
+              f"({len(spec_csv_rows)} rows)")
         if wallclock:
             wrows = wallclock_view(full)
             _rows_to_csv(wrows, WALLCLOCK_BASELINE)
@@ -345,6 +363,8 @@ def main(argv=None) -> int:
                                          SERVING_PACKED_BASELINE)
     problems += compare_against_baseline(nsample_csv_rows,
                                          SERVING_NSAMPLE_BASELINE)
+    problems += compare_against_baseline(spec_csv_rows,
+                                         SERVING_SPEC_BASELINE)
     if wallclock:
         # padded serving rows stay out of the band (their *_us are
         # whole-trace replays, not kernel timings) — analytic gate
@@ -360,7 +380,8 @@ def main(argv=None) -> int:
     print(f"[check_baseline] OK: {len(rows)} + {len(paged_rows)} "
           f"(paged-attention) + {len(serving_csv_rows)} (serving) + "
           f"{len(packed_csv_rows)} (packed serving) + "
-          f"{len(nsample_csv_rows)} (nsample serving) "
+          f"{len(nsample_csv_rows)} (nsample serving) + "
+          f"{len(spec_csv_rows)} (spec serving) "
           f"rows match the baselines" + gate)
     return 0
 

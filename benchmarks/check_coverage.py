@@ -1,0 +1,232 @@
+"""Line-coverage floor over ``src/repro/serve/`` (ISSUE-10 satellite).
+
+``python -m benchmarks.check_coverage`` runs the serve-focused test
+files under line tracing, computes per-file line coverage of the
+serving subsystem (engine, block pool, metrics), and compares the
+TOTAL against the ratchet recorded in
+benchmarks/baselines/serve_coverage_floor.csv — the same discipline
+as the CSV bench gates (check_baseline.py): a PR that lands untested
+serving branches drops the total below the floor and fails; a PR that
+adds coverage re-records a higher floor with ``--update``.
+
+Measurement backend: ``pytest-cov``/``coverage`` when importable, else
+a stdlib ``sys.settrace`` collector (this container ships neither, so
+the fallback is the default path).  Both count EXECUTED source lines
+against the EXECUTABLE lines of each file (code-object ``co_lines``
+walk — the same denominator coverage.py uses), so the percentages are
+comparable across backends.  The measured test set is fixed
+(``DEFAULT_TESTS``; override with ``SERVE_COVERAGE_TESTS`` as a
+comma-separated list) so the floor is deterministic.
+
+The floor gates the TOTAL only: per-file percentages are recorded for
+drill-down but a refactor may legitimately shift lines between files.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+import threading
+from typing import Dict, List, Set, Tuple
+
+_BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+_REPO = os.path.dirname(_BENCH_DIR)
+SERVE_DIR = os.path.join(_REPO, "src", "repro", "serve")
+COVERAGE_BASELINE = os.path.join(_BENCH_DIR, "baselines",
+                                 "serve_coverage_floor.csv")
+# serve-focused fast-tier files: engine scheduling/decode/spec paths,
+# paging + preemption + prefix reuse, sampling/beam/masks, the traffic
+# harness (metrics digests), and the block-pool unit tests.  The
+# property suite is deliberately excluded — hypothesis replay under a
+# line tracer multiplies its runtime for no extra line coverage.
+DEFAULT_TESTS = (
+    "tests/test_block_pool.py",
+    "tests/test_serve_engine.py",
+    "tests/test_chunked_prefill.py",
+    "tests/test_preemption.py",
+    "tests/test_prefix_reuse.py",
+    "tests/test_sampling.py",
+    "tests/test_spec_decode.py",
+    "tests/test_traffic_harness.py",
+)
+
+
+def serve_files() -> List[str]:
+    return sorted(
+        os.path.join(SERVE_DIR, f) for f in os.listdir(SERVE_DIR)
+        if f.endswith(".py"))
+
+
+def executable_lines(path: str) -> Set[int]:
+    """The measurable denominator: every line holding compiled
+    bytecode, via a recursive ``co_lines`` walk of the file's code
+    objects (functions, lambdas, comprehensions, class bodies) —
+    coverage.py's definition, minus its branch/exclusion pragmas."""
+    with open(path) as f:
+        code = compile(f.read(), path, "exec")
+    lines: Set[int] = set()
+    stack = [code]
+    while stack:
+        co = stack.pop()
+        lines.update(ln for _, _, ln in co.co_lines() if ln)
+        stack.extend(c for c in co.co_consts if hasattr(c, "co_lines"))
+    return lines
+
+
+def _run_pytest(tests: List[str]) -> int:
+    import pytest
+    return pytest.main(["-x", "-q", "-p", "no:cacheprovider",
+                        *tests])
+
+
+def _measure_settrace(tests: List[str]) -> Dict[str, Set[int]]:
+    """Stdlib fallback: a global trace that line-traces ONLY frames
+    whose code lives under src/repro/serve/ (every other call returns
+    None immediately, so the overhead outside the subsystem is one
+    string check per call)."""
+    prefix = SERVE_DIR + os.sep
+    hits: Dict[str, Set[int]] = {}
+
+    def line_tracer(frame, event, arg):
+        if event == "line":
+            hits.setdefault(frame.f_code.co_filename,
+                            set()).add(frame.f_lineno)
+        return line_tracer
+
+    def tracer(frame, event, arg):
+        if event == "call" and \
+                frame.f_code.co_filename.startswith(prefix):
+            return line_tracer
+        return None
+
+    threading.settrace(tracer)
+    sys.settrace(tracer)
+    try:
+        rc = _run_pytest(tests)
+    finally:
+        sys.settrace(None)
+        threading.settrace(None)  # type: ignore[arg-type]
+    if rc != 0:
+        raise SystemExit(f"measured test run failed (exit {rc})")
+    return hits
+
+
+def _measure_coveragepy(tests: List[str]) -> Dict[str, Set[int]]:
+    import coverage
+    cov = coverage.Coverage(include=[os.path.join(SERVE_DIR, "*")])
+    cov.start()
+    try:
+        rc = _run_pytest(tests)
+    finally:
+        cov.stop()
+    if rc != 0:
+        raise SystemExit(f"measured test run failed (exit {rc})")
+    data = cov.get_data()
+    return {f: set(data.lines(f) or ()) for f in data.measured_files()}
+
+
+def measure(tests: List[str]) -> Dict[str, Set[int]]:
+    try:
+        import coverage  # noqa: F401  (preferred backend when present)
+        return _measure_coveragepy(tests)
+    except ImportError:
+        return _measure_settrace(tests)
+
+
+def coverage_rows(hits: Dict[str, Set[int]]) -> List[Dict]:
+    """Per-file rows plus the gated TOTAL, stable order, percentages
+    rounded so the CSV is byte-reproducible."""
+    rows = []
+    tot_exec = tot_hit = 0
+    for path in serve_files():
+        ex = executable_lines(path)
+        # the serve modules are imported (their def/class lines run)
+        # by every measured test file, so module-level lines count as
+        # covered even when import happened before tracing started
+        got = hits.get(path, set()) & ex
+        if not got:
+            got = set()
+        covered = len(got)
+        tot_exec += len(ex)
+        tot_hit += covered
+        rows.append({
+            "file": os.path.relpath(path, _REPO),
+            "executable_lines": len(ex),
+            "covered_lines": covered,
+            "percent": round(100.0 * covered / max(len(ex), 1), 2),
+        })
+    rows.append({
+        "file": "TOTAL",
+        "executable_lines": tot_exec,
+        "covered_lines": tot_hit,
+        "percent": round(100.0 * tot_hit / max(tot_exec, 1), 2),
+    })
+    return rows
+
+
+def compare_against_floor(rows: List[Dict],
+                          baseline_path: str = COVERAGE_BASELINE
+                          ) -> List[str]:
+    """Ratchet check (empty = pass): the TOTAL percentage must not
+    drop below the recorded floor.  Per-file rows are informational."""
+    if not os.path.exists(baseline_path):
+        return [f"coverage floor missing: {baseline_path} "
+                f"(run with --update to create it)"]
+    with open(baseline_path, newline="") as f:
+        base = {r["file"]: r for r in csv.DictReader(f)}
+    got = {r["file"]: r for r in rows}
+    problems = []
+    if "TOTAL" not in base:
+        return [f"coverage floor has no TOTAL row: {baseline_path}"]
+    floor = float(base["TOTAL"]["percent"])
+    cur = float(got["TOTAL"]["percent"])
+    if cur < floor - 1e-9:
+        problems.append(
+            f"serve coverage regressed: TOTAL {cur:.2f}% < floor "
+            f"{floor:.2f}% — add tests for the new branches or "
+            f"justify re-recording with --update")
+    for name, brow in base.items():
+        if name not in got:
+            problems.append(f"coverage: measured file disappeared: "
+                            f"{name}")
+    return problems
+
+
+def _tests_from_env() -> List[str]:
+    env = os.environ.get("SERVE_COVERAGE_TESTS", "")
+    if env:
+        return [t for t in env.split(",") if t]
+    return [os.path.join(_REPO, t) for t in DEFAULT_TESTS]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="re-record the floor from the current run")
+    args = ap.parse_args(argv)
+    rows = coverage_rows(measure(_tests_from_env()))
+    for r in rows:
+        print(f"[check_coverage] {r['file']}: {r['covered_lines']}/"
+              f"{r['executable_lines']} = {r['percent']}%")
+    if args.update:
+        os.makedirs(os.path.dirname(COVERAGE_BASELINE), exist_ok=True)
+        with open(COVERAGE_BASELINE, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            for r in rows:
+                w.writerow(r)
+        print(f"[check_coverage] wrote {COVERAGE_BASELINE}")
+        return 0
+    problems = compare_against_floor(rows)
+    if problems:
+        for p in problems:
+            print(f"[check_coverage] FAIL: {p}", file=sys.stderr)
+        return 1
+    print("[check_coverage] OK: total serve coverage "
+          f"{rows[-1]['percent']}% >= recorded floor")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

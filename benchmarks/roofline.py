@@ -189,6 +189,28 @@ def roofline_row(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
             cell["arch"], cell["gather_context_tokens"]) / n_dev
         row["gather_bytes_saved_per_dev"] = extra
         row["t_memory_xla_gather_s"] = t_memory + extra / HBM_BW
+    if cell.get("draft_tokens"):
+        # self-speculative serve cell: the verify grid's FLOPs are
+        # already in the lowered terms (draft tokens are just extra
+        # n_new rows), but the DRAFT passes run outside the dry-run
+        # step — price them at the bit-serial rate.  A bit-serial
+        # matmul lowers one pass per activation bit plane
+        # (kernels/ops.weight_stream_stats), so a draft token through
+        # the int2 encoding costs bitserial_pass_ratio(2, 4) = 0.5 of
+        # a target token's passes — the PR-2 act-bits crossover,
+        # re-used as the speculation overhead price.
+        from repro.kernels.ops import bitserial_pass_ratio
+        ratio = bitserial_pass_ratio(cell.get("draft_bits", 2),
+                                     cell.get("target_bits", 4))
+        n_act = arch_params(cell["arch"])["active"]
+        draft_flops_dev = \
+            2.0 * n_act * cell["draft_tokens"] * ratio / n_dev
+        row["draft_cost_ratio"] = ratio
+        row["draft_flops_per_dev"] = draft_flops_dev
+        row["t_compute_spec_s"] = t_compute \
+            + draft_flops_dev / PEAK_FLOPS
+        row["spec_acceptance_rate"] = \
+            cell.get("accepted_tokens", 0) / cell["draft_tokens"]
     ws = cell.get("weight_stream")
     if ws:
         # fused-kernel weight-stream terms (serve cells): the memory

@@ -356,3 +356,18 @@ def weight_stream_stats(m: int, w: TernaryWeight,
         "weight_bytes_per_stream": bytes_per_stream,
         "weight_bytes_streamed": launches * bytes_per_stream,
     }
+
+
+def bitserial_pass_ratio(draft_bits: int, target_bits: int) -> float:
+    """Compute-cost ratio of a ``draft_bits``-wide bit-serial VMM to a
+    ``target_bits``-wide one over the same weight tiles.
+
+    Bit-serial activation quantization lowers one tile pass per
+    activation bit-plane (the PR-2 act-bits crossover: int2 runs half
+    the passes of int4 over identical ternary codes), so per-token
+    compute scales linearly in the width.  benchmarks/roofline.py uses
+    this to price speculative-draft FLOPs at the cheap-encoding rate.
+    """
+    if draft_bits < 1 or target_bits < 1:
+        raise ValueError((draft_bits, target_bits))
+    return draft_bits / target_bits

@@ -77,6 +77,31 @@ class TernaryPolicy:
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
 
+    def draft(self, act_mode: str) -> "TernaryPolicy":
+        """Derive the cheap-encoding DRAFT policy for self-speculative
+        decoding: the SAME ternary weight codes read through a narrower
+        activation path (serve/engine §speculative).  The draft must be
+        strictly cheaper than (or equal to) the target — a draft wider
+        than the verify width would cost more than it saves and its
+        proposals would not ride the act-bits crossover the roofline
+        prices (kernels/ops.bitserial_pass_ratio)."""
+        if not self.enabled:
+            return self                  # FP32 serving: draft == target
+        pol = self.replace(act_mode=act_mode)
+        tb, db = self.act_bits, pol.act_bits
+        if db is None and pol.act_mode == "none":
+            raise ValueError(
+                "draft act_mode 'none' is weight-only serving — it is "
+                "not cheaper than the target and proposes from a "
+                "different (full-precision-activation) distribution; "
+                "pick 'ternary' or 'int<bits>'")
+        if tb is not None and db is not None and db > tb:
+            raise ValueError(
+                f"draft act_mode {act_mode!r} ({db} bits) is wider than "
+                f"the target's {self.act_mode!r} ({tb} bits); the draft "
+                f"must use the cheaper encoding")
+        return pol
+
 
 FP32 = TernaryPolicy(enabled=False)
 

@@ -324,6 +324,72 @@ def make_packed_unified_step(cfg: ArchConfig):
     return packed_step
 
 
+# ---------------------------------------------------------------------------
+# speculative decoding steps (docs/serving.md §speculative)
+# ---------------------------------------------------------------------------
+
+def make_draft_step(cfg: ArchConfig):
+    """The speculative DRAFT step: the paged unified step at chunk == 1,
+    built from the cheap-encoding draft config (the target's weights
+    read through ``TernaryPolicy.draft`` — e.g. int2 bit-serial
+    activations against an int4 target).  Proposals are the masked
+    greedy argmax, fused device-side so the host fetches one token per
+    slot per draft pass: a DETERMINISTIC proposal distribution
+    (q = delta at the argmax), which reduces exact rejection sampling
+    to a plain accept-with-probability-p(d) test in the verify step."""
+    def draft_step(params, batch, caches, cache_len, n_new,
+                   block_tables, slot_map, mask):
+        hidden, caches, _ = tfm.forward(
+            params, cfg, batch, mode="mixed", caches=caches,
+            cache_len=cache_len, n_new=n_new,
+            block_tables=block_tables, slot_map=slot_map)
+        lg = tfm.logits(params, cfg, hidden[:, :1])[:, 0]
+        toks = greedy_token(apply_token_masks(lg, mask))
+        return toks, caches
+    return draft_step
+
+
+def make_paged_spec_step(cfg: ArchConfig):
+    """The padded VERIFY step: identical to ``make_paged_unified_step``
+    except it returns the logits of EVERY grid position — row j of a
+    decode slot's (slots, chunk) lane predicts position cache_len+j+1,
+    which is exactly what acceptance needs to judge draft token j+1.
+    Draft tokens ride the grid as ordinary extra ``n_new`` (the mixed
+    step already supports multi-token decode rows), and the verify
+    forward overwrites the draft pass's cheap-encoding KV with target
+    KV at every scheduled position."""
+    def paged_spec_step(params, batch, caches, cache_len, n_new,
+                        block_tables, slot_map):
+        hidden, caches, _ = tfm.forward(
+            params, cfg, batch, mode="mixed", caches=caches,
+            cache_len=cache_len, n_new=n_new,
+            block_tables=block_tables, slot_map=slot_map)
+        lg = tfm.logits(params, cfg, hidden)     # (slots, chunk, vocab)
+        return lg, caches
+    return paged_spec_step
+
+
+def make_packed_spec_step(cfg: ArchConfig):
+    """The token-packed VERIFY step: flat layout, all-position logits.
+    ``row_idx`` (slots, chunk) holds the flat index of each slot's j-th
+    scheduled token (rows past ``n_new`` point at 0 and are never read)
+    so the gathered logits keep the padded verify step's
+    (slots, chunk, vocab) shape and the SAME accept function serves
+    both layouts — the parity contract extends to speculative runs."""
+    def packed_spec_step(params, batch, caches, positions, n_new,
+                         seg_ids, block_tables, slot_map, row_idx):
+        hidden, caches, _ = tfm.forward(
+            params, cfg, {"tokens": batch["tokens"]}, mode="mixed",
+            caches=caches, cache_len=positions, n_new=n_new,
+            block_tables=block_tables, slot_map=slot_map,
+            seg_ids=seg_ids)
+        s, c = row_idx.shape
+        rows = hidden[row_idx.reshape(-1), 0]              # (s*c, d)
+        lg = tfm.logits(params, cfg, rows.reshape(s, c, -1))
+        return lg, caches
+    return packed_spec_step
+
+
 def copy_kv_block(caches, src, dst):
     """Copy one physical KV block (every layer-period, K and V and any
     scales) — the copy-on-write primitive behind partial-tail prefix
@@ -494,6 +560,103 @@ def _get_sampler(temperature: float, topk: int):
     return _SAMPLER_JITS[key]
 
 
+# sub-stream tags for the acceptance test and the rejection resample:
+# folded onto the position's derived key so the BONUS draw (the j == k
+# emission) consumes the RAW derive_sample_key(base, uid, si, t0+j) —
+# which makes a spec engine at k == 0 bit-identical to the non-spec
+# sampled path, position by position
+_SPEC_ACCEPT_TAG = 1
+_SPEC_RESAMPLE_TAG = 2
+
+
+def make_spec_accept_fn(temperature: float, chunk: int):
+    """Device-side speculative acceptance over the verify step's
+    all-position logits (docs/serving.md §speculative).
+
+    Per slot: grid row ``start + j`` scores emission j (token_index
+    ``ids[:, 2] + j``); draft token j+1 sits at grid column
+    ``start + j + 1``.  Greedy engines accept while the masked argmax
+    chain reproduces the draft; sampled engines run EXACT rejection
+    sampling against the deterministic draft proposal — accept d with
+    probability p(d) (uniform from the ACCEPT sub-key), else draw the
+    correction from p with d banned (renormalized, RESAMPLE sub-key),
+    so the emitted marginal is exactly p.  The final emission (first
+    rejection's correction or the all-accepted bonus) and every
+    acceptance decision are keyed on the per-request counter streams:
+    the same seed yields the same tokens whatever k, the layout, or
+    the scheduling history.  Returns (emitted (slots, chunk), n_emit
+    (slots,)); rows past n_emit are garbage the host never reads."""
+    def accept_row(lg_row, tok_row, start, k, id3, mask_rows, base_key):
+        vocab = lg_row.shape[-1]
+        es, accs = [], []
+        for j in range(chunk):
+            lgm = apply_token_masks(
+                lg_row[jnp.clip(start + j, 0, chunk - 1)][None],
+                mask_rows[j][None])[0]
+            d_next = tok_row[jnp.clip(start + j + 1, 0, chunk - 1)]
+            in_draft = jnp.asarray(j) < k
+            if temperature <= 0:
+                e = jnp.argmax(lgm).astype(jnp.int32)
+                acc = in_draft & (e == d_next)
+            else:
+                key = derive_sample_key(base_key, id3[0], id3[1],
+                                        id3[2] + jnp.uint32(j))
+                scaled = lgm / temperature
+                u = jax.random.uniform(
+                    jax.random.fold_in(key, _SPEC_ACCEPT_TAG))
+                acc = in_draft & (u < jax.nn.softmax(scaled)[d_next])
+                banned = jnp.where(jnp.arange(vocab) == d_next,
+                                   -jnp.inf, lgm)
+                resample = jax.random.categorical(
+                    jax.random.fold_in(key, _SPEC_RESAMPLE_TAG),
+                    banned / temperature).astype(jnp.int32)
+                bonus = jax.random.categorical(key, scaled) \
+                    .astype(jnp.int32)
+                e = jnp.where(acc, d_next,
+                              jnp.where(in_draft, resample, bonus))
+            es.append(e)
+            accs.append(acc)
+        cont = jnp.stack(accs).astype(jnp.int32)
+        a = jnp.cumprod(cont).sum()          # leading accepted run
+        return jnp.stack(es), (a + 1).astype(jnp.int32)
+
+    def accept_fn(lg, toks, start, n_draft, base_key, ids, masks):
+        return jax.vmap(accept_row, in_axes=(0, 0, 0, 0, 0, 0, None))(
+            lg, toks, start, n_draft, ids, masks, base_key)
+    return accept_fn
+
+
+# module-scope jit caches for the speculative step/accept functions —
+# the _copy_kv_block_jit discipline: keyed on the (hashable, frozen)
+# config so every engine in the process shares one compile per shape
+_DRAFT_STEP_JITS: Dict[Any, Any] = {}
+_SPEC_STEP_JITS: Dict[Tuple[Any, bool], Any] = {}
+_SPEC_ACCEPT_JITS: Dict[Tuple[float, int], Any] = {}
+
+
+def _get_draft_step(cfg: ArchConfig):
+    if cfg not in _DRAFT_STEP_JITS:
+        _DRAFT_STEP_JITS[cfg] = jax.jit(make_draft_step(cfg),
+                                        donate_argnums=(2,))
+    return _DRAFT_STEP_JITS[cfg]
+
+
+def _get_spec_step(cfg: ArchConfig, packed: bool):
+    key = (cfg, bool(packed))
+    if key not in _SPEC_STEP_JITS:
+        inner = make_packed_spec_step(cfg) if packed \
+            else make_paged_spec_step(cfg)
+        _SPEC_STEP_JITS[key] = jax.jit(inner, donate_argnums=(2,))
+    return _SPEC_STEP_JITS[key]
+
+
+def _get_spec_accept(temperature: float, chunk: int):
+    key = (float(temperature), int(chunk))
+    if key not in _SPEC_ACCEPT_JITS:
+        _SPEC_ACCEPT_JITS[key] = jax.jit(make_spec_accept_fn(*key))
+    return _SPEC_ACCEPT_JITS[key]
+
+
 # ---------------------------------------------------------------------------
 # token-budget continuous-batching scheduler
 # ---------------------------------------------------------------------------
@@ -614,7 +777,8 @@ class ServeEngine:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefix_reuse: Any = "auto", preempt: str = "auto",
                  packed: bool = False, temperature: float = 1.0,
-                 mask_width: int = 8):
+                 mask_width: int = 8, spec_k: int = 0,
+                 draft_act_mode: str = "int2"):
         assert oversize in ("error", "truncate"), oversize
         assert chunk >= 1, chunk
         assert preempt in ("auto", "swap", "recompute", "none"), preempt
@@ -759,6 +923,17 @@ class ServeEngine:
         self.sibling_requests = 0    # sample_index>0 admissions
         self.beam_forks = 0          # beam hypothesis adoptions (CoW)
         self.masked_tokens = 0       # sampled positions with a mask row
+        # speculative-decoding accounting (always present so the
+        # telemetry registry sees one stable key set; all zero when
+        # spec_k == 0): draft_tokens == accepted + rejected holds after
+        # every step, and each verify emits its accepted run plus ONE
+        # more token — the first rejection's correction, or the bonus
+        # (counted in bonus_tokens) when every draft survived
+        self.draft_tokens = 0
+        self.accepted_tokens = 0
+        self.rejected_tokens = 0
+        self.bonus_tokens = 0
+        self.draft_d2h_fetches = 0   # one per draft pass (k per step max)
         # live beam groups: uid -> the n sibling Requests (host-side
         # beam bookkeeping; removed when every sibling finishes)
         self._beam_groups: Dict[int, List[Request]] = {}
@@ -808,6 +983,33 @@ class ServeEngine:
         self._set_table_row = _set_table_row_jit
         self._write_block = _write_kv_block_jit
 
+        # self-speculative decoding (docs/serving.md §speculative): a
+        # draft pass over the SAME weights through the cheap encoding
+        # proposes up to spec_k tokens per decoding slot; the target
+        # verifies all k+1 positions in one mixed step.  Rejected
+        # suffixes roll back by retreating cache_len and releasing the
+        # over-allocated tail blocks — sound only for pure-attention
+        # stacks (recurrent SSM/conv state advanced by rejected tokens
+        # cannot rewind, and media-conditioned reuse is gated anyway).
+        self.spec_k = int(spec_k)
+        assert self.spec_k >= 0, spec_k
+        self.draft_act_mode = draft_act_mode
+        if self.spec_k:
+            if not (all(s.mixer == "attn" for s in cfg.layout)
+                    and not cfg.n_media_tokens):
+                raise ValueError(
+                    "spec_k > 0 requires a pure-attention stack "
+                    "without media: a rejected draft suffix rolls back "
+                    "by retreating cache_len, which cannot rewind "
+                    "recurrent SSM/conv state — construct with "
+                    "spec_k=0 for this architecture")
+            self._draft_cfg = cfg.replace(
+                ternary=cfg.ternary.draft(draft_act_mode))
+            self._draft_step = _get_draft_step(self._draft_cfg)
+            self._spec_step = _get_spec_step(cfg, self.packed)
+            self._accept = _get_spec_accept(
+                0.0 if greedy else self.temperature, self.chunk)
+
     def submit(self, req: Request):
         plen = len(req.prompt)
         if plen < 1:
@@ -822,6 +1024,13 @@ class ServeEngine:
             raise ValueError(f"unknown sample_mode {req.sample_mode!r}")
         if req.n < 1:
             raise ValueError(f"Request.n must be >= 1, got {req.n}")
+        if req.sample_mode == "beam" and self.spec_k:
+            raise ValueError(
+                "speculative decoding (spec_k > 0) does not compose "
+                "with beam search: beam expansion consumes per-slot "
+                "top-k candidates, not an accept/reject chain — submit "
+                "sample_mode='independent' or construct the engine "
+                "with spec_k=0")
         if req.sample_mode == "beam":
             if self.greedy and req.n > 1:
                 raise ValueError(
@@ -1419,19 +1628,11 @@ class ServeEngine:
         tokens, n_new, slot_map, decode_slots, finishing = self._schedule()
         if not n_new.any():
             return
-        if self.cfg.n_media_tokens and self._media_dirty:
-            self._media_dev = jnp.asarray(self._media_host)
-            self._media_dirty = False
-        if self._dirty_slots:
-            if self._tables_dev is None or \
-                    len(self._dirty_slots) > self.slots // 2:
-                self._tables_dev = jnp.asarray(self.block_tables)
-            else:
-                for i in sorted(self._dirty_slots):
-                    self._tables_dev = self._set_table_row(
-                        self._tables_dev, np.int32(i),
-                        jnp.asarray(self.block_tables[i]))
-            self._dirty_slots.clear()
+        if self.spec_k:
+            self._step_spec(this_step, tokens, n_new, slot_map,
+                            decode_slots, finishing)
+            return
+        self._sync_device_state()
         if self.packed:
             (flat, seg, pos, nn, smap, last_idx, bucket) = \
                 self._flatten_grid(tokens, n_new, slot_map)
@@ -1529,6 +1730,232 @@ class ServeEngine:
             req.token_steps.append(this_step)
             self._finish_check(i)
 
+    def _step_spec(self, this_step: int, tokens: np.ndarray,
+                   n_new: np.ndarray, slot_map: np.ndarray,
+                   decode_slots: List[int], finishing: List[int]):
+        """The speculative tail of ``step()`` (docs/serving.md
+        §speculative): extend each scheduled decode row with up to
+        ``spec_k`` draft tokens funded by the LEFTOVER token budget
+        (decodes and prefill chunks keep strict priority — speculation
+        only spends budget nothing else claimed), run k cheap-encoding
+        draft passes to propose them, verify all k+1 positions in ONE
+        mixed step of the engine's own layout, and accept/roll back.
+
+        Rollback contract: the verify forward wrote target KV at
+        positions [cache_len, cache_len+k]; acceptance of ``a`` drafts
+        commits coverage cache_len+1+a, so the suffix beyond it is
+        abandoned by retreating ``cache_len`` (never re-read: attention
+        masks by length, later writes overwrite) and any block past the
+        accepted coverage is released back to the pool.  Chain-hash
+        registration is DEFERRED to accepted coverage so a block
+        containing rejected-draft KV is never matchable.
+        ``BlockPool.validate()`` holds after every rollback."""
+        oob = self.pool.num_blocks * self.block_size
+        bs = self.block_size
+        # -- plan: grant draft extensions from the leftover budget ----------
+        leftover = max(0, self.token_budget - int(n_new.sum()))
+        k_of: Dict[int, int] = {}
+        for i in decode_slots:
+            if leftover <= 0:
+                break
+            req = self.slot_req[i]
+            cl = int(self.cache_len[i])
+            k = min(self.spec_k, self.chunk - 1, leftover,
+                    self.max_len - 1 - cl,
+                    req.max_new_tokens - len(req.out_tokens) - 1)
+            if k <= 0:
+                continue
+            # grow the table WITHOUT preemption — speculation is an
+            # optimization, never worth evicting anyone; shrink k to
+            # the blocks actually obtained
+            while int(self.slot_nblocks[i]) * bs < cl + 1 + k:
+                bid = self._alloc_block()
+                if bid is None:
+                    break
+                self.block_tables[i, self.slot_nblocks[i]] = bid
+                self.slot_nblocks[i] += 1
+                self._dirty_slots.add(i)
+            k = min(k, int(self.slot_nblocks[i]) * bs - cl - 1)
+            if k <= 0:
+                continue
+            pos = cl + 1 + np.arange(k)
+            blk = self.block_tables[i, pos // bs]
+            slot_map[i, 1:1 + k] = blk * bs + pos % bs
+            n_new[i] = 1 + k
+            k_of[i] = k
+            leftover -= k
+        self._sync_device_state()
+        # -- sample-row operands: mask row j constrains emission j ----------
+        sample_rows = decode_slots + [i for i in finishing
+                                      if not self._skip_sample[i]]
+        ids = np.zeros((self.slots, 3), np.uint32)
+        masks = np.full((self.slots, self.chunk, self.mask_width), -1,
+                        np.int32)
+        had_mask = np.zeros((self.slots, self.chunk), bool)
+        for i in sample_rows:
+            req = self.slot_req[i]
+            ids[i] = (req.uid, req.sample_index, len(req.out_tokens))
+            row = self._mask_row(req, req.out_tokens)
+            if row is not None:
+                masks[i, 0, :len(row)] = row
+                had_mask[i, 0] = True
+        # -- draft loop: k cheap-encoding passes propose the tokens ---------
+        # (pass j consumes grid token j and proposes token j+1 under
+        # emission j's mask, so a masked token can never be proposed)
+        max_k = max(k_of.values(), default=0)
+        for j in range(max_k):
+            active = [i for i, k in k_of.items() if k > j]
+            d_tok = np.zeros((self.slots, 1), np.int32)
+            d_cl = np.zeros((self.slots,), np.int32)
+            d_nn = np.zeros((self.slots,), np.int32)
+            d_map = np.full((self.slots, 1), oob, np.int32)
+            for i in active:
+                d_tok[i, 0] = tokens[i, j]
+                d_cl[i] = int(self.cache_len[i]) + j
+                d_nn[i] = 1
+                d_map[i, 0] = slot_map[i, j]
+            toks_d, self.caches = self._draft_step(
+                self.params, {"tokens": jnp.asarray(d_tok)}, self.caches,
+                jnp.asarray(d_cl), jnp.asarray(d_nn), self._tables_dev,
+                jnp.asarray(d_map), jnp.asarray(masks[:, j]))
+            # timcheck: allow[d2h] accounted draft fetch (draft_d2h_fetches)
+            d_host = jax.device_get(toks_d)
+            self.draft_d2h_fetches += 1
+            for i in active:
+                tokens[i, 1 + j] = int(d_host[i])
+                req = self.slot_req[i]
+                row = self._mask_row(
+                    req, list(req.out_tokens)
+                    + [int(t) for t in tokens[i, 1:2 + j]])
+                if row is not None:
+                    masks[i, j + 1, :len(row)] = row
+                    had_mask[i, j + 1] = True
+        # -- verify: ONE mixed step over all k+1 positions per slot ---------
+        if self.packed:
+            (flat, seg, pos, nn_, smap, row_idx, bucket) = \
+                self._flatten_spec_grid(tokens, n_new, slot_map)
+            lg, self.caches = self._spec_step(
+                self.params, {"tokens": jnp.asarray(flat)}, self.caches,
+                jnp.asarray(pos), jnp.asarray(nn_), jnp.asarray(seg),
+                self._tables_dev, jnp.asarray(smap),
+                jnp.asarray(row_idx))
+            self.grid_tokens += bucket
+        else:
+            lg, self.caches = self._spec_step(
+                self.params, {"tokens": jnp.asarray(tokens)},
+                self.caches, jnp.asarray(self.cache_len),
+                jnp.asarray(n_new), self._tables_dev,
+                jnp.asarray(slot_map))
+            self.grid_tokens += self.slots * self.chunk
+        start = np.zeros((self.slots,), np.int32)
+        n_draft = np.zeros((self.slots,), np.int32)
+        for i in range(self.slots):
+            if i in decode_slots:
+                n_draft[i] = k_of.get(i, 0)
+            elif n_new[i]:
+                start[i] = int(n_new[i]) - 1
+        out_dev = self._accept(lg, jnp.asarray(tokens),
+                               jnp.asarray(start), jnp.asarray(n_draft),
+                               self._base_key, jnp.asarray(ids),
+                               jnp.asarray(masks))
+        # timcheck: allow[d2h] the ONE accounted fetch per step (d2h_fetches)
+        fetched = jax.device_get(out_dev)
+        self.d2h_fetches += 1
+        emitted, n_emit = (np.asarray(a) for a in fetched)
+        # -- host bookkeeping: prefill rows exactly as the plain step -------
+        old_len = self.cache_len.copy()
+        self.scheduled_tokens += int(n_new.sum())
+        self._last_slot_map = np.where(
+            np.arange(self.chunk)[None, :] < n_new[:, None], slot_map, -1)
+        for i in range(self.slots):
+            t = int(n_new[i])
+            if not t or i in decode_slots:
+                continue
+            self.cache_len[i] += t
+            self.slot_fill[i] += t
+            self.scheduled_prefill_tokens += t
+            self.slot_hist[i].extend(int(x) for x in tokens[i, :t])
+            if self.prefix_reuse:
+                self._register_completed(i, int(old_len[i]),
+                                         int(old_len[i]) + t)
+        # -- decode rows: acceptance accounting, rollback, emission ---------
+        for i in decode_slots:
+            req = self.slot_req[i]
+            k = k_of.get(i, 0)
+            a = int(n_emit[i]) - 1
+            assert 0 <= a <= k, (a, k)
+            self.draft_tokens += k
+            self.accepted_tokens += a
+            self.rejected_tokens += k - a
+            if k and a == k:
+                self.bonus_tokens += 1
+            new_cl = int(old_len[i]) + 1 + a
+            self.cache_len[i] = new_cl
+            self.slot_hist[i].append(int(tokens[i, 0]))
+            self.slot_hist[i].extend(int(emitted[i, j]) for j in range(a))
+            # rollback: release speculative tail blocks beyond the
+            # accepted coverage (cache_len already retreated past them)
+            need = -(-new_cl // bs)
+            while int(self.slot_nblocks[i]) > need:
+                nb = int(self.slot_nblocks[i]) - 1
+                self.pool.decref(int(self.block_tables[i, nb]))
+                self.block_tables[i, nb] = -1
+                self.slot_nblocks[i] = nb
+                self._dirty_slots.add(i)
+            if self.prefix_reuse:
+                self._register_completed(i, int(old_len[i]), new_cl)
+            for j in range(a + 1):
+                if had_mask[i, j]:
+                    self.masked_tokens += 1
+                req.out_tokens.append(int(emitted[i, j]))
+                req.token_steps.append(this_step)
+            self._finish_check(i)
+        for i in finishing:
+            if self._skip_sample[i]:
+                self._skip_sample[i] = False
+                continue
+            req = self.slot_req[i]
+            if had_mask[i, 0]:
+                self.masked_tokens += 1
+            req.out_tokens.append(int(emitted[i, 0]))
+            req.token_steps.append(this_step)
+            self._finish_check(i)
+
+    def _flatten_spec_grid(self, tokens: np.ndarray, n_new: np.ndarray,
+                           slot_map: np.ndarray):
+        """``_flatten_grid`` plus the (slots, chunk) flat-row index map
+        the packed verify step gathers all-position logits through
+        (rows past a slot's ``n_new`` point at flat row 0; the accept
+        function never reads them)."""
+        flat, seg, pos, nn, smap, _last_idx, bucket = \
+            self._flatten_grid(tokens, n_new, slot_map)
+        row_idx = np.zeros((self.slots, self.chunk), np.int32)
+        t = 0
+        for i in range(self.slots):
+            k = int(n_new[i])
+            if k:
+                row_idx[i, :k] = t + np.arange(k)
+                t += k
+        return flat, seg, pos, nn, smap, row_idx, bucket
+
+    def _sync_device_state(self):
+        """Upload whatever host-side state changed since the last step:
+        the per-slot media batch and the dirty rows of the device
+        block-table mirror (whole-table refresh when most rows moved)."""
+        if self.cfg.n_media_tokens and self._media_dirty:
+            self._media_dev = jnp.asarray(self._media_host)
+            self._media_dirty = False
+        if self._dirty_slots:
+            if self._tables_dev is None or \
+                    len(self._dirty_slots) > self.slots // 2:
+                self._tables_dev = jnp.asarray(self.block_tables)
+            else:
+                for i in sorted(self._dirty_slots):
+                    self._tables_dev = self._set_table_row(
+                        self._tables_dev, np.int32(i),
+                        jnp.asarray(self.block_tables[i]))
+            self._dirty_slots.clear()
+
     def _sample_inputs(self, sample_rows: List[int]
                        ) -> Tuple[np.ndarray, np.ndarray]:
         """Host-side operands of the jitted sampler: per-slot PRNG
@@ -1541,26 +1968,39 @@ class ServeEngine:
         for i in sample_rows:
             req = self.slot_req[i]
             ids[i] = (req.uid, req.sample_index, len(req.out_tokens))
-            if req.allowed_tokens is None:
-                continue
-            allowed = req.allowed_tokens(list(req.out_tokens))
+            allowed = self._mask_row(req, req.out_tokens)
             if allowed is None:
                 continue
-            allowed = list(allowed)
-            if not allowed:
-                raise ValueError(
-                    f"allowed_tokens for uid={req.uid} returned an "
-                    f"empty set at position {len(req.out_tokens)} — "
-                    f"every continuation is forbidden; return None for "
-                    f"an unconstrained position instead")
-            if len(allowed) > self.mask_width:
-                raise ValueError(
-                    f"allowed_tokens returned {len(allowed)} ids > "
-                    f"mask_width={self.mask_width}; construct the "
-                    f"engine with a larger mask_width")
             mask[i, :len(allowed)] = allowed
             self.masked_tokens += 1
         return ids, mask
+
+    def _mask_row(self, req: Request,
+                  out_prefix: Sequence[int]) -> Optional[List[int]]:
+        """Evaluate + validate one guided-decoding mask row: the
+        allowed ids for the position that FOLLOWS ``out_prefix`` (None
+        = unconstrained).  The speculative path calls this with
+        hypothetical draft-extended prefixes, so masks constrain draft
+        proposals and verification emissions identically — a masked
+        token can never be proposed, and never accepted."""
+        if req.allowed_tokens is None:
+            return None
+        allowed = req.allowed_tokens(list(out_prefix))
+        if allowed is None:
+            return None
+        allowed = list(allowed)
+        if not allowed:
+            raise ValueError(
+                f"allowed_tokens for uid={req.uid} returned an "
+                f"empty set at position {len(out_prefix)} — "
+                f"every continuation is forbidden; return None for "
+                f"an unconstrained position instead")
+        if len(allowed) > self.mask_width:
+            raise ValueError(
+                f"allowed_tokens returned {len(allowed)} ids > "
+                f"mask_width={self.mask_width}; construct the "
+                f"engine with a larger mask_width")
+        return allowed
 
     # -- beam search (host-side bookkeeping over the CoW fork path) ---------
 
@@ -1845,6 +2285,11 @@ class ServeEngine:
             "sibling_requests": self.sibling_requests,
             "beam_forks": self.beam_forks,
             "masked_tokens": self.masked_tokens,
+            "draft_tokens": self.draft_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "rejected_tokens": self.rejected_tokens,
+            "bonus_tokens": self.bonus_tokens,
+            "draft_d2h_fetches": self.draft_d2h_fetches,
             "preempted_waiting": len(self._resume),
             "preemptable_pool": int(self.preemptable),
         }

@@ -66,6 +66,8 @@ COUNTERS = frozenset({
     "swapped_in_tokens", "swap_d2h_fetches", "recompute_tokens",
     "truncated_requests", "finished_requests", "output_tokens",
     "d2h_fetches", "sibling_requests", "beam_forks", "masked_tokens",
+    "draft_tokens", "accepted_tokens", "rejected_tokens", "bonus_tokens",
+    "draft_d2h_fetches",
 })
 GAUGES = frozenset({
     "blocks_in_use", "blocks_cached", "preempted_waiting",
@@ -326,4 +328,16 @@ def summarize(requests: Iterable[Any], snapshots: Sequence[Dict[str, Any]],
             out["padding_efficiency"] = round(
                 int(final["scheduled_tokens"])
                 / int(final["grid_tokens"]), ndigits)
+        # speculative-decoding digest (engines with spec_k > 0 only —
+        # draft_tokens stays 0 otherwise and legacy rows are unchanged):
+        # acceptance rate is the fraction of proposed draft tokens the
+        # target verified; each verify also emits one non-draft token
+        # (correction or, when the whole draft survived, the bonus)
+        if final.get("draft_tokens"):
+            for k in ("draft_tokens", "accepted_tokens",
+                      "rejected_tokens", "bonus_tokens"):
+                out[k] = int(final[k])
+            out["spec_acceptance_rate"] = round(
+                int(final["accepted_tokens"])
+                / int(final["draft_tokens"]), ndigits)
     return out

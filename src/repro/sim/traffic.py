@@ -289,15 +289,26 @@ def smoke_engine(arch: str = "granite-34b", slots: int = 2,
                  preempt: str = "auto", prefix_reuse="auto",
                  token_budget: Optional[int] = None,
                  seed: int = 0, packed: bool = False,
-                 greedy: bool = True, temperature: float = 1.0):
+                 greedy: bool = True, temperature: float = 1.0,
+                 act_mode: Optional[str] = None, spec_k: int = 0,
+                 draft_act_mode: str = "int2"):
     """A small ternarized engine for harness smokes/benches (smoke
-    config: tiny dims, real scheduler/pool/kernel paths)."""
+    config: tiny dims, real scheduler/pool/kernel paths).
+
+    ``act_mode`` overrides the TARGET activation encoding (None keeps
+    the config's default, weight-only serving); the speculative knobs
+    (``spec_k`` draft tokens per decode through the cheap
+    ``draft_act_mode`` encoding) need a quantized-activation target —
+    the draft's proposals only track a target reading the same codes
+    through a wider ADC, e.g. act_mode='int4' over draft int2."""
     import jax
 
     from repro.configs import get_config
     from repro.models import transformer as tfm
     from repro.serve.engine import ServeEngine, ternarize_model
     cfg = get_config(arch, smoke=True)
+    if act_mode is not None:
+        cfg = cfg.replace(ternary=cfg.ternary.replace(act_mode=act_mode))
     params = ternarize_model(tfm.init(cfg, jax.random.PRNGKey(seed)), cfg)
     return ServeEngine(params, cfg, batch_slots=slots, max_len=max_len,
                        chunk=chunk, block_size=block_size,
@@ -305,7 +316,8 @@ def smoke_engine(arch: str = "granite-34b", slots: int = 2,
                        prefix_reuse=prefix_reuse,
                        token_budget=token_budget, packed=packed,
                        greedy=greedy, temperature=temperature,
-                       seed=seed), cfg
+                       seed=seed, spec_k=spec_k,
+                       draft_act_mode=draft_act_mode), cfg
 
 
 def main(argv=None) -> int:

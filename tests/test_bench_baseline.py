@@ -23,6 +23,64 @@ def test_kernel_bench_analytic_baseline():
     assert not problems, "\n".join(problems)
 
 
+def test_coverage_ratchet_machinery(tmp_path):
+    """check_coverage's denominator + ratchet logic, without running
+    the measured test set (that's the CI step's job): executable_lines
+    must count nested code objects and skip blank/comment lines, and
+    compare_against_floor must gate the TOTAL only."""
+    import csv
+
+    from benchmarks.check_coverage import (compare_against_floor,
+                                           executable_lines)
+
+    src = tmp_path / "mod.py"
+    src.write_text(
+        "# comment only\n"            # 1: not executable
+        "X = 1\n"                     # 2
+        "\n"                          # 3: blank
+        "def f(a):\n"                 # 4
+        "    return [i * a\n"         # 5: comprehension -> nested co
+        "            for i in range(3)]\n"  # 6
+        "\n"
+        "class C:\n"                  # 8
+        "    def g(self):\n"          # 9
+        "        pass\n"              # 10
+    )
+    lines = executable_lines(str(src))
+    assert {2, 4, 5, 8, 9, 10} <= lines
+    assert 1 not in lines and 3 not in lines
+
+    floor = tmp_path / "floor.csv"
+    rows = [
+        {"file": "a.py", "executable_lines": 10, "covered_lines": 9,
+         "percent": 90.0},
+        {"file": "TOTAL", "executable_lines": 10, "covered_lines": 9,
+         "percent": 90.0},
+    ]
+    with open(floor, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+
+    # at the floor: pass
+    assert compare_against_floor(rows, str(floor)) == []
+    # TOTAL above the floor: pass, even if a per-file row dropped
+    up = [dict(rows[0], covered_lines=5, percent=50.0),
+          dict(rows[1], covered_lines=10, percent=100.0)]
+    assert compare_against_floor(up, str(floor)) == []
+    # TOTAL below the floor: fail
+    down = [rows[0], dict(rows[1], covered_lines=8, percent=80.0)]
+    assert any("regressed" in p
+               for p in compare_against_floor(down, str(floor)))
+    # measured file vanished: fail
+    gone = [dict(rows[1])]
+    assert any("disappeared" in p
+               for p in compare_against_floor(gone, str(floor)))
+    # missing floor file: actionable error, not a crash
+    missing = compare_against_floor(rows, str(tmp_path / "nope.csv"))
+    assert any("--update" in p for p in missing)
+
+
 def test_bitserial_rows_expose_crossover():
     """The 2-vs-4-bit rows must show the linear fused-traffic win."""
     from benchmarks.kernel_bench import bench

@@ -178,6 +178,55 @@ def test_mixed_cell_priced_from_scheduled_not_grid_tokens():
     assert row2["model_flops_per_dev"] < row["model_flops_per_dev"]
 
 
+def test_spec_draft_pricing_in_roofline_row():
+    """A spec-serve cell prices its DRAFT passes at the bit-serial
+    rate: each draft token costs bitserial_pass_ratio(draft, target)
+    of a target token's passes (the PR-2 act-bits crossover), added to
+    the compute term — the verify grid itself is already in the
+    lowered HLO (draft tokens are just extra n_new rows)."""
+    import pytest
+
+    from benchmarks.roofline import (PEAK_FLOPS, arch_params,
+                                     roofline_row)
+    from repro.kernels.ops import bitserial_pass_ratio
+
+    assert bitserial_pass_ratio(2, 4) == 0.5
+    assert bitserial_pass_ratio(3, 4) == 0.75
+    assert bitserial_pass_ratio(4, 4) == 1.0
+    with pytest.raises(ValueError):
+        bitserial_pass_ratio(0, 4)
+    with pytest.raises(ValueError):
+        bitserial_pass_ratio(2, 0)
+
+    cell = {
+        "status": "ok", "arch": "granite-34b", "shape": "mixed_32k",
+        "mesh": "16x16", "variant": "spec", "n_devices": 256,
+        "hlo": {"dot_flops": 1e12, "total_wire_bytes": 1e6},
+        "memory": {"argument_size_in_bytes": 10 ** 9,
+                   "output_size_in_bytes": 10 ** 8},
+        "scheduled_tokens": 191,
+        "draft_tokens": 116, "accepted_tokens": 91,
+        "draft_bits": 2, "target_bits": 4,
+    }
+    row = roofline_row(cell)
+    act = arch_params("granite-34b")["active"]
+    assert row["draft_cost_ratio"] == 0.5
+    want = 2.0 * act * 116 * 0.5 / 256
+    assert abs(row["draft_flops_per_dev"] - want) / want < 1e-9
+    assert abs(row["t_compute_spec_s"]
+               - (row["t_compute_s"] + want / PEAK_FLOPS)) < 1e-12
+    assert abs(row["spec_acceptance_rate"] - 91 / 116) < 1e-12
+    # draft_bits/target_bits default to the benched int2/int4 pair
+    row2 = roofline_row({k: v for k, v in cell.items()
+                         if k not in ("draft_bits", "target_bits")})
+    assert row2["draft_cost_ratio"] == 0.5
+    # non-spec cells carry none of the speculation columns
+    row3 = roofline_row({k: v for k, v in cell.items()
+                         if not k.startswith(("draft", "accepted"))})
+    assert "draft_cost_ratio" not in row3
+    assert "t_compute_spec_s" not in row3
+
+
 def test_weight_stream_summary_math():
     from repro.launch.hlo_analysis import weight_stream_summary
     rep = {"weight_bytes_resident": 1000,

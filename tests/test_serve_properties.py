@@ -47,6 +47,14 @@ A third profile replays seeded BURSTY traces from sim/traffic.py
 time with the same per-step checks — the harness's arrival schedule
 composed with invariants 1-6.
 
+A SPECULATIVE profile (ISSUE-10) replays the request streams with
+spec-decode on vs off over both pool sizes, and the bursty trace
+adds spec replays of its own: greedy outputs must be token-identical
+(the lossless contract), the accounting identity extends with
+``draft_tokens == accepted + rejected``, the pool invariants hold
+after every rejected-suffix rollback, and padded == packed digests
+carry over to the multi-token verify grid.
+
 Token accounting under preemption closes against the engine's
 ``admitted_prompt_tokens`` (re-admissions included):
 ``scheduled_prefill + prefix_hit + swapped_in == admitted``.
@@ -127,16 +135,22 @@ def _step_checked(eng):
     eng.step()
     eng.validate()          # invariants 1, 2, 5 (pool consistency)
     for req, n0 in decoding:
-        assert len(req.out_tokens) == n0 + 1, \
-            f"decode stalled: uid={req.uid}"          # invariant 3
+        # invariant 3 — decodes never stall.  A speculative engine may
+        # emit up to 1 + spec_k tokens per step (accepted drafts +
+        # the correction/bonus), never zero
+        assert n0 + 1 <= len(req.out_tokens) <= n0 + 1 + eng.spec_k, \
+            f"decode stalled: uid={req.uid}"
 
 
-def _check_lifecycle(reqs):
-    """Telemetry stamps: strictly increasing token_steps, one stamp per
-    emitted token, first token no earlier than submission."""
+def _check_lifecycle(reqs, spec=False):
+    """Telemetry stamps: strictly increasing token_steps (a spec
+    engine legitimately stamps several emissions in one verify step —
+    non-decreasing there), one stamp per emitted token, first token
+    no earlier than submission."""
     for r in reqs:
         assert len(r.token_steps) == len(r.out_tokens), r.uid
-        assert all(a < b for a, b in
+        ok = (lambda a, b: a <= b) if spec else (lambda a, b: a < b)
+        assert all(ok(a, b) for a, b in
                    zip(r.token_steps, r.token_steps[1:])), r.uid
         if r.token_steps:
             assert r.submit_step >= 0, r.uid
@@ -187,7 +201,7 @@ def _run_stream(state, eng, stream, seed, greedy):
     assert all(r.done for r in reqs)
     assert st_["preempted_waiting"] == 0
 
-    _check_lifecycle(reqs)
+    _check_lifecycle(reqs, spec=eng.spec_k > 0)
 
     # invariant 4 (and 8 on the swap profile): greedy parity with the
     # unpaged reference — bit-identical recompute/swap-restore included
@@ -264,8 +278,8 @@ def test_bursty_trace_replay_invariants(seed, greedy):
                          max_new=(1, 3), vocab_size=cfg.vocab_size)
     trace = generate_trace(tcfg)
 
-    def replay(packed):
-        eng = _fresh_engine(state, greedy, packed=packed)
+    def replay(packed, spec_k=0):
+        eng = _fresh_engine(state, greedy, packed=packed, spec_k=spec_k)
         reqs = [Request(uid=a.uid, prompt=a.prompt.copy(),
                         max_new_tokens=a.max_new_tokens) for a in trace]
         pending = list(zip(trace, reqs))[::-1]
@@ -283,8 +297,10 @@ def test_bursty_trace_replay_invariants(seed, greedy):
         assert st_["scheduled_prefill_tokens"] \
             + st_["prefix_hit_tokens"] + st_["swapped_in_tokens"] \
             == st_["admitted_prompt_tokens"]
+        assert st_["draft_tokens"] == \
+            st_["accepted_tokens"] + st_["rejected_tokens"]
         assert all(r.done for r in reqs)                 # invariant 7
-        _check_lifecycle(reqs)
+        _check_lifecycle(reqs, spec=spec_k > 0)
         if greedy:
             for r in reqs:
                 assert r.out_tokens == _reference(
@@ -298,6 +314,13 @@ def test_bursty_trace_replay_invariants(seed, greedy):
         preqs = replay(packed=True)
         assert [r.out_tokens for r in preqs] \
             == [r.out_tokens for r in reqs]
+        # ISSUE-10: the speculative engines replay the same trace
+        # token-for-token too (lossless greedy contract under the
+        # bursty arrival schedule), padded and packed
+        for packed in (False, True):
+            sreqs = replay(packed=packed, spec_k=2)
+            assert [r.out_tokens for r in sreqs] \
+                == [r.out_tokens for r in reqs], packed
 
 
 # sampled-stream profile (ISSUE-9): seeded NON-greedy streams with
@@ -311,6 +334,54 @@ def test_bursty_trace_replay_invariants(seed, greedy):
 _SAMPLED_REQUEST = st.tuples(st.booleans(), st.integers(1, MAX_LEN - 2),
                              st.integers(1, 3), st.integers(0, 2),
                              st.sampled_from((1, 2, 4)))
+
+
+# speculative profile (ISSUE-10): the same request streams replayed
+# with spec-decode on vs off, over the default pool AND the small
+# (preempting) pool.  The spec engine drafts through the cheap int2
+# encoding against the config's own target — on random smoke weights
+# the two mostly DISAGREE, so these streams hammer the rejection/
+# rollback path while the lossless contract requires greedy outputs
+# token-identical to the non-spec run (and, via _run_stream's
+# invariant 4, to the unpaged reference).  validate() after every
+# step holds the pool invariants across rollbacks; the accounting
+# identity extends with the draft counters; padded == packed digests.
+@settings(max_examples=max(1, MAX_EXAMPLES // 5), derandomize=True,
+          deadline=None)
+@given(st.lists(_REQUEST, min_size=1, max_size=3),
+       st.integers(0, 2 ** 20), st.booleans(),
+       st.sampled_from(["default", "smallpool"]))
+def test_speculative_stream_profiles(stream, seed, greedy, profile):
+    state = _setup()
+    kw = {} if profile == "default" else dict(num_blocks=6,
+                                              preempt="auto")
+    base = _run_stream(state, _fresh_engine(state, greedy, **kw),
+                       stream, seed, greedy)
+    eng = _fresh_engine(state, greedy, spec_k=2, **kw)
+    reqs = _run_stream(state, eng, stream, seed, greedy)
+    st_ = eng.stats()
+    # the extended accounting identity: every draft is accepted or
+    # rejected ...
+    assert st_["draft_tokens"] == \
+        st_["accepted_tokens"] + st_["rejected_tokens"]
+    if profile == "default":
+        # ... and (preemption-free profile) every scheduled decode
+        # token is emitted or rejected, plus one first token per
+        # completed prefill
+        assert st_["preemptions"] == 0
+        decode_sched = (st_["scheduled_tokens"]
+                        - st_["scheduled_prefill_tokens"])
+        assert st_["output_tokens"] + st_["rejected_tokens"] \
+            == decode_sched + len(reqs)
+    if greedy:
+        # lossless contract: spec-on == spec-off token-for-token
+        assert [r.out_tokens for r in reqs] \
+            == [r.out_tokens for r in base]
+        # padded == packed digests with speculation on
+        peng = _fresh_engine(state, True, packed=True, spec_k=2, **kw)
+        preqs = _run_stream(state, peng, stream, seed, True)
+        assert [r.out_tokens for r in preqs] \
+            == [r.out_tokens for r in reqs]
 
 
 @settings(max_examples=max(1, MAX_EXAMPLES // 5), derandomize=True,

@@ -1,0 +1,406 @@
+"""Self-speculative decoding over the paged pool (ISSUE-10 tentpole).
+
+Acceptance contract:
+
+  * lossless greedy: a spec engine (cheap-encoding draft proposing
+    ``spec_k`` tokens per decode slot, verified by the target in ONE
+    mixed step) emits token-for-token what the non-spec engine emits,
+    on the padded and token-packed layouts, in no more steps;
+  * exact sampled streams: the bonus/final emission of every verify
+    row draws from the RAW ``derive_sample_key(uid, sample_index,
+    token_index)`` stream, so a spec engine that never drafts
+    (``token_budget=1`` starves the leftover-budget grant) is
+    bit-identical to the non-spec sampled engine, and drafting runs
+    stay deterministic across replays;
+  * rollback: rejected suffixes retreat ``cache_len``, release the
+    speculative tail blocks (``validate()`` holds after every step —
+    a leaked block breaks its table-density invariant), and never
+    disturb committed KV bytes (byte-compared against a non-spec
+    engine via ``fetch_kv_blocks``, the PR-9 BuggyShare discipline);
+  * composition: spec × small-pool preemption keeps greedy parity
+    (victims resume exactly), spec × ``Request(n=...)`` sibling
+    groups stay deterministic and drain clean, guided-decoding masks
+    constrain the DRAFT passes too (a masked token can never be
+    proposed, so verification can never accept one) with padded ==
+    packed parity, and invalid compositions (beam + spec, recurrent
+    stacks, a draft wider than its target) raise at submit/init.
+
+Coverage-gap companions from the same satellite pass: guided decoding
+on the packed engine (PR 9 only exercised masks padded) and beam
+search under a small pool (preemption/resume of a live beam group).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.serve.engine import (Request, ServeEngine, fetch_kv_blocks,
+                                ternarize_model)
+
+MAX_LEN, BS, CHUNK = 32, 8, 8
+
+_STATE = {}
+
+
+def _params():
+    if not _STATE:
+        cfg = get_config("granite-34b", smoke=True)
+        _STATE["cfg"] = cfg
+        _STATE["params"] = ternarize_model(
+            tfm.init(cfg, jax.random.PRNGKey(0)), cfg)
+    return _STATE["params"], _STATE["cfg"]
+
+
+def _engine(slots=2, **kw):
+    params, cfg = _params()
+    kw.setdefault("greedy", True)
+    kw.setdefault("seed", 7)
+    return ServeEngine(params, cfg, batch_slots=slots, max_len=MAX_LEN,
+                       chunk=CHUNK, block_size=BS, **kw)
+
+
+def _drain(eng, max_iters=400):
+    it = 0
+    while eng.queue or eng._active_slots():
+        eng.step()
+        eng.validate()
+        it += 1
+        assert it < max_iters, "engine stopped making progress"
+    return {r.uid: r for r in eng.finished}
+
+
+def _prompt(rng, n):
+    _, cfg = _params()
+    return rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+
+
+def _run(reqs_fn, **kw):
+    eng = _engine(**kw)
+    reqs = reqs_fn()
+    for r in reqs:
+        eng.submit(r)
+    _drain(eng)
+    return eng, reqs
+
+
+# -- the lossless contract -------------------------------------------------
+
+def test_lossless_greedy_padded_and_packed():
+    """Greedy spec == greedy non-spec token-for-token, padded AND
+    packed, in no more steps.  The smoke config serves weight-only
+    (act 'none') while the draft reads the same codes through int2 —
+    the two disagree on most positions (random weights), so this run
+    exercises heavy rejection + rollback, not just the accept path."""
+    rng = np.random.default_rng(40)
+    prompts = [_prompt(rng, 5), _prompt(rng, 9)]
+
+    def reqs():
+        return [Request(uid=u, prompt=p.copy(), max_new_tokens=10)
+                for u, p in enumerate(prompts)]
+
+    base_eng, base = _run(reqs)
+    for packed in (False, True):
+        eng, got = _run(reqs, spec_k=3, packed=packed)
+        assert [list(r.out_tokens) for r in got] \
+            == [list(r.out_tokens) for r in base], packed
+        st = eng.stats()
+        assert st["draft_tokens"] == \
+            st["accepted_tokens"] + st["rejected_tokens"]
+        assert st["draft_tokens"] > 0
+        assert st["steps"] <= base_eng.stats()["steps"]
+        assert st["blocks_in_use"] == 0
+
+
+def test_spec_counters_and_emission_identity():
+    """The extended token-accounting identity on a drained no-
+    preemption run: every scheduled decode token is either emitted or
+    rejected, plus exactly one first token per completed prefill."""
+    rng = np.random.default_rng(41)
+    reqs = lambda: [Request(uid=u, prompt=_prompt(rng, 6),
+                            max_new_tokens=8) for u in range(3)]
+    eng, got = _run(reqs, spec_k=2)
+    st = eng.stats()
+    decode_sched = st["scheduled_tokens"] - st["scheduled_prefill_tokens"]
+    assert st["output_tokens"] + st["rejected_tokens"] \
+        == decode_sched + len(got)
+    assert st["output_tokens"] == sum(len(r.out_tokens) for r in got)
+    # one accounted draft fetch per draft pass, never more
+    assert st["draft_d2h_fetches"] > 0
+
+
+# -- exact sampled key streams ---------------------------------------------
+
+def test_sampled_k0_bit_identical_to_nonspec():
+    """token_budget=1 leaves no leftover for draft grants: the spec
+    engine must replay the non-spec sampled engine bit-for-bit (the
+    bonus draw uses the RAW derive_sample_key stream, not a fold)."""
+    rng = np.random.default_rng(42)
+    prompts = [_prompt(rng, 7), _prompt(rng, 11)]
+
+    def reqs():
+        return [Request(uid=u, prompt=p.copy(), max_new_tokens=6)
+                for u, p in enumerate(prompts)]
+
+    base_eng, base = _run(reqs, greedy=False, token_budget=1)
+    eng, got = _run(reqs, greedy=False, token_budget=1, spec_k=2)
+    assert eng.stats()["draft_tokens"] == 0
+    assert [list(r.out_tokens) for r in got] \
+        == [list(r.out_tokens) for r in base]
+
+
+def test_sampled_spec_replay_is_deterministic():
+    """Drafting sampled runs are pure functions of the request stream:
+    two replays accept/reject/emit identically."""
+    rng = np.random.default_rng(43)
+    prompts = [_prompt(rng, 6), _prompt(rng, 10)]
+
+    def reqs():
+        return [Request(uid=u, prompt=p.copy(), max_new_tokens=8)
+                for u, p in enumerate(prompts)]
+
+    runs = []
+    for _ in range(2):
+        eng, got = _run(reqs, greedy=False, spec_k=2)
+        st = eng.stats()
+        assert st["draft_tokens"] > 0
+        runs.append(([list(r.out_tokens) for r in got],
+                     st["draft_tokens"], st["accepted_tokens"],
+                     st["rejected_tokens"], st["bonus_tokens"]))
+    assert runs[0] == runs[1]
+
+
+# -- rollback over the paged pool ------------------------------------------
+
+def test_rejection_rollback_preserves_committed_kv_bytes():
+    """Drive a spec engine (heavy rejection: weight-only target vs
+    int2 draft) and a non-spec engine to the SAME emitted length
+    mid-flight, then byte-compare every committed KV position via
+    fetch_kv_blocks: rollback abandons the speculative suffix without
+    disturbing a single committed byte.  The release half of the
+    contract is held by validate() after every step — a block kept
+    past the accepted coverage breaks its table-density invariant."""
+    rng = np.random.default_rng(44)
+    p = _prompt(rng, 6)
+    want_out = 8          # pause mid-decode, well before max_new
+
+    def drive(spec_k):
+        eng = _engine(slots=1, spec_k=spec_k)
+        req = Request(uid=0, prompt=p.copy(), max_new_tokens=20)
+        eng.submit(req)
+        it = 0
+        while len(req.out_tokens) < want_out:
+            eng.step()
+            eng.validate()
+            it += 1
+            assert it < 100
+        assert not req.done
+        return eng, req
+
+    spec_eng, spec_req = drive(spec_k=3)
+    base_eng, base_req = drive(spec_k=0)
+    assert spec_eng.stats()["rejected_tokens"] > 0
+    # align on emitted length (spec may overshoot want_out by the
+    # accepted run) — truncate to the common committed coverage
+    n = min(len(spec_req.out_tokens), len(base_req.out_tokens))
+    assert spec_req.out_tokens[:n] == base_req.out_tokens[:n]
+    cl = len(p) + n - 1   # committed positions (last token pending)
+    nb = -(-cl // BS)
+    spec_blocks = fetch_kv_blocks(
+        spec_eng.caches, np.asarray(spec_eng.block_tables[0, :nb]))
+    base_blocks = fetch_kv_blocks(
+        base_eng.caches, np.asarray(base_eng.block_tables[0, :nb]))
+    leaves = list(zip(jax.tree_util.tree_leaves(spec_blocks),
+                      jax.tree_util.tree_leaves(base_blocks)))
+    assert leaves
+    for a, b in leaves:
+        a, b = np.asarray(a), np.asarray(b)
+        # (periods, nb, block_size, ...) — compare positions < cl only
+        # (the tail block's suffix holds abandoned speculative writes)
+        for g in range(cl):
+            assert (a[:, g // BS, g % BS] == b[:, g // BS, g % BS]) \
+                .all(), f"committed KV byte drift at position {g}"
+
+
+# -- composition: preemption, siblings, guided masks -----------------------
+
+def test_spec_small_pool_preemption_parity():
+    """Spec × preemption: a pool below the full-batch floor preempts
+    mid-rollout; victims resume exactly and greedy parity holds."""
+    rng = np.random.default_rng(45)
+    prompts = [_prompt(rng, 20), _prompt(rng, 22), _prompt(rng, 21)]
+
+    def reqs():
+        return [Request(uid=u, prompt=p.copy(), max_new_tokens=8)
+                for u, p in enumerate(prompts)]
+
+    base_eng, base = _run(reqs, num_blocks=6, preempt="auto")
+    eng, got = _run(reqs, num_blocks=6, preempt="auto", spec_k=2)
+    assert eng.stats()["preemptions"] > 0
+    assert [list(r.out_tokens) for r in got] \
+        == [list(r.out_tokens) for r in base]
+    st = eng.stats()
+    assert st["blocks_in_use"] == 0
+    assert st["scheduled_prefill_tokens"] + st["prefix_hit_tokens"] \
+        + st["swapped_in_tokens"] == st["admitted_prompt_tokens"]
+
+
+def test_spec_nsample_siblings():
+    """Spec × Request(n=...): sibling groups share the prompt, draft
+    independently on their own key streams, drain clean, and replay
+    deterministically."""
+    rng = np.random.default_rng(46)
+    p = _prompt(rng, BS + 3)
+
+    def run():
+        eng = _engine(slots=4, greedy=False, spec_k=2)
+        parent = Request(uid=9, prompt=p.copy(), max_new_tokens=6, n=4)
+        eng.submit(parent)
+        _drain(eng)
+        return eng, parent
+
+    eng, parent = run()
+    kids = parent.siblings
+    assert len(kids) == 4 and all(k.done for k in kids)
+    assert len({tuple(k.out_tokens) for k in kids}) > 1
+    st = eng.stats()
+    assert st["sibling_requests"] == 3
+    assert st["draft_tokens"] > 0
+    assert st["blocks_in_use"] == 0
+    eng2, parent2 = run()
+    assert [list(k.out_tokens) for k in parent2.siblings] \
+        == [list(k.out_tokens) for k in kids]
+    # and k=0 spec siblings replay the non-spec group bit-for-bit
+    eng3 = _engine(slots=4, greedy=False, spec_k=2, token_budget=1)
+    p3 = Request(uid=9, prompt=p.copy(), max_new_tokens=6, n=4)
+    eng3.submit(p3)
+    _drain(eng3)
+    eng4 = _engine(slots=4, greedy=False)
+    p4 = Request(uid=9, prompt=p.copy(), max_new_tokens=6, n=4)
+    eng4.submit(p4)
+    _drain(eng4)
+    assert eng3.stats()["draft_tokens"] == 0
+    assert [list(k.out_tokens) for k in p3.siblings] \
+        == [list(k.out_tokens) for k in p4.siblings]
+
+
+def test_guided_masks_constrain_draft_and_verify_packed_parity():
+    """Satellite: guided decoding × spec × packed.  The mask row for
+    emission j is applied to draft pass j-1's proposal AND to the
+    verify row, so no emitted token can leave the allowed set — on
+    the padded and packed engines alike, with greedy parity across
+    spec on/off and both layouts."""
+    rng = np.random.default_rng(47)
+    p = _prompt(rng, 9)
+    allowed = [3, 7, 11]
+
+    def run(spec_k, packed):
+        eng = _engine(slots=2, spec_k=spec_k, packed=packed)
+        req = Request(uid=6, prompt=p.copy(), max_new_tokens=6,
+                      allowed_tokens=lambda out: allowed)
+        eng.submit(req)
+        _drain(eng)
+        assert all(t in allowed for t in req.out_tokens), req.out_tokens
+        assert eng.stats()["masked_tokens"] == 6
+        return eng, list(req.out_tokens)
+
+    _, base = run(spec_k=0, packed=False)
+    for packed in (False, True):
+        eng, got = run(spec_k=2, packed=packed)
+        assert got == base, packed
+        assert eng.stats()["draft_tokens"] > 0
+
+
+def test_guided_masks_packed_nonspec_parity():
+    """Coverage gap (PR 9 exercised masks padded-only): the packed
+    engine applies the same compact mask buffer, bit-identically,
+    for sampled guided requests too."""
+    rng = np.random.default_rng(48)
+    p = _prompt(rng, 9)
+    allowed = [2, 5, 13, 17]
+    outs = []
+    for packed in (False, True):
+        eng = _engine(slots=2, greedy=False, packed=packed)
+        req = Request(uid=4, prompt=p.copy(), max_new_tokens=7,
+                      allowed_tokens=lambda out: allowed)
+        eng.submit(req)
+        _drain(eng)
+        assert all(t in allowed for t in req.out_tokens)
+        assert eng.stats()["masked_tokens"] == 7
+        outs.append(list(req.out_tokens))
+    assert outs[0] == outs[1]
+
+
+def test_beam_groups_survive_small_pool_preemption():
+    """Coverage gap: beam search under a pool below the full-batch
+    floor.  The group's hypotheses preempt and resume mid-search, and
+    the surviving beams (tokens AND ranking by cum_logprob) are
+    identical to an ample-pool run of the same request."""
+    rng = np.random.default_rng(49)
+    p = _prompt(rng, 20)
+
+    def run(**kw):
+        eng = _engine(slots=2, greedy=False, **kw)
+        parent = Request(uid=8, prompt=p.copy(), max_new_tokens=6,
+                         n=2, sample_mode="beam")
+        eng.submit(parent)
+        _drain(eng)
+        kids = parent.siblings
+        assert all(k.done for k in kids)
+        assert eng.stats()["blocks_in_use"] == 0
+        return eng, [(list(k.out_tokens), k.cum_logprob) for k in kids]
+
+    ample_eng, ample = run()
+    # 5 blocks: the group's peak demand (shared prompt blocks + two
+    # diverged tails) overflows by one, so one hypothesis preempts
+    # mid-search and resumes (a fragmented group degrades to per-slot
+    # self-extension until every live sibling is present again)
+    small_eng, small = run(num_blocks=5, preempt="auto")
+    assert small_eng.stats()["preemptions"] > 0, \
+        "profile did not preempt — shrink the pool"
+    assert small == ample
+    # rankings, not just sets: the group's ordering is part of the API
+    assert [t for t, _ in small] == [t for t, _ in ample]
+    # and the preempt/resume replay is deterministic
+    assert run(num_blocks=5, preempt="auto")[1] == small
+
+
+# -- gates ------------------------------------------------------------------
+
+def test_beam_plus_spec_rejected_at_submit():
+    rng = np.random.default_rng(50)
+    eng = _engine(slots=2, greedy=False, spec_k=2)
+    with pytest.raises(ValueError, match="does not compose"):
+        eng.submit(Request(uid=1, prompt=_prompt(rng, 6),
+                           max_new_tokens=2, n=2, sample_mode="beam"))
+
+
+def test_spec_requires_pure_attention_stack():
+    cfg = get_config("mamba2-1.3b", smoke=True)
+    params = ternarize_model(tfm.init(cfg, jax.random.PRNGKey(0)), cfg)
+    with pytest.raises(ValueError, match="pure-attention"):
+        ServeEngine(params, cfg, batch_slots=2, max_len=MAX_LEN,
+                    chunk=CHUNK, block_size=BS, spec_k=2)
+
+
+def test_draft_policy_validation():
+    from repro.nn.linear import FP32, TernaryPolicy
+    pol = TernaryPolicy(act_mode="int4")
+    assert pol.draft("int2").act_bits == 2
+    assert pol.draft("int4").act_bits == 4        # equal width allowed
+    assert pol.draft("ternary").act_mode == "ternary"
+    with pytest.raises(ValueError, match="wider"):
+        pol.draft("int5")
+    with pytest.raises(ValueError, match="weight-only"):
+        pol.draft("none")
+    # disabled (FP32) policies draft as themselves
+    assert FP32.draft("int2") is FP32
+
+
+def test_draft_wider_than_target_rejected_at_init():
+    params, cfg = _params()
+    int4 = cfg.replace(ternary=cfg.ternary.replace(act_mode="int4"))
+    with pytest.raises(ValueError, match="wider"):
+        ServeEngine(params, int4, batch_slots=2, max_len=MAX_LEN,
+                    chunk=CHUNK, block_size=BS, spec_k=2,
+                    draft_act_mode="int5")
